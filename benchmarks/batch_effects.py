@@ -1,0 +1,38 @@
+"""Fig. 17 / Appendix E.1 — batch-size effects per stage (Encode batches
+almost freely, Diffuse only at low resolution, Decode not at all)."""
+from __future__ import annotations
+
+from typing import List
+
+import repro.configs as C
+from benchmarks.common import Row
+from repro.core.profiler import HBM_BW, MFU, PEAK_FLOPS, Profiler
+from repro.core.request import Request
+
+
+def _batched_time(prof: Profiler, req: Request, stage: str, bs: int) -> float:
+    """Latency of a batch of ``bs`` identical requests on one unit.
+    Compute-bound stages amortize; memory-bound ones scale linearly."""
+    flops = prof.stage_flops(req, stage) * bs
+    hbm = (prof.info[stage].bytes if stage in prof.info else 0)
+    hbm = prof.stage_hbm_bytes(req, stage) + (bs - 1) * prof.stage_act_bytes(req, stage) * 3
+    k = prof.k_min
+    return max(flops / (k * PEAK_FLOPS * MFU), hbm / (k * HBM_BW))
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    prof = Profiler(C.get("sd3"))
+    for stage, res in (("E", 512), ("D", 256), ("D", 1024), ("C", 1024)):
+        req = Request("sd3", res)
+        t1 = _batched_time(prof, req, stage, 1)
+        opt_bs = 1
+        for bs in (2, 4, 8, 16, 32):
+            tb = _batched_time(prof, req, stage, bs)
+            if tb <= t1 * 1.2:   # paper E.1: batch latency <= 1.2x single
+                opt_bs = bs
+        rows.append((f"batch_effects/sd3/{stage}@{res}/opt_batch", opt_bs,
+                     {"t1_ms": round(t1 * 1e3, 2),
+                      "t_at_opt_ms": round(_batched_time(prof, req, stage,
+                                                         opt_bs) * 1e3, 2)}))
+    return rows

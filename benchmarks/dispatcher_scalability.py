@@ -1,0 +1,44 @@
+"""Table 4 — dispatcher ILP solve time per tick, 128 -> 4096 GPUs with a
+fixed request/GPU ratio."""
+from __future__ import annotations
+
+import random
+import time
+from typing import List
+
+import repro.configs as C
+from benchmarks.common import Row
+from repro.core.dispatcher import Dispatcher
+from repro.core.orchestrator import Orchestrator
+from repro.core.profiler import Profiler
+from repro.core.request import Request
+from repro.core.workloads import MIXES
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    prof = Profiler(C.get("flux"))
+    rng = random.Random(0)
+    classes = [cls for mix in MIXES["flux"].values() for cls, _ in mix]
+    sizes = (128, 512, 4096) if quick else (128, 256, 512, 1024, 4096)
+    for chips in sizes:
+        orch = Orchestrator(prof, num_chips=chips)
+        n_req = max(8, 20 * chips // 128)
+        reqs = []
+        for _ in range(n_req):
+            res, sec = rng.choice(classes)
+            r = Request("flux", res, float(sec))
+            r.deadline = 2.5 * prof.pipeline_time(r)
+            reqs.append(r)
+        plan = orch.generate(reqs)
+        disp = Dispatcher(prof, max_batch=n_req)
+        idle = set(range(plan.num_units))
+        free = {g: 0.0 for g in idle}
+        t0 = time.perf_counter()
+        decisions = disp.dispatch(reqs, plan, idle, free, 0.0)
+        dt = (time.perf_counter() - t0) * 1e3
+        rows.append((f"dispatcher_scalability/{chips}gpus/solve_ms",
+                     round(dt, 1),
+                     {"pending": n_req, "dispatched": len(decisions),
+                      "ilp": disp.last_solve_stats}))
+    return rows

@@ -1,0 +1,38 @@
+"""Fig. 10 — end-to-end SLO attainment / mean / P95 across 4 pipelines x
+workloads x {TridentServe, B1..B6}."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, duration
+from repro.core.baselines import BASELINES
+from repro.core.simulator import run_sim
+from repro.core.trident import TridentScheduler
+
+PIPES_QUICK = ("flux", "hunyuanvideo")
+PIPES_FULL = ("sd3", "flux", "cogvideox", "hunyuanvideo")
+WORKLOADS_QUICK = ("medium", "dynamic")
+WORKLOADS_FULL = ("light", "medium", "heavy", "dynamic", "proprietary")
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    pipes = PIPES_QUICK if quick else PIPES_FULL
+    workloads = WORKLOADS_QUICK if quick else WORKLOADS_FULL
+    dur = duration(quick)
+    scheds = {"trident": TridentScheduler, **BASELINES}
+    for pid in pipes:
+        for wl in workloads:
+            for name, cls in scheds.items():
+                res = run_sim(pid, cls, wl, dur)
+                rows.append((
+                    f"e2e/{pid}/{wl}/{name}/slo_pct",
+                    round(res.slo_attainment * 100, 2),
+                    {"mean_s": (round(res.mean_latency, 3)
+                                if not res.oom else "OOM"),
+                     "p95_s": (round(res.p95_latency, 3)
+                               if not res.oom else "OOM"),
+                     "oom": res.oom,
+                     "finished": res.n_finished,
+                     "requests": res.n_requests}))
+    return rows

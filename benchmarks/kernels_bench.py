@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks: oracle-path wall time on CPU (the TPU kernels
+are validated in interpret mode; wall-clock here tracks the jnp reference
+implementations the CPU examples execute)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+
+    b, l, h, d = 1, 512, 4, 64
+    q = jax.random.normal(ks[0], (b, l, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, l, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, l, h, d), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True,
+                                                     use_kernel=False))
+    rows.append(("kernels/attention_ref_512/us_per_call",
+                 round(_time(fa, q, k, v), 1), {"shape": f"{b}x{l}x{h}x{d}"}))
+
+    q2 = jax.random.normal(ks[0], (1, 4, 1024, 16))
+    k2 = jax.random.normal(ks[1], (1, 4, 1024, 16))
+    v2 = jax.random.normal(ks[2], (1, 4, 1024, 16))
+    w2 = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (1, 4, 1024, 16)) * 0.3))
+    scan = jax.jit(lambda q, k, v, w: ops.linear_scan(q, k, v, w))
+    rows.append(("kernels/linear_scan_ref_1024/us_per_call",
+                 round(_time(scan, q2, k2, v2, w2), 1),
+                 {"shape": "1x4x1024x16"}))
+
+    x = jax.random.normal(ks[0], (4, 1024, 256), jnp.float32)
+    s = jax.random.normal(ks[1], (4, 256)) * 0.1
+    t = jax.random.normal(ks[2], (4, 256)) * 0.1
+    al = jax.jit(lambda x, s, t: ops.adaln_rmsnorm(x, s, t))
+    rows.append(("kernels/adaln_rmsnorm_ref/us_per_call",
+                 round(_time(al, x, s, t), 1), {"shape": "4x1024x256"}))
+    return rows

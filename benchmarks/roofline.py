@@ -1,0 +1,44 @@
+"""§Roofline — three-term roofline table from the dry-run artifacts
+(results/dryrun_*.jsonl, produced by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    for fname in ("dryrun_single_pod.jsonl", "dryrun_multi_pod.jsonl"):
+        path = os.path.join(RESULTS, fname)
+        if not os.path.exists(path):
+            rows.append((f"roofline/{fname}/missing", 0.0,
+                         {"hint": "run python -m repro.launch.dryrun --all"}))
+            continue
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+                if r["status"] == "skipped":
+                    rows.append((f"{tag}/skipped", 0.0,
+                                 {"reason": r["reason"][:60]}))
+                    continue
+                if r["status"] != "ok":
+                    rows.append((f"{tag}/error", -1.0,
+                                 {"error": r.get("error", "")[:80]}))
+                    continue
+                dom = r["bottleneck"]
+                t_dom = r[f"t_{dom}_s"]
+                rows.append((f"{tag}/t_{dom}_ms", round(t_dom * 1e3, 3),
+                             {"compute_ms": round(r["t_compute_s"] * 1e3, 3),
+                              "memory_ms": round(r["t_memory_s"] * 1e3, 3),
+                              "collective_ms": round(r["t_collective_s"] * 1e3, 3),
+                              "bottleneck": dom,
+                              "useful_flops_ratio": round(r["useful_ratio"], 4),
+                              "peak_mem_GiB": round(
+                                  r.get("peak_mem_per_device", 0) / 2 ** 30, 2)}))
+    return rows

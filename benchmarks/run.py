@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows.  Default is quick mode
+(shorter traces, fewer combos); ``--full`` reproduces the paper-scale
+sweeps; ``--only <name>`` runs a single module.
+
+  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run --full --only e2e
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+from benchmarks.common import emit
+
+MODULES = [
+    "parallelism_scaling",     # Fig. 3 / Appendix A
+    "replica_demand",          # Fig. 4
+    "e2e",                     # Fig. 10
+    "placement_switch",        # Fig. 11
+    "vr_distribution",         # Fig. 12
+    "adjust_on_dispatch",      # Fig. 13
+    "ablation",                # Fig. 14
+    "slo_sensitivity",         # Fig. 15
+    "dispatcher_scalability",  # Table 4
+    "batch_effects",           # Fig. 17 / Appendix E.1
+    "kernels_bench",           # kernel microbenchmarks
+    "roofline",                # §Roofline table from dry-run artifacts
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    ok = True
+    for name in mods:
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run(quick=not args.full)
+            emit(rows)
+        except Exception as e:  # keep the harness going; report at the end
+            ok = False
+            print(f"{name}/ERROR,{-1},{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} took {time.perf_counter() - t0:.1f}s", flush=True)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Fig. 15 — SLO scaling: attainment as the SLO scale factor alpha varies."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, duration
+from repro.core.baselines import BASELINES
+from repro.core.simulator import run_sim
+from repro.core.trident import TridentScheduler
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    alphas = (1.5, 2.5, 5.0) if quick else (1.0, 1.5, 2.5, 5.0, 10.0)
+    scheds = {"trident": TridentScheduler, "B6": BASELINES["B6"],
+              "B5": BASELINES["B5"]}
+    for alpha in alphas:
+        for name, cls in scheds.items():
+            res = run_sim("flux", cls, "dynamic", duration(quick),
+                          slo_scale=alpha)
+            rows.append((f"slo_sensitivity/flux/alpha{alpha}/{name}/slo_pct",
+                         round(res.slo_attainment * 100, 2),
+                         {"mean_s": round(res.mean_latency, 3)}))
+    return rows

@@ -1,0 +1,49 @@
+"""Render markdown tables for EXPERIMENTS.md from results/*.jsonl."""
+import json, sys
+
+def dryrun_table(path, mesh_label):
+    rows = []
+    for l in open(path):
+        r = json.loads(l)
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped: {r['reason'][:58]}… | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | {r.get('error','')[:60]} | | |")
+            continue
+        dom = r["bottleneck"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f} | "
+            f"{r['t_memory_s']*1e3:.1f} | {r['t_collective_s']*1e3:.2f} | "
+            f"**{dom}** | {r['useful_ratio']:.3f} | "
+            f"{r.get('peak_mem_per_device',0)/2**30:.1f} |")
+    hdr = (f"\n### {mesh_label}\n\n"
+           "| arch | shape | compute (ms) | memory (ms) | collective (ms) | bottleneck | MODEL/HLO flops | peak mem (GiB/chip) |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows) + "\n"
+
+def e2e_table(path):
+    recs = [json.loads(l) for l in open(path)]
+    by = {}
+    for r in recs:
+        by.setdefault((r["pipeline"], r["workload"]), {})[r["scheduler"]] = r
+    out = ["| pipeline | workload | metric | Trident | B1 | B2 | B3 | B4 | B5 | B6 |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    order = ["trident","B1","B2","B3","B4","B5","B6"]
+    for (pid, wl), d in sorted(by.items()):
+        def fmt(s, key):
+            r = d.get(s)
+            if r is None: return "·"
+            if r["oom"]: return "OOM"
+            v = r[key]
+            return f"{v*100:.1f}" if key == "slo" else f"{v:.1f}"
+        for key, lab in (("slo","SLO %"),("mean","mean s"),("p95","p95 s")):
+            out.append(f"| {pid} | {wl} | {lab} | " + " | ".join(fmt(s,key) for s in order) + " |")
+    return "\n".join(out) + "\n"
+
+if __name__ == "__main__":
+    which = sys.argv[1]
+    if which == "dryrun":
+        print(dryrun_table(sys.argv[2], sys.argv[3]))
+    elif which == "e2e":
+        print(e2e_table(sys.argv[2]))

@@ -1,0 +1,23 @@
+import sys, json, time
+sys.path.insert(0, "src")
+from repro.core.baselines import BASELINES
+from repro.core.simulator import run_sim
+from repro.core.trident import TridentScheduler
+
+DUR = 300.0
+out = open("results/e2e_full.jsonl", "w")
+scheds = {"trident": TridentScheduler, **BASELINES}
+for pid in ("sd3", "flux", "cogvideox", "hunyuanvideo"):
+    for wl in ("light", "medium", "heavy", "dynamic", "proprietary"):
+        for name, cls in scheds.items():
+            t0 = time.perf_counter()
+            r = run_sim(pid, cls, wl, DUR)
+            rec = dict(pipeline=pid, workload=wl, scheduler=name, oom=r.oom,
+                       slo=round(r.slo_attainment, 4),
+                       mean=round(r.mean_latency, 3) if not r.oom else None,
+                       p95=round(r.p95_latency, 3) if not r.oom else None,
+                       n=r.n_requests, fin=r.n_finished,
+                       wall=round(time.perf_counter() - t0, 1))
+            out.write(json.dumps(rec) + "\n"); out.flush()
+            print(rec, flush=True)
+print("E2E_FULL_DONE")

@@ -1,0 +1,45 @@
+"""Shared helper to derive reduced same-family smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+def make_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """2 layers, d_model<=512, <=4 experts; same layer family/pattern."""
+    heads = min(cfg.num_heads, 4)
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    upd = dict(
+        num_layers=max(2, len(cfg.layer_pattern)) if len(cfg.layer_pattern) <= 2 else len(cfg.layer_pattern),
+        d_model=128,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=min(cfg.vocab_size, 512),
+        window_size=min(cfg.window_size, 16),
+        chunk_size=min(cfg.chunk_size, 16),
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        moe_d_ff=min(cfg.moe_d_ff, 64) if cfg.moe_d_ff else 0,
+        ssm_state_dim=min(cfg.ssm_state_dim, 16),
+        ssm_heads=4 if cfg.resolved_ssm_heads else 0,
+        vision_tokens=min(cfg.vision_tokens, 8),
+        vision_embed_dim=min(cfg.vision_embed_dim, 64) if cfg.vision_embed_dim else 0,
+        dtype=jnp.float32,
+        name=cfg.name + "-smoke",
+    )
+    upd.update(overrides)
+    # keep num_layers == 2 when the pattern is length<=2; otherwise one cycle
+    if len(cfg.layer_pattern) <= 2:
+        upd["num_layers"] = 2
+    else:
+        upd["num_layers"] = len(cfg.layer_pattern) if len(cfg.layer_pattern) <= 8 else 2
+        if upd["num_layers"] == 2:
+            upd["layer_pattern"] = cfg.layer_pattern[:2]
+    return dataclasses.replace(cfg, **upd)

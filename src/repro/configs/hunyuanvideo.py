@@ -1,0 +1,44 @@
+"""HunyuanVideo pipeline [arXiv:2412.03603 / Table 2].
+
+Encode: Llama3-8B-style causal encoder (~8B); Diffuse: HYV-DiT ~13B
+(released: 20 double + 40 single blocks at d=3072; we use 64 uniform joint
+blocks); Decode: AE-KL-HYV ~0.5B.  Video latents.  Steps 6 (FastHunyuan).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.diffusion import DecoderConfig, DiTConfig
+from repro.models.pipeline import PipelineConfig
+
+_ENCODER = ModelConfig(
+    name="llama3-8b-enc", family="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=128256,
+    layer_pattern=("attn:dense",), rope_theta=5e5,
+    source="Llama 3 [arXiv:2407.21783]")
+
+_DIT = DiTConfig(name="hyv-dit", num_layers=64, d_model=3072, num_heads=24,
+                 d_ff=12288, latent_dim=64, cond_dim=4096,
+                 source="tencent/HunyuanVideo")
+
+_DEC = DecoderConfig(name="ae-kl-hyv", latent_channels=16, base_channels=512,
+                     res_blocks=4,
+                     source="AutoencoderKL-HunyuanVideo")
+
+CONFIG = PipelineConfig(name="hunyuanvideo", encoder=_ENCODER, dit=_DIT,
+                        decoder=_DEC, num_steps=6, is_video=True,
+                        source="tencent/HunyuanVideo")
+
+SMOKE = PipelineConfig(
+    name="hunyuanvideo-smoke",
+    encoder=dataclasses.replace(_ENCODER, num_layers=2, d_model=128,
+                                num_heads=4, num_kv_heads=2, head_dim=32,
+                                d_ff=256, vocab_size=256, dtype=jnp.float32,
+                                name="llama-smoke"),
+    dit=dataclasses.replace(_DIT, num_layers=2, d_model=128, num_heads=4,
+                            d_ff=256, latent_dim=16, cond_dim=128,
+                            dtype=jnp.float32, name="hyv-dit-smoke"),
+    decoder=dataclasses.replace(_DEC, latent_channels=4, base_channels=32,
+                                dtype=jnp.float32, name="ae-smoke"),
+    num_steps=2, is_video=True)

@@ -1,0 +1,25 @@
+"""RWKV6 "Finch" 3B [arXiv:2404.05892] — attention-free, data-dependent decay.
+
+32 layers, d_model 2560, vocab 65536; 40 heads of dim 64; channel-mix hidden
+3.5x = 8960 (matches the published d_ff).  The paper's Ulysses-SP technique
+is inapplicable (no attention heads to all-to-all); sequence parallelism for
+this arch is chunked-scan parallelism — see DESIGN.md §Arch-applicability.
+"""
+from repro.configs._smoke import make_smoke
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    layer_pattern=("rwkv6:none",),
+    ssm_heads=40,          # head_dim 64
+    source="arXiv:2404.05892",
+)
+
+SMOKE = make_smoke(CONFIG)

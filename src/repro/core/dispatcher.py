@@ -1,0 +1,226 @@
+"""Resource-Aware Dispatcher (§6.2): the two-step dispatch-plan generator.
+
+Step 1 — solve the per-tick myopic ILP for Γ^D (OBJ, C0–C4) with the
+paper's Appendix-C.2 weights: completion reward W_r (SLO-aware, with aging
+past the starvation threshold α), communication penalty Q_{r,i} = β_i · l_r.
+
+Step 2 — derive Γ^E and Γ^C from Γ^D: reuse the primary's unit set when the
+stage co-resides (E merges with D; C takes a subset of D's units), otherwise
+route to an idle/earliest-free auxiliary replica at the profiled optimal
+parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import ilp
+from repro.core.placement import (AUXILIARY_PLACEMENTS, PRIMARY_PLACEMENTS,
+                                  PlacementPlan, primary_of_vr,
+                                  vr_of_primary)
+from repro.core.profiler import PARALLEL_DEGREES, Profiler
+from repro.core.request import DispatchPlan, Request
+
+# Appendix C.2 constants
+C_ON = 1000.0
+C_LATE = 200.0
+ALPHA_STARVE = 5.0
+BETAS = {0: 0.0, 1: 1e-6, 2: 5e-6, 3: 6e-6}   # per Virtual-Replica index
+EFF_THRESHOLD = 0.8                            # E_{r,k} filter
+# Runtime-preference weight: among on-time (i,k) choices the paper's OBJ is
+# indifferent, which lets the solver park requests at degree 1 and inflate
+# mean latency.  A small per-second penalty (<< C_on - C_late) breaks the
+# tie toward faster configs without ever flipping an SLO decision.
+GAMMA_TIME = 2.0
+
+
+@dataclasses.dataclass
+class DispatchDecision:
+    request: Request
+    vr_type: int                  # chosen Virtual Replica index (0..3)
+    degree: int                   # units for the D stage
+    d_units: Tuple[int, ...]
+    e_units: Tuple[int, ...]
+    c_units: Tuple[int, ...]
+    # App. E.1 dynamic batching: same-class requests served in this run
+    corequests: Tuple[Request, ...] = ()
+
+    @property
+    def batch(self) -> int:
+        return 1 + len(self.corequests)
+
+    def plans(self) -> Dict[str, DispatchPlan]:
+        r = self.request
+        return {
+            "E": DispatchPlan(r.rid, "E", self.e_units, max(1, len(self.e_units))),
+            "D": DispatchPlan(r.rid, "D", self.d_units, self.degree),
+            "C": DispatchPlan(r.rid, "C", self.c_units, max(1, len(self.c_units))),
+        }
+
+
+class Dispatcher:
+    def __init__(self, profiler: Profiler, max_batch: int = 64,
+                 solver_time_cap: float = 0.05):
+        self.prof = profiler
+        self.max_batch = max_batch
+        self.solver_time_cap = solver_time_cap
+        self.last_solve_stats: Dict[str, float] = {}
+
+    # -- reward / penalty (App. C.2) ----------------------------------------
+
+    def _w_r(self, req: Request, tau: float, best_finish: float) -> float:
+        """App. C.2 completion reward with aging.  The overtime factor is
+        measured in *relative* time (how many deadline-windows the request
+        is overdue) so escalation is bounded and gradual: a request must be
+        α=5 windows late before its C_late reward starts growing — fresh
+        on-time requests (C_on) always dominate until then."""
+        if best_finish <= req.deadline:
+            return C_ON
+        window = max(req.deadline - req.arrival, 1e-6)
+        scale = max(1.0, (best_finish - req.arrival) / window)
+        return C_LATE * max(1.0, scale - ALPHA_STARVE + 1.0)
+
+    def _q_ri(self, req: Request, vr: int) -> float:
+        l_r = self.prof.proc_len(req, "D")
+        return BETAS[vr] * l_r * C_ON  # scaled to stay orders below W_r
+
+    def _req_runtime(self, req: Request, vr: int, k_units: int) -> float:
+        """t_{r,i,k}: runtime of the stages hosted by primary type i at k."""
+        prim = primary_of_vr(vr)
+        k_chips = k_units * self.prof.k_min
+        t = self.prof.stage_time(req, "D", k_chips)
+        if "E" in prim:
+            t += self.prof.stage_time(req, "E", k_chips)
+        if "C" in prim:
+            kc = min(k_chips, self.prof.optimal_degree(req, "C") * self.prof.k_min)
+            t += self.prof.stage_time(req, "C", kc)
+        return t
+
+    # -- ILP construction ------------------------------------------------------
+
+    def build_options(self, reqs: Sequence[Request], tau: float,
+                      idle_by_type: Dict[str, int]
+                      ) -> Tuple[List[List[ilp.Option]], List[int]]:
+        budgets = [idle_by_type.get(primary_of_vr(v), 0) for v in range(4)]
+        options: List[List[ilp.Option]] = []
+        for req in reqs:
+            opts: List[ilp.Option] = []
+            # E_{r,k}: efficient degrees only (plus degree 1, always allowed);
+            # capped at one node's worth of units (intra-machine SP)
+            eff_ks = [k for k in PARALLEL_DEGREES
+                      if k <= self.prof.max_degree_units
+                      and (k == 1 or self.prof.efficiency(
+                          req, "D", k * self.prof.k_min) > EFF_THRESHOLD)]
+            # best predicted finish for W_r (over all feasible pairs)
+            finishes = []
+            for vr in range(4):
+                prim = primary_of_vr(vr)
+                if budgets[vr] <= 0:
+                    continue
+                for k in eff_ks:
+                    if k > budgets[vr]:
+                        continue
+                    if not self.prof.fits(req, prim, k):
+                        continue   # F_{r,i,k}
+                    finishes.append((tau + self._req_runtime(req, vr, k), vr, k))
+            if not finishes:
+                options.append([])
+                continue
+            best_finish = min(f for f, _, _ in finishes)
+            w = self._w_r(req, tau, best_finish)
+            opts = [ilp.Option(dim=vr, usage=k,
+                               reward=w - self._q_ri(req, vr)
+                               - GAMMA_TIME * (f - tau))
+                    for f, vr, k in finishes
+                    # C3a-guided: drop configs that blow the deadline unless
+                    # nothing makes it (then keep the fastest)
+                    if f <= req.deadline or f == best_finish]
+            options.append(opts)
+        return options, budgets
+
+    # -- unit selection ---------------------------------------------------------
+
+    @staticmethod
+    def select_units(plan: PlacementPlan, ptype: str, k: int,
+                     idle_units: set, cross_node: bool = False
+                     ) -> Optional[Tuple[int, ...]]:
+        """k idle units of placement ``ptype`` within one node (intra-machine
+        constraint §6.2); contiguous-first for ICI locality.  With
+        ``cross_node`` (TPU pods: ICI everywhere) adjacent nodes combine
+        when no single node suffices."""
+        upn = plan.units_per_node
+        by_node: Dict[int, List[int]] = {}
+        for g in plan.units_of_type(ptype):
+            if g in idle_units:
+                by_node.setdefault(g // upn, []).append(g)
+        for node, units in sorted(by_node.items(), key=lambda kv: -len(kv[1])):
+            if len(units) >= k:
+                return tuple(sorted(units)[:k])
+        if cross_node:
+            pool: List[int] = []
+            for node in sorted(by_node):
+                pool.extend(sorted(by_node[node]))
+            if len(pool) >= k:
+                return tuple(pool[:k])
+        return None
+
+    def _aux_units(self, plan: PlacementPlan, stage: str, k: int,
+                   idle_units: set, free_at: Dict[int, float], tau: float
+                   ) -> Tuple[int, ...]:
+        """Idle-or-earliest-free auxiliary units for E/C (Monitor-reported)."""
+        cands = plan.units_of_type(stage)
+        if not cands:
+            return ()
+        cands = sorted(cands, key=lambda g: (g not in idle_units,
+                                             free_at.get(g, tau)))
+        return tuple(cands[:k])
+
+    # -- main entry ---------------------------------------------------------------
+
+    def dispatch(self, pending: Sequence[Request], plan: PlacementPlan,
+                 idle_units: set, free_at: Dict[int, float], tau: float
+                 ) -> List[DispatchDecision]:
+        # candidate set scales with idle capacity: a fixed cap would only
+        # ever show the solver the oldest (often already-late) requests
+        # under high-churn workloads and starve fresh feasible ones
+        cap = max(self.max_batch, 2 * len(idle_units))
+        reqs = sorted(pending, key=lambda r: r.deadline)[:cap]
+        if not reqs:
+            return []
+        idle_by_type = {t: sum(1 for g in plan.units_of_type(t) if g in idle_units)
+                        for t in PRIMARY_PLACEMENTS}
+        options, budgets = self.build_options(reqs, tau, idle_by_type)
+        sol = ilp.solve(options, budgets, time_cap=self.solver_time_cap)
+        self.last_solve_stats = {"nodes": sol.nodes, "optimal": sol.optimal,
+                                 "reward": sol.reward, "n_reqs": len(reqs)}
+
+        decisions: List[DispatchDecision] = []
+        taken: set = set()
+        avail = set(idle_units)
+        for ri, opt in sorted(sol.choices.items(), key=lambda kv: -kv[1].reward):
+            req = reqs[ri]
+            prim = primary_of_vr(opt.dim)
+            units = self.select_units(plan, prim, opt.usage, avail,
+                                      cross_node=self.prof.cross_node_sp)
+            if units is None:
+                continue   # stay undispatched for next round (paper §6.2)
+            avail -= set(units)
+            # Γ^E: merge with D when co-resident, else aux ⟨E⟩ replicas
+            if "E" in prim:
+                e_units = units
+            else:
+                ke = self.prof.optimal_degree(req, "E")
+                e_units = self._aux_units(plan, "E", ke, avail, free_at, tau)
+            # Γ^C: subset of D's units when co-resident, else aux ⟨C⟩
+            kc = self.prof.optimal_degree(req, "C")
+            if "C" in prim:
+                c_units = units[: max(1, min(kc, len(units)))]
+            else:
+                c_units = self._aux_units(plan, "C", kc, avail, free_at, tau)
+            if not e_units or not c_units:
+                avail |= set(units)
+                continue   # no auxiliary capacity -> undispatched this tick
+            decisions.append(DispatchDecision(
+                request=req, vr_type=opt.dim, degree=opt.usage,
+                d_units=units, e_units=tuple(e_units), c_units=tuple(c_units)))
+        return decisions

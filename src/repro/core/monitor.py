@@ -1,0 +1,85 @@
+"""Monitor (§5.1): clock-driven run-time statistics for the planners.
+
+Tracks per-stage completion throughput and per-placement-type processing
+rates over a sliding window T_win, plus worker status (delegated to the
+engine).  Placement-switch trigger (§5.3): the fastest stage's throughput
+at least 1.5x the slowest — with a secondary congestion signal (dispatch
+backlog vs idle primary capacity) to catch starvation transients where
+throughput ratios alone are uninformative.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.placement import PRIMARY_PLACEMENTS
+from repro.core.request import Request
+
+SWITCH_RATIO = 1.5
+MIN_SAMPLES = 8
+
+
+class Monitor:
+    def __init__(self, t_win: float = 180.0):
+        self.t_win = t_win
+        self._completions: Deque[Tuple[float, str, str, float]] = collections.deque()
+        self._backlog: Deque[Tuple[float, int, int]] = collections.deque()
+        self.last_switch: float = -1e9
+
+    # -- recording -------------------------------------------------------------
+
+    def record_stage(self, tau: float, stage: str, ptype: str,
+                     duration: float = 0.0):
+        self._completions.append((tau, stage, ptype, duration))
+        self._trim(tau)
+
+    def record_backlog(self, tau: float, pending: int, idle_primary: int):
+        self._backlog.append((tau, pending, idle_primary))
+        self._trim(tau)
+
+    def _trim(self, tau: float):
+        for q in (self._completions, self._backlog):
+            while q and q[0][0] < tau - self.t_win:
+                q.popleft()
+
+    # -- queries ---------------------------------------------------------------
+
+    def stage_rates(self, tau: float) -> Dict[str, float]:
+        self._trim(tau)
+        counts = collections.Counter(s for _, s, _, _ in self._completions)
+        return {s: counts.get(s, 0) / self.t_win for s in "EDC"}
+
+    def placement_rates(self, tau: float, plan_hist: Dict[str, int],
+                        min_count: int = 8) -> Dict[str, float]:
+        """v_pi: service *capacity* (1/mean busy time) per replica of each
+        placement type.  Throughput-over-window would conflate idleness with
+        slowness and mis-drive the Split — capacity is what balances rates."""
+        self._trim(tau)
+        sums: Dict[str, float] = collections.defaultdict(float)
+        counts: Dict[str, int] = collections.Counter()
+        for _, _, p, dur in self._completions:
+            if dur > 0:
+                sums[p] += dur
+                counts[p] += 1
+        return {p: counts[p] / sums[p] for p in counts
+                if counts[p] >= min_count and sums[p] > 0}
+
+    def pattern_change(self, tau: float, cooldown: float = 60.0) -> bool:
+        if tau - self.last_switch < cooldown or tau < self.t_win / 2:
+            return False   # warm-up: pipeline lag makes early ratios noise
+        self._trim(tau)
+        counts = collections.Counter(s for _, s, _, _ in self._completions)
+        trigger = False
+        if all(counts.get(s, 0) >= MIN_SAMPLES for s in "EDC"):
+            rates = [counts.get(s, 0) for s in "EDC"]
+            if max(rates) / min(rates) >= SWITCH_RATIO:
+                trigger = True
+        # congestion: backlog persistently exceeds idle primary capacity
+        if len(self._backlog) >= MIN_SAMPLES:
+            recent = list(self._backlog)[-MIN_SAMPLES:]
+            if all(p > 2 * max(1, i) for _, p, i in recent):
+                trigger = True
+        if trigger:
+            self.last_switch = tau
+        return trigger

@@ -1,0 +1,81 @@
+"""Placement types, Virtual Replicas (Table 3), and placement plans.
+
+π_g ∈ {⟨EDC⟩, ⟨DC⟩, ⟨ED⟩, ⟨D⟩, ⟨E⟩, ⟨C⟩}; ⟨EC⟩ is omitted per the paper
+(footnote 3: D dominates the critical path, so E+C co-location without D
+neither improves throughput nor reduces D-bound traffic).
+
+Virtual Replicas V0..V3 map one-to-one to the *Primary Placements* (those
+containing D); their inter-stage communication grows monotonically with the
+index: 0, Q_ED, Q_DC, Q_ED+Q_DC — and since l_proc^C > l_proc^E implies
+Q_DC > Q_ED, the preference order is V0 ≺ V1 ≺ V2 ≺ V3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+# placement types (stage sets, order-normalized)
+EDC, DC, ED, D, E, C = "EDC", "DC", "ED", "D", "E", "C"
+PLACEMENT_TYPES = (EDC, DC, ED, D, E, C)
+PRIMARY_PLACEMENTS = (EDC, DC, ED, D)      # contain D
+AUXILIARY_PLACEMENTS = (E, C)
+
+# Virtual Replica table (paper Table 3)
+#   index -> (primary placement, auxiliary placements, comm stages crossed)
+VIRTUAL_REPLICAS: Dict[int, Tuple[str, Tuple[str, ...], Tuple[str, ...]]] = {
+    0: (EDC, (), ()),                      # V0: no inter-stage comm
+    1: (DC, (E,), ("ED",)),                # V1: Q_ED
+    2: (ED, (C,), ("DC",)),                # V2: Q_DC
+    3: (D, (E, C), ("ED", "DC")),          # V3: Q_ED + Q_DC
+}
+VR_TYPES = tuple(VIRTUAL_REPLICAS)
+
+
+def stages_of(ptype: str) -> FrozenSet[str]:
+    return frozenset(ptype)
+
+
+def primary_of_vr(vr: int) -> str:
+    return VIRTUAL_REPLICAS[vr][0]
+
+
+def vr_of_primary(ptype: str) -> int:
+    for vr, (prim, _, _) in VIRTUAL_REPLICAS.items():
+        if prim == ptype:
+            return vr
+    raise KeyError(ptype)
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    """P = {π_g}: placement type per scheduling unit (k_min chips)."""
+    placements: List[str]                 # index = unit id
+    unit_size: int = 1                    # chips per unit (App. E.2 MP fold)
+    units_per_node: int = 8               # 8-chip nodes / unit_size
+
+    def __post_init__(self):
+        assert all(p in PLACEMENT_TYPES for p in self.placements)
+
+    @property
+    def num_units(self) -> int:
+        return len(self.placements)
+
+    def node_of(self, unit: int) -> int:
+        return unit // self.units_per_node
+
+    def units_with(self, stage: str) -> List[int]:
+        return [g for g, p in enumerate(self.placements) if stage in p]
+
+    def units_of_type(self, ptype: str) -> List[int]:
+        return [g for g, p in enumerate(self.placements) if p == ptype]
+
+    def count_of_type(self, ptype: str) -> int:
+        return sum(1 for p in self.placements if p == ptype)
+
+    def type_histogram(self) -> Dict[str, int]:
+        return {t: self.count_of_type(t) for t in PLACEMENT_TYPES
+                if self.count_of_type(t)}
+
+    def copy(self) -> "PlacementPlan":
+        return PlacementPlan(list(self.placements), self.unit_size,
+                             self.units_per_node)

@@ -1,0 +1,232 @@
+"""Discrete-event cluster simulator driving the real planner + engine code.
+
+The simulator owns the clock and the arrival trace; *all* scheduling logic
+(Orchestrator, Dispatcher, Monitor, Adjust-on-Dispatch, the baselines) is
+the production code from this package — only stage execution latencies come
+from the Profiler's cost model instead of wall-clock TPU runs.  This is the
+substrate behind every paper figure reproduction (Fig. 10-15, Table 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import repro.configs as configs
+from repro.core.monitor import Monitor
+from repro.core.placement import PlacementPlan
+from repro.core.profiler import HBM_BYTES, Profiler
+from repro.core.request import Request
+from repro.core.runtime import RuntimeEngine
+from repro.core.dispatcher import DispatchDecision
+
+
+@dataclasses.dataclass
+class SimConfig:
+    num_chips: int = 128
+    tick: float = 0.25
+    horizon_slack: float = 600.0      # grace period after the last arrival
+    proactive_push: bool = True
+    adjust_on_dispatch: bool = True
+    downtime_adjust: bool = False     # Fig. 13 ablation
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheduler: str
+    pipeline: str
+    workload: str
+    oom: bool
+    n_requests: int
+    n_finished: int
+    n_request_oom: int
+    slo_attainment: float
+    mean_latency: float
+    p95_latency: float
+    throughput_timeline: List[Tuple[float, int]]
+    placement_switches: List[Tuple[float, Dict[str, int]]]
+    vr_histogram: Dict[int, int]
+    engine_stats: Dict[str, float]
+    solver_ms: float = 0.0
+
+    def summary(self) -> str:
+        if self.oom:
+            return (f"{self.scheduler:10s} {self.pipeline:12s} {self.workload:11s} "
+                    f"OOM (colocated placement exceeds HBM)")
+        return (f"{self.scheduler:10s} {self.pipeline:12s} {self.workload:11s} "
+                f"SLO={self.slo_attainment * 100:5.1f}%  "
+                f"mean={self.mean_latency:7.2f}s  p95={self.p95_latency:7.2f}s  "
+                f"fin={self.n_finished}/{self.n_requests}")
+
+
+class Scheduler:
+    """Interface implemented by TridentServe and the B1-B6 baselines."""
+
+    name = "base"
+
+    def __init__(self, prof: Profiler, sim_cfg: SimConfig, trace: Sequence[Request]):
+        self.prof = prof
+        self.sim_cfg = sim_cfg
+        self.trace = trace
+
+    def initial_placement(self) -> Optional[PlacementPlan]:
+        raise NotImplementedError
+
+    def tick(self, sim: "Simulator", tau: float) -> List[DispatchDecision]:
+        raise NotImplementedError
+
+    def maybe_replace(self, sim: "Simulator", tau: float) -> Optional[PlacementPlan]:
+        return None
+
+
+class Simulator:
+    def __init__(self, pipeline_id: str, scheduler: Scheduler,
+                 trace: Sequence[Request], sim_cfg: SimConfig):
+        self.pipeline_id = pipeline_id
+        self.scheduler = scheduler
+        self.trace = sorted(trace, key=lambda r: r.arrival)
+        self.cfg = sim_cfg
+        self.prof = scheduler.prof
+        self.pending: List[Request] = []     # arrived, not yet dispatched
+        self.engine: Optional[RuntimeEngine] = None
+        self.monitor = Monitor()
+        self._events: List[Tuple[float, int, str, str, Request]] = []  # stage completions
+        self._eseq = 0
+        self.vr_histogram: Dict[int, int] = {}
+        self.placement_log: List[Tuple[float, Dict[str, int]]] = []
+        self.throughput: Dict[int, int] = {}
+        self.request_oom: List[Request] = []
+
+    # ---------------------------------------------------------------- helpers
+
+    def record_decision(self, dec: DispatchDecision,
+                        times: Dict[str, Tuple[float, float]]):
+        members = (dec.request,) + tuple(getattr(dec, "corequests", ()))
+        for s, (start, fin) in times.items():
+            for req in members:
+                req.stage_done[s] = fin
+            ptype = self.engine.plan.placements[
+                (dec.d_units if s == "D" else
+                 dec.e_units if s == "E" else dec.c_units)[0]]
+            heapq.heappush(self._events,
+                           (fin, self._eseq, s, ptype, fin - start, dec.request))
+            self._eseq += 1
+        self.vr_histogram[dec.vr_type] = (self.vr_histogram.get(dec.vr_type, 0)
+                                          + len(members))
+
+    def fail_request_oom(self, req: Request):
+        self.request_oom.append(req)
+
+    # ---------------------------------------------------------------- main loop
+
+    def run(self) -> SimResult:
+        workload_name = getattr(self.trace, "name", "trace")
+        plan = self.scheduler.initial_placement()
+        if plan is None:   # colocated placement cannot hold the models
+            return self._oom_result()
+        self.engine = RuntimeEngine(
+            self.prof, plan, proactive_push=self.cfg.proactive_push,
+            adjust_on_dispatch=self.cfg.adjust_on_dispatch)
+        self.placement_log.append((0.0, plan.type_histogram()))
+
+        trace_end = self.trace[-1].arrival if self.trace else 0.0
+        horizon = trace_end + self.cfg.horizon_slack
+        ai = 0
+        tau = 0.0
+        dispatched: set = set()
+        while tau <= horizon:
+            # admit arrivals
+            while ai < len(self.trace) and self.trace[ai].arrival <= tau:
+                self.pending.append(self.trace[ai])
+                ai += 1
+            # drain completion events up to now (feeds the Monitor)
+            while self._events and self._events[0][0] <= tau:
+                t, _, s, ptype, dur, req = heapq.heappop(self._events)
+                self.monitor.record_stage(t, s, ptype, dur)
+                if s == "C":
+                    self.throughput[int(t // 60)] = self.throughput.get(int(t // 60), 0) + 1
+            # placement switch?
+            new_plan = self.scheduler.maybe_replace(self, tau)
+            if new_plan is not None:
+                self.engine.apply_placement(new_plan, tau,
+                                            downtime_adjust=self.cfg.downtime_adjust)
+                self.placement_log.append((tau, new_plan.type_histogram()))
+            # dispatch
+            decisions = self.scheduler.tick(self, tau)
+            for dec in decisions:
+                times = self.engine.execute(dec, tau)
+                self.record_decision(dec, times)
+                dispatched.add(dec.request.rid)
+                self.pending.remove(dec.request)
+                for co in getattr(dec, "corequests", ()):
+                    dispatched.add(co.rid)
+                    self.pending.remove(co)
+            if (ai >= len(self.trace) and not self.pending
+                    and not self._events):
+                break
+            tau += self.cfg.tick
+        return self._result()
+
+    # ---------------------------------------------------------------- results
+
+    def _oom_result(self) -> SimResult:
+        return SimResult(
+            scheduler=self.scheduler.name, pipeline=self.pipeline_id,
+            workload="", oom=True, n_requests=len(self.trace), n_finished=0,
+            n_request_oom=len(self.trace), slo_attainment=0.0,
+            mean_latency=float("inf"), p95_latency=float("inf"),
+            throughput_timeline=[], placement_switches=[], vr_histogram={},
+            engine_stats={})
+
+    def _result(self) -> SimResult:
+        lat = []
+        on_time = 0
+        finished = 0
+        oom_ids = {r.rid for r in self.request_oom}
+        horizon_lat = (self.trace[-1].arrival + self.cfg.horizon_slack
+                       if self.trace else 0.0)
+        for r in self.trace:
+            if r.rid in oom_ids:
+                lat.append(horizon_lat)
+                continue
+            if r.finished:
+                finished += 1
+                lat.append(r.latency)
+                on_time += int(r.on_time)
+            else:
+                lat.append(horizon_lat - r.arrival)  # censored
+        lat_sorted = sorted(lat)
+        n = len(lat_sorted)
+        stats = dataclasses.asdict(self.engine.stats) if self.engine else {}
+        return SimResult(
+            scheduler=self.scheduler.name, pipeline=self.pipeline_id,
+            workload="", oom=False, n_requests=n, n_finished=finished,
+            n_request_oom=len(self.request_oom),
+            slo_attainment=on_time / max(1, n),
+            mean_latency=sum(lat) / max(1, n),
+            p95_latency=lat_sorted[int(0.95 * (n - 1))] if n else 0.0,
+            throughput_timeline=sorted((60.0 * b, c) for b, c in self.throughput.items()),
+            placement_switches=self.placement_log,
+            vr_histogram=dict(self.vr_histogram),
+            engine_stats=stats)
+
+
+def run_sim(pipeline_id: str, scheduler_cls, workload: str, duration: float,
+            sim_cfg: Optional[SimConfig] = None, seed: int = 0,
+            rate: Optional[float] = None, slo_scale: Optional[float] = None,
+            cross_node_sp: bool = False, **sched_kw) -> SimResult:
+    """Convenience: build profiler + trace + scheduler and run."""
+    from repro.core import workloads
+    sim_cfg = sim_cfg or SimConfig(seed=seed)
+    pcfg = configs.get(pipeline_id)
+    prof = Profiler(pcfg, force_k_min=getattr(scheduler_cls, "FORCE_KMIN", None),
+                    cross_node_sp=cross_node_sp)
+    kw = {} if slo_scale is None else {"slo_scale": slo_scale}
+    trace = workloads.make_trace(pipeline_id, workload, duration, prof,
+                                 seed=seed, rate=rate, **kw)
+    sched = scheduler_cls(prof, sim_cfg, trace, **sched_kw)
+    sim = Simulator(pipeline_id, sched, trace, sim_cfg)
+    res = sim.run()
+    res.workload = workload
+    return res

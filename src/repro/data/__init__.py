@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic, deterministic, shardable token streams."""
+from repro.data import pipeline
+
+__all__ = ["pipeline"]

@@ -1,0 +1,74 @@
+"""Synthetic data pipeline.
+
+Deterministic per-step token batches (a Zipfian unigram stream with local
+n-gram structure so losses actually decrease), plus the modality extras the
+zoo needs (vision patch embeddings, audio codebook tokens).  Batches are
+host-local numpy; the launcher shards them onto the mesh with
+``jax.device_put`` + NamedSharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+
+def _zipf_tokens(rng: np.random.Generator, vocab: int, shape) -> np.ndarray:
+    """Zipf-ish unigram distribution (bounded to vocab)."""
+    ranks = rng.zipf(1.3, size=shape)
+    return (ranks % vocab).astype(np.int32)
+
+
+def synthetic_batch(cfg: ModelConfig, dcfg: DataConfig, step: int
+                    ) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(dcfg.seed * 100_003 + step)
+    if cfg.modality == "audio_codec":
+        toks = _zipf_tokens(rng, cfg.vocab_size,
+                            (dcfg.batch, cfg.num_codebooks, dcfg.seq_len + 1))
+        batch = {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
+    else:
+        toks = _zipf_tokens(rng, cfg.vocab_size, (dcfg.batch, dcfg.seq_len + 1))
+        # inject learnable bigram structure: token[t+1] == token[t] sometimes
+        rep = rng.random((dcfg.batch, dcfg.seq_len + 1)) < 0.3
+        for b in range(dcfg.batch):
+            idx = np.nonzero(rep[b][1:])[0] + 1
+            toks[b][idx] = toks[b][idx - 1]
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.modality == "vision":
+        batch["patch_embeds"] = rng.standard_normal(
+            (dcfg.batch, cfg.vision_tokens, cfg.vision_embed_dim),
+            dtype=np.float32) * 0.02
+    return batch
+
+
+def iterator(cfg: ModelConfig, dcfg: DataConfig) -> Iterator[Dict[str, np.ndarray]]:
+    step = 0
+    while True:
+        yield synthetic_batch(cfg, dcfg, step)
+        step += 1
+
+
+def batch_spec(cfg: ModelConfig, dcfg: DataConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the dry-run (mirrors synthetic_batch)."""
+    if cfg.modality == "audio_codec":
+        shape = (dcfg.batch, cfg.num_codebooks, dcfg.seq_len)
+    else:
+        shape = (dcfg.batch, dcfg.seq_len)
+    out = {"tokens": jax.ShapeDtypeStruct(shape, jnp.int32),
+           "labels": jax.ShapeDtypeStruct(shape, jnp.int32)}
+    if cfg.modality == "vision":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (dcfg.batch, cfg.vision_tokens, cfg.vision_embed_dim), jnp.float32)
+    return out

@@ -1,0 +1,135 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU-native tiling: the (B*H, Lq, D) query stream is blocked (block_q, D) into
+VMEM; the KV stream is blocked (block_k, D) and iterated as the innermost
+*sequential* grid dimension carrying the online-softmax state (m, l, acc) in
+VMEM scratch.  Block sizes default to 128 to match the MXU systolic array;
+D is kept whole per block (<= 256 for every config in the zoo).
+
+Supports causal masking, sliding-window (gemma2/starcoder2), and the gemma2
+score softcap.  Oracle: ``repro.kernels.ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: int, softcap: float,
+               block_q: int, block_k: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    needed = True
+    if causal:
+        # skip blocks strictly above the diagonal / outside the window
+        first_q = qi * block_q + q_offset
+        last_q = first_q + block_q - 1
+        first_k = ki * block_k
+        needed = first_k <= last_q
+        if window:
+            needed = jnp.logical_and(needed, (ki + 1) * block_k - 1 > first_q - window)
+
+    @pl.when(needed if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)            # (block_k, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        if causal:
+            mask = k_pos <= q_pos
+            if window:
+                mask = jnp.logical_and(mask, k_pos > q_pos - window)
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...], l_ref[...] = m_new, l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)             # fully-masked rows -> 0 output
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> Array:
+    """q: (B, Lq, H, D); k/v: (B, Lkv, H, D) with H already GQA-expanded."""
+    b, lq, h, d = q.shape
+    lkv = k.shape[1]
+    q_offset = lkv - lq  # decode/extend: queries sit at the end of kv
+
+    block_q = min(block_q, max(8, lq))
+    block_k = min(block_k, max(8, lkv))
+    pq = (-lq) % block_q
+    pk = (-lkv) % block_k
+
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * h, lq, d)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * h, lkv, d)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * h, lkv, d)
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pk), (0, 0)))
+        if not causal:
+            raise ValueError("non-causal padding unsupported; pad upstream")
+    lq_p, lkv_p = lq + pq, lkv + pk
+
+    grid = (b * h, lq_p // block_q, lkv_p // block_k)
+    kernel = functools.partial(
+        _fa_kernel, scale=1.0 / math.sqrt(d), causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, lq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :lq, :].reshape(b, h, lq, d)
+    return jnp.moveaxis(out, 1, 2)

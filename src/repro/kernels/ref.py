@@ -1,0 +1,172 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: each kernel's tests sweep shapes and
+dtypes and assert_allclose against the functions here.  The model code also
+calls these on the CPU path (``use_flash=False``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Flash attention oracle
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: Array, k: Array, v: Array, mask: Optional[Array] = None,
+                  softcap: float = 0.0) -> Array:
+    """q: (B, Lq, H, D); k/v: (B, Lkv, H, D); mask (Lq, Lkv) True=attend."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# Gated linear-attention scan oracle (Mamba2 / RWKV6 shared recurrence)
+#
+#   S_t = diag(decay_t) @ S_{t-1} + k_t (outer) v_t
+#   o_t = q_t @ (S_{t-1} + diag(bonus*k_t) applied current step)   [rwkv6]
+#   o_t = q_t @ S_t                                                 [mamba2]
+#
+# decay_t: (B, H, L, K) per-key-channel decay in (0, 1].
+# bonus:   (H, K) or None.  When given, the current token contributes via
+#          the bonus path instead of entering S before the readout (RWKV).
+# ---------------------------------------------------------------------------
+
+def linear_scan_ref(q: Array, k: Array, v: Array, decay: Array,
+                    bonus: Optional[Array] = None,
+                    initial_state: Optional[Array] = None,
+                    ) -> Tuple[Array, Array]:
+    """Naive sequential oracle. Shapes:
+    q,k,decay: (B, H, L, K); v: (B, H, L, V) -> out (B, H, L, V), S (B, H, K, V).
+    """
+    b, h, l, dk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    wf = decay.astype(jnp.float32)
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        qt, kt, vt, wt = inp                      # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        if bonus is not None:
+            s_read = s + bonus[None, :, :, None].astype(jnp.float32) * kv
+            s_new = wt[..., :, None] * s + kv
+        else:
+            s_new = wt[..., :, None] * s + kv
+            s_read = s_new
+        ot = jnp.einsum("bhk,bhkv->bhv", qt, s_read)
+        return s_new, ot
+
+    xs = (jnp.moveaxis(qf, 2, 0), jnp.moveaxis(kf, 2, 0),
+          jnp.moveaxis(vf, 2, 0), jnp.moveaxis(wf, 2, 0))
+    s_final, out = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(out, 0, 2).astype(v.dtype), s_final
+
+
+def chunked_linear_scan_ref(q: Array, k: Array, v: Array, decay: Array,
+                            bonus: Optional[Array] = None,
+                            initial_state: Optional[Array] = None,
+                            chunk: int = 32) -> Tuple[Array, Array]:
+    """Chunked parallel form (O(L*C) work, O(L/C) sequential steps).
+
+    Within a chunk, with cumulative decays D_t = prod_{s<=t} w_s:
+      S_t   = D_t*(S_0 + sum_{s<=t} (k_s/D_s) x v_s)
+      o_t   = (q_t*D_t) @ S_0 + sum_{s<=t or <t} A[t,s] v_s
+      A[t,s]= (q_t * D_t/D_s) . k_s          (strict past when bonus given)
+    Matches linear_scan_ref to fp32 tolerance for decays >= ~0.7^chunk.
+    """
+    b, h, l, dk = q.shape
+    dv = v.shape[-1]
+    if l % chunk:
+        pad = chunk - l % chunk
+        zq = jnp.zeros((b, h, pad, dk), q.dtype)
+        q = jnp.concatenate([q, zq], 2)
+        k = jnp.concatenate([k, zq.astype(k.dtype)], 2)
+        v = jnp.concatenate([v, jnp.zeros((b, h, pad, dv), v.dtype)], 2)
+        decay = jnp.concatenate([decay, jnp.ones((b, h, pad, dk), decay.dtype)], 2)
+    lp = q.shape[2]
+    n = lp // chunk
+
+    qf = q.astype(jnp.float32).reshape(b, h, n, chunk, dk)
+    kf = k.astype(jnp.float32).reshape(b, h, n, chunk, dk)
+    vf = v.astype(jnp.float32).reshape(b, h, n, chunk, dv)
+    wf = decay.astype(jnp.float32).reshape(b, h, n, chunk, dk)
+
+    logw = jnp.log(jnp.clip(wf, 1e-12))
+    cum = jnp.cumsum(logw, axis=3)                 # log D_t (inclusive of w_t)
+    d_tot = jnp.exp(cum[..., -1, :])               # full-chunk decay (B,H,N,K)
+
+    if bonus is None:
+        q_in = qf * jnp.exp(cum)                   # q_t * D_t   (reads S_t)
+    else:
+        q_in = qf * jnp.exp(cum - logw)            # q_t * D_{t-1} (reads S_{t-1})
+    k_out = kf * jnp.exp(cum[..., -1:, :] - cum)   # k_s * D_C/D_s (state update)
+    k_in = kf * jnp.exp(-cum)                      # k_s / D_s     (intra-chunk)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=(-1 if bonus is not None else 0))
+    attn = jnp.einsum("bhntk,bhnsk->bhnts", q_in, k_in) * tri
+    intra = jnp.einsum("bhnts,bhnsv->bhntv", attn, vf)
+    if bonus is not None:
+        bn = bonus[None, :, None, None, :].astype(jnp.float32)
+        intra = intra + jnp.sum(qf * bn * kf, -1, keepdims=True) * vf
+
+    kv_chunk = jnp.einsum("bhnsk,bhnsv->bhnkv", k_out, vf)  # chunk contribution to S
+
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        q_in_c, d_tot_c, kv_c = inp
+        inter = jnp.einsum("bhtk,bhkv->bhtv", q_in_c, s)
+        s_new = d_tot_c[..., :, None] * s + kv_c
+        return s_new, inter
+
+    xs = (jnp.moveaxis(q_in, 2, 0), jnp.moveaxis(d_tot, 2, 0), jnp.moveaxis(kv_chunk, 2, 0))
+    s_final, inter = jax.lax.scan(step, s0, xs)
+    inter = jnp.moveaxis(inter, 0, 2)              # (B,H,N,chunk,V)
+    out = (intra + inter).reshape(b, h, lp, dv)[:, :, :l]
+    return out.astype(v.dtype), s_final
+
+
+def linear_scan_decode_ref(q: Array, k: Array, v: Array, decay: Array,
+                           state: Array, bonus: Optional[Array] = None,
+                           ) -> Tuple[Array, Array]:
+    """Single-token recurrent step.  q/k/decay: (B,H,K); v: (B,H,V);
+    state: (B,H,K,V) -> (out (B,H,V), new_state)."""
+    qf, kf, vf, wf = (x.astype(jnp.float32) for x in (q, k, v, decay))
+    sf = state.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    if bonus is not None:
+        read = sf + bonus[None, :, :, None].astype(jnp.float32) * kv
+        new = wf[..., :, None] * sf + kv
+    else:
+        new = wf[..., :, None] * sf + kv
+        read = new
+    out = jnp.einsum("bhk,bhkv->bhv", qf, read)
+    return out.astype(v.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# AdaLN-modulated RMSNorm oracle (DiT hot spot)
+# ---------------------------------------------------------------------------
+
+def adaln_rmsnorm_ref(x: Array, scale: Array, shift: Array, eps: float = 1e-6) -> Array:
+    """x: (B, L, D); scale/shift: (B, D) broadcast over L (AdaLN-Zero)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    out = xn * (1.0 + scale.astype(jnp.float32)[:, None, :]) + shift.astype(jnp.float32)[:, None, :]
+    return out.astype(x.dtype)

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init).  Each combination is lowered with ShapeDtypeStruct
+inputs (zero allocation), compiled for the production mesh, and its
+memory/cost analysis + collective schedule recorded for EXPERIMENTS.md
+§Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs import INPUT_SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as specs_lib
+from repro.roofline import analysis as ra
+from repro.roofline import hlo as hlo_mod
+from repro.sharding import partition
+
+
+def shardings_for(spec: specs_lib.LoweringSpec, cfg, mesh, multi_pod: bool,
+                  opts: frozenset = frozenset()):
+    """in_shardings pytree matching spec.args.
+
+    opts (perf-iteration switches, see EXPERIMENTS.md §Perf):
+      zero    — ZeRO-shard AdamW moments over the data axis
+      fsdp    — additionally shard params over data (2D expert sharding for
+                MoE; weight-gathered FSDP for dense)
+    """
+    daxes = mesh_lib.data_axes(multi_pod)
+    da = daxes if len(daxes) > 1 else daxes[0]
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    model = "model"
+    shard = lambda t: partition.named(t, mesh)
+
+    def batch_like(tree):
+        # replicate instead of sharding when the batch doesn't divide the
+        # data axes (long_500k has global_batch=1)
+        return jax.tree_util.tree_map(
+            lambda v: NamedSharding(
+                mesh, P(da if v.shape[0] % dsize == 0 else None,
+                        *([None] * (v.ndim - 1)))), tree)
+
+    if spec.kind == "train":
+        state_shape, batch_shape = spec.args
+        sspec = partition.state_specs(
+            cfg, state_shape,
+            zero_mesh=mesh if ("zero" in opts or "fsdp" in opts) else None,
+            fsdp="fsdp" in opts)
+        sspec = partition.validate_divisibility(sspec, state_shape, mesh)
+        return (shard(sspec), batch_like(batch_shape))
+
+    params_shape = spec.args[0]
+    pspec = partition.param_specs(cfg, params_shape)
+    if "fsdp" in opts:
+        pspec = partition.zero_shard(pspec, params_shape, mesh)
+    pspec = partition.validate_divisibility(pspec, params_shape, mesh)
+    if spec.kind == "prefill":
+        rest = tuple(batch_like(a) for a in spec.args[1:])
+        return (shard(pspec),) + rest
+    # decode: (params, tokens, cache, offset)
+    _, tokens_shape, cache_shape, _ = spec.args
+    cspec = partition.cache_specs(cfg, cache_shape, spec.batch, mesh, da)
+    cspec = partition.validate_divisibility(cspec, cache_shape, mesh)
+    return (shard(pspec), batch_like(tokens_shape), shard(cspec),
+            NamedSharding(mesh, P()))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            verbose: bool = True, opts: frozenset = frozenset()
+            ) -> Dict[str, Any]:
+    import dataclasses as _dc
+
+    from repro.models import transformer as _tf
+
+    cfg = configs.get(arch)
+    if "gqa" in opts and hasattr(cfg, "gqa_grouped_decode"):
+        cfg = _dc.replace(cfg, gqa_grouped_decode=True)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    spec = specs_lib.input_specs(arch, shape_name, cfg=cfg)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "kind": spec.kind,
+                           "opts": sorted(opts)}
+    if spec.skipped:
+        rec["status"] = "skipped"
+        rec["reason"] = spec.skipped
+        return rec
+    chips = mesh.size
+    t0 = time.perf_counter()
+    try:
+        if "seqshard" in opts:
+            daxes = mesh_lib.data_axes(multi_pod)
+            da = daxes if len(daxes) > 1 else daxes[0]
+            _tf.set_activation_sharding(
+                jax.sharding.NamedSharding(mesh, P(da, "model", None)))
+        in_sh = shardings_for(spec, cfg, mesh, multi_pod, opts)
+        # donate the state/cache buffers (production practice: the update
+        # aliases its input, halving peak memory for train and decode)
+        donate = {"train": (0,), "prefill": (), "decode": (2,)}[spec.kind]
+        with mesh:
+            lowered = jax.jit(spec.fn, in_shardings=in_sh,
+                              donate_argnums=donate).lower(*spec.args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+        flops_raw, nbytes_raw = ra.cost_terms(compiled, chips)
+        hlo_text = compiled.as_text()
+        # trip-count-aware costs (cost_analysis counts while bodies once)
+        mc = hlo_mod.module_costs(hlo_text, chips)
+        flops, nbytes = mc.flops, mc.hbm_bytes
+        coll = ra.CollectiveStats(mc.collective_counts,
+                                  {"total": mc.collective_wire_bytes})
+        try:
+            ma = compiled.memory_analysis()
+            peak = int(getattr(ma, "temp_size_in_bytes", 0)
+                       + getattr(ma, "argument_size_in_bytes", 0)
+                       + getattr(ma, "output_size_in_bytes", 0)
+                       - getattr(ma, "alias_size_in_bytes", 0))
+            rec["memory_analysis"] = {
+                "temp": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "args": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "out": int(getattr(ma, "output_size_in_bytes", 0)),
+                "alias": int(getattr(ma, "alias_size_in_bytes", 0)),
+            }
+        except Exception as e:   # CPU backend may not implement it
+            peak = 0
+            rec["memory_analysis"] = f"unavailable: {e}"
+        mf = ra.model_flops(cfg, spec.kind, spec.batch, spec.seq_len)
+        roof = ra.Roofline(arch=arch, shape=shape_name, mesh=mesh_name,
+                           chips=chips, hlo_flops=flops, hlo_bytes=nbytes,
+                           coll_bytes=coll.total_bytes / chips,
+                           model_flops=mf, coll_counts=coll.counts,
+                           peak_mem_bytes=peak)
+        rec.update(status="ok", t_lower_s=round(t_lower, 2),
+                   t_compile_s=round(t_compile, 2),
+                   cost_analysis_flops_raw=flops_raw,
+                   cost_analysis_bytes_raw=nbytes_raw,
+                   loop_multipliers=mc.loop_multipliers,
+                   hlo_flops_per_device=flops, hlo_bytes_per_device=nbytes,
+                   coll_wire_bytes_total=coll.total_bytes,
+                   coll_counts=coll.counts, model_flops=mf,
+                   t_compute_s=roof.t_compute, t_memory_s=roof.t_memory,
+                   t_collective_s=roof.t_collective,
+                   bottleneck=roof.bottleneck, useful_ratio=roof.useful_ratio,
+                   peak_mem_per_device=peak)
+        if verbose:
+            print(roof.row(), flush=True)
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"{arch:26s} {shape_name:12s} {mesh_name:9s} "
+                  f"ERROR {type(e).__name__}: {str(e)[:200]}", flush=True)
+    finally:
+        _tf.set_activation_sharding(None)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(configs.ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) on the chosen mesh")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--opt", default="",
+                    help="comma list of perf switches: "
+                         "seqshard,zero,fsdp,gqa (see EXPERIMENTS.md §Perf)")
+    args = ap.parse_args(argv)
+    opts = frozenset(o for o in args.opt.split(",") if o)
+
+    combos = []
+    if args.all:
+        for a in configs.ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        combos = [(args.arch, args.shape)]
+
+    ok = True
+    for a, s in combos:
+        rec = run_one(a, s, multi_pod=args.multi_pod, opts=opts)
+        ok &= rec["status"] in ("ok", "skipped")
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

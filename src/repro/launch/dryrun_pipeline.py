@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Paper-side dry-run: lower the diffusion pipeline *stages* (the models
+TridentServe actually serves) on the production mesh.
+
+For each pipeline and a representative request class, lowers one Diffuse
+denoise step (the unit the dispatcher's t_{r,i,k} measures) and one Decode
+pass, with DiT params TP-sharded and latents sharded over data x model
+(Ulysses-style sequence split on the joint stream).
+
+  PYTHONPATH=src python -m repro.launch.dryrun_pipeline --out results/dryrun_pipelines.jsonl
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.launch import mesh as mesh_lib
+from repro.models import diffusion
+from repro.roofline import analysis as ra
+from repro.roofline import hlo as hlo_mod
+
+CASES = {
+    "sd3": (1024, 0.0, 16),
+    "flux": (2048, 0.0, 16),
+    "cogvideox": (720, 4.0, 16),
+    "hunyuanvideo": (720, 4.0, 16),
+}
+
+
+def _div_axis(size: int, axis: str, mesh) -> object:
+    return axis if size % mesh.shape[axis] == 0 else None
+
+
+def _dit_param_specs(shapes):
+    def spec(path, leaf):
+        names = [getattr(p, "key", "") for p in path]
+        leaf_name = names[-1]
+        lead = (None,) if "layers" in names else ()
+        col = {"wq", "wk", "wv", "w_up", "mod"}
+        row = {"wo", "w_down"}
+        if leaf_name in col:
+            return P(*lead, None, "model")
+        if leaf_name in row:
+            return P(*lead, "model", None)
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(spec, shapes)
+
+
+def run_case(pid: str, out_path):
+    res, sec, batch = CASES[pid]
+    cfg = configs.get(pid)
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    chips = mesh.size
+    lt = cfg.latent_tokens(res, sec)
+    key = jax.random.PRNGKey(0)
+
+    for stage, build in (("D", "dit"), ("C", "decoder")):
+        rec = {"arch": f"{pid}-{'dit' if stage == 'D' else 'ae'}",
+               "shape": f"{res}x{sec}", "mesh": "16x16", "kind": "serve"}
+        t0 = time.perf_counter()
+        try:
+            if stage == "D":
+                shapes = jax.eval_shape(lambda k: diffusion.init(cfg.dit, k), key)
+                pspec = _dit_param_specs(shapes)
+                lat = jax.ShapeDtypeStruct((batch, lt, cfg.dit.latent_dim),
+                                           jnp.float32)
+                t = jax.ShapeDtypeStruct((batch,), jnp.float32)
+                cond = jax.ShapeDtypeStruct((batch, 77, cfg.dit.cond_dim),
+                                            jnp.float32)
+                fn = lambda p, x, tt, c: diffusion.forward(cfg.dit, p, x, tt, c)
+                in_sh = (jax.tree_util.tree_map(
+                            lambda s: NamedSharding(mesh, s), pspec,
+                            is_leaf=lambda x: isinstance(x, P)),
+                         NamedSharding(mesh, P(
+                             _div_axis(batch, "data", mesh),
+                             _div_axis(lt, "model", mesh), None)),
+                         NamedSharding(mesh, P(_div_axis(batch, "data", mesh))),
+                         NamedSharding(mesh, P(
+                             _div_axis(batch, "data", mesh), None, None)))
+                args = (shapes, lat, t, cond)
+                n_params = sum(int(x.size) for x in
+                               jax.tree_util.tree_leaves(shapes))
+                mf = 2.0 * n_params * batch * (lt + 77)
+            else:
+                shapes = jax.eval_shape(
+                    lambda k: diffusion.init_decoder(cfg.decoder, k), key)
+                f, h, w = cfg.latent_grid(res, sec)
+                z = jax.ShapeDtypeStruct(
+                    (batch * f, 2 * h, 2 * w, cfg.decoder.latent_channels),
+                    jnp.float32)
+                fn = lambda p, zz: diffusion.decode_latent(cfg.decoder, p, zz)
+                bf = batch * f
+                in_sh = (None, NamedSharding(mesh, P(
+                    ("data", "model") if bf % chips == 0 else
+                    _div_axis(bf, "data", mesh),
+                    _div_axis(2 * h, "model", mesh)
+                    if bf % chips != 0 else None, None, None)))
+                args = (shapes, z)
+                n_params = sum(int(x.size) for x in
+                               jax.tree_util.tree_leaves(shapes))
+                mf = 2.0 * n_params * batch * f * 4 * h * w
+            with mesh:
+                compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+            mc = hlo_mod.module_costs(compiled.as_text(), chips)
+            try:
+                ma = compiled.memory_analysis()
+                peak = int(getattr(ma, "temp_size_in_bytes", 0)
+                           + getattr(ma, "argument_size_in_bytes", 0))
+            except Exception:
+                peak = 0
+            roof = ra.Roofline(arch=rec["arch"], shape=rec["shape"],
+                               mesh="16x16", chips=chips, hlo_flops=mc.flops,
+                               hlo_bytes=mc.hbm_bytes,
+                               coll_bytes=mc.collective_wire_bytes / chips,
+                               model_flops=mf,
+                               coll_counts=mc.collective_counts,
+                               peak_mem_bytes=peak)
+            rec.update(status="ok",
+                       t_compile_s=round(time.perf_counter() - t0, 1),
+                       t_compute_s=roof.t_compute, t_memory_s=roof.t_memory,
+                       t_collective_s=roof.t_collective,
+                       bottleneck=roof.bottleneck,
+                       useful_ratio=roof.useful_ratio,
+                       peak_mem_per_device=peak, model_flops=mf,
+                       hlo_flops_per_device=mc.flops,
+                       hlo_bytes_per_device=mc.hbm_bytes,
+                       coll_counts=mc.collective_counts)
+            print(roof.row(), flush=True)
+        except Exception as e:
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-1500:])
+            print(rec["arch"], "ERROR", rec["error"][:160], flush=True)
+        with open(out_path, "a") as fo:
+            fo.write(json.dumps(rec) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun_pipelines.jsonl")
+    ap.add_argument("--pipeline", default=None, choices=list(CASES))
+    args = ap.parse_args()
+    for pid in ([args.pipeline] if args.pipeline else CASES):
+        run_case(pid, args.out)
+
+
+if __name__ == "__main__":
+    main()

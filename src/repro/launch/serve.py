@@ -1,0 +1,60 @@
+"""Serving entry point: run the TridentServe cluster on a workload.
+
+  PYTHONPATH=src python -m repro.launch.serve --pipeline flux \
+      --workload dynamic --duration 600 --chips 128 \
+      --baselines B1,B5,B6 [--cross-node-sp] [--no-batching]
+"""
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipeline", default="flux",
+                    choices=["sd3", "flux", "cogvideox", "hunyuanvideo"])
+    ap.add_argument("--workload", default="dynamic",
+                    choices=["light", "medium", "heavy", "dynamic",
+                             "proprietary"])
+    ap.add_argument("--duration", type=float, default=600.0)
+    ap.add_argument("--chips", type=int, default=128)
+    ap.add_argument("--rate", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--baselines", default="")
+    ap.add_argument("--cross-node-sp", action="store_true",
+                    help="pod-wide SP (beyond-paper, EXPERIMENTS.md §Perf)")
+    ap.add_argument("--no-batching", action="store_true")
+    ap.add_argument("--json", default=None, help="append results here")
+    args = ap.parse_args()
+
+    from repro.core.baselines import BASELINES
+    from repro.core.simulator import SimConfig, run_sim
+    from repro.core.trident import TridentScheduler
+
+    sim_cfg = SimConfig(num_chips=args.chips, seed=args.seed)
+    results = [run_sim(args.pipeline, TridentScheduler, args.workload,
+                       args.duration, sim_cfg=sim_cfg, rate=args.rate,
+                       cross_node_sp=args.cross_node_sp,
+                       enable_batching=not args.no_batching)]
+    for b in (x for x in args.baselines.split(",") if x):
+        results.append(run_sim(args.pipeline, BASELINES[b], args.workload,
+                               args.duration, sim_cfg=sim_cfg,
+                               rate=args.rate))
+    for r in results:
+        print(r.summary())
+        if r.scheduler == "trident":
+            print(f"  VR distribution {r.vr_histogram}; "
+                  f"{len(r.placement_switches) - 1} placement switches; "
+                  f"engine merged={r.engine_stats.get('merged_runs')} "
+                  f"pushes={r.engine_stats.get('device_pushes')}")
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in results:
+                f.write(json.dumps({
+                    "scheduler": r.scheduler, "pipeline": r.pipeline,
+                    "workload": args.workload, "oom": r.oom,
+                    "slo": r.slo_attainment, "mean": r.mean_latency,
+                    "p95": r.p95_latency}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""input_specs(): weak-type-correct ShapeDtypeStruct stand-ins per
+(architecture x input shape), plus the step function each shape lowers.
+
+Shapes (assigned):
+  train_4k     seq 4096,   batch 256  -> train_step (fwd+bwd+AdamW)
+  prefill_32k  seq 32768,  batch 32   -> prefill_step (logits + KV cache)
+  decode_32k   cache 32768, batch 128 -> serve_step (ONE token vs cache)
+  long_500k    cache 524288, batch 1  -> serve_step (sub-quadratic archs)
+
+The modality carve-out: VLM prompts are (text_tokens, patch_embeds) with
+text = seq - vision_tokens so the total processed length matches; audio
+tokens carry the codebook dim (B, K, L).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs import INPUT_SHAPES, InputShape
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from repro.training import loop as train_loop
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    """Everything needed to lower one (arch, shape) combination."""
+    kind: str                       # train | prefill | decode
+    fn: Callable                    # the step function to jit
+    args: Tuple                     # ShapeDtypeStruct pytree args
+    arg_names: Tuple[str, ...]      # for sharding assignment
+    batch: int
+    seq_len: int
+    skipped: Optional[str] = None   # reason, when the combo is skipped
+
+
+def _token_struct(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.modality == "audio_codec":
+        return jax.ShapeDtypeStruct((batch, cfg.num_codebooks, seq), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None when supported; otherwise the skip reason (recorded in docs)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return ("pure full-attention stack: a 500k-token KV cache has no "
+                "sub-quadratic variant in the reference model (DESIGN.md)")
+    return None
+
+
+def input_specs(arch_id: str, shape_name: str,
+                cfg: Optional[ModelConfig] = None) -> LoweringSpec:
+    cfg = cfg if cfg is not None else configs.get(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    skip = supports_shape(cfg, shape)
+    if skip:
+        return LoweringSpec(shape.kind, lambda: None, (), (), shape.global_batch,
+                            shape.seq_len, skipped=skip)
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        state_shape = jax.eval_shape(
+            lambda k: train_loop.init_state(cfg, k), key)
+        batch: Dict[str, Any] = {
+            "tokens": _token_struct(cfg, shape.global_batch, shape.seq_len),
+            "labels": _token_struct(cfg, shape.global_batch, shape.seq_len),
+        }
+        if cfg.modality == "vision":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.vision_tokens, cfg.vision_embed_dim),
+                jnp.float32)
+            batch["labels"] = _token_struct(
+                cfg, shape.global_batch, shape.seq_len - cfg.vision_tokens)
+            batch["tokens"] = _token_struct(
+                cfg, shape.global_batch, shape.seq_len - cfg.vision_tokens)
+        step = train_loop.make_train_step(cfg)
+        return LoweringSpec("train", step, (state_shape, batch),
+                            ("state", "batch"), shape.global_batch, shape.seq_len)
+
+    params_shape = jax.eval_shape(lambda k: transformer.init(cfg, k), key)
+
+    if shape.kind == "prefill":
+        text = shape.seq_len
+        args = [params_shape]
+        names = ["params", "tokens"]
+        if cfg.modality == "vision":
+            text = shape.seq_len - cfg.vision_tokens
+            args.append(_token_struct(cfg, shape.global_batch, text))
+            args.append(jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.vision_tokens, cfg.vision_embed_dim),
+                jnp.float32))
+            names.append("patch_embeds")
+            fn = lambda p, t, pe: transformer.prefill(cfg, p, t, shape.seq_len,
+                                                      prefix_embeds=pe)
+        else:
+            args.append(_token_struct(cfg, shape.global_batch, text))
+            fn = lambda p, t: transformer.prefill(cfg, p, t, shape.seq_len)
+        return LoweringSpec("prefill", fn, tuple(args), tuple(names),
+                            shape.global_batch, shape.seq_len)
+
+    # decode: ONE new token against a seq_len cache
+    cache_shape = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, shape.seq_len))
+    tokens = _token_struct(cfg, shape.global_batch, 1)
+    offset = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda p, t, c, o: transformer.decode_step(cfg, p, t, c, o)
+    return LoweringSpec("decode", fn,
+                        (params_shape, tokens, cache_shape, offset),
+                        ("params", "tokens", "cache", "offset"),
+                        shape.global_batch, shape.seq_len)

@@ -1,0 +1,11 @@
+"""Model zoo: transformer families used by the serving system and dry-runs.
+
+All models are pure-JAX (no flax): ``init(cfg, key) -> params`` pytrees and
+``apply``-style functions that are jit/pjit friendly.  Layer stacks use
+``lax.scan`` over stacked per-layer params (grouped into homogeneous
+segments) to bound HLO size and compile time.
+"""
+from repro.models.common import ModelConfig
+from repro.models import transformer
+
+__all__ = ["ModelConfig", "transformer"]

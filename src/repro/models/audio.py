@@ -1,0 +1,52 @@
+"""MusicGen support: codebook-interleaved decoder over EnCodec tokens.
+
+Per the brief, the EnCodec conv codec is a STUB — inputs are precomputed
+frame tokens (B, K, T) over K=4 codebooks with 2048 entries each; the model
+under test is the decoder-only transformer with per-codebook embeddings and
+heads and the *delay pattern* interleaving [arXiv:2306.05284].
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import Array, ModelConfig
+
+
+def codec_stub_tokens(cfg: ModelConfig, batch: int, frames: int,
+                      key: Optional[Array] = None) -> Array:
+    """EnCodec tokens stand-in: (B, K, T) int32."""
+    if key is None:
+        return jnp.zeros((batch, cfg.num_codebooks, frames), jnp.int32)
+    return jax.random.randint(key, (batch, cfg.num_codebooks, frames),
+                              0, cfg.vocab_size)
+
+
+def apply_delay_pattern(tokens: Array, pad_id: int = 0) -> Array:
+    """MusicGen delay interleave: codebook k is shifted right by k frames so
+    one decode step predicts one frame across all codebooks causally."""
+    b, k, t = tokens.shape
+    out = jnp.full((b, k, t), pad_id, tokens.dtype)
+    for i in range(k):
+        out = out.at[:, i, i:].set(tokens[:, i, : t - i])
+    return out
+
+
+def undo_delay_pattern(tokens: Array) -> Array:
+    b, k, t = tokens.shape
+    out = jnp.zeros_like(tokens)
+    for i in range(k):
+        out = out.at[:, i, : t - i].set(tokens[:, i, i:])
+    return out
+
+
+def audio_forward(cfg: ModelConfig, params: dict, tokens: Array) -> Tuple[Array, Array]:
+    """tokens: (B, K, T) delayed codec tokens -> logits (B, T, K, V)."""
+    return transformer.forward(cfg, params, tokens)
+
+
+def audio_prefill(cfg: ModelConfig, params: dict, tokens: Array, max_len: int):
+    return transformer.prefill(cfg, params, tokens, max_len)

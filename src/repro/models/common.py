@@ -1,0 +1,373 @@
+"""Shared building blocks: config, norms, RoPE, attention math, MLP.
+
+Everything here is shape-polymorphic pure JAX.  Attention supports the mask
+variants needed by the assigned architectures: causal, sliding-window
+(gemma2/starcoder2), chunked-local (llama4 iRoPE-style), and bidirectional
+(T5-style encoder used by the diffusion pipelines).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+# mixer kinds
+ATTN = "attn"                # full causal attention
+ATTN_LOCAL = "attn_local"    # sliding-window causal attention
+ATTN_CHUNKED = "attn_chunked"  # chunked local attention (llama4 iRoPE)
+ATTN_BIDIR = "attn_bidir"    # bidirectional (encoder)
+MAMBA2 = "mamba2"
+RWKV6 = "rwkv6"
+
+# ffn kinds
+FFN_DENSE = "dense"
+FFN_MOE = "moe"
+
+ATTN_KINDS = (ATTN, ATTN_LOCAL, ATTN_CHUNKED, ATTN_BIDIR)
+SSM_KINDS = (MAMBA2, RWKV6)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config describes every architecture family in the zoo.
+
+    ``layer_pattern`` is a cycle of ``"<mixer>:<ffn>"`` entries; it is tiled
+    to ``num_layers`` and then merged into homogeneous segments which are
+    each executed with one ``lax.scan``.
+    """
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    layer_pattern: Tuple[str, ...] = ("attn:dense",)
+
+    # attention details
+    window_size: int = 4096          # for attn_local
+    chunk_size: int = 8192           # for attn_chunked
+    logit_softcap: float = 0.0       # final-logit softcap (gemma2: 30)
+    attn_softcap: float = 0.0        # attention-score softcap (gemma2: 50)
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # SSM (mamba2 / rwkv6)
+    ssm_state_dim: int = 64
+    ssm_heads: int = 0               # 0 -> num_heads
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+
+    # modality frontends (stubs per brief)
+    modality: str = "text"           # text | vision | audio_codec
+    num_codebooks: int = 0           # musicgen
+    vision_tokens: int = 0           # number of prefix embedding tokens
+    vision_embed_dim: int = 0
+
+    # numerics
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # multiply embeddings by sqrt(d_model) (gemma)
+    use_flash: bool = False          # route attention through Pallas kernel
+    remat: bool = True               # checkpoint layer bodies in training
+    attn_block_threshold: int = 4096  # use online-softmax blocked attention
+    attn_block_size: int = 512        # ... with this KV block size
+    gqa_grouped_decode: bool = False  # decode attention without KV repeat
+
+    # citation for the public config (model card / arXiv)
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_ssm_heads(self) -> int:
+        return self.ssm_heads or self.num_heads
+
+    def layer_kinds(self) -> Tuple[Tuple[str, str], ...]:
+        """Tile layer_pattern to num_layers -> ((mixer, ffn), ...)."""
+        out = []
+        for i in range(self.num_layers):
+            entry = self.layer_pattern[i % len(self.layer_pattern)]
+            mixer, _, ffn = entry.partition(":")
+            out.append((mixer, ffn or FFN_DENSE))
+        return tuple(out)
+
+    def segments(self) -> Tuple[Tuple[Tuple[str, str], int], ...]:
+        """Merge consecutive identical layer kinds into (kind, count) runs."""
+        kinds = self.layer_kinds()
+        segs = []
+        for k in kinds:
+            if segs and segs[-1][0] == k:
+                segs[-1][1] += 1
+            else:
+                segs.append([k, 1])
+        return tuple((k, c) for k, c in segs)
+
+    def scan_plan(self) -> Tuple[Tuple[Tuple[Tuple[str, str], ...], int], ...]:
+        """Blocks of (pattern_cycle, repeat) executed as one lax.scan each.
+
+        Keeps HLO size O(pattern length), not O(num_layers):
+          * cycling patterns (gemma2 local/global, llama4, zamba2) scan over
+            cycle repeats with the whole cycle in the scan body;
+          * otherwise homogeneous runs are merged (yi, deepseek-moe's single
+            leading dense layer + 27 moe layers -> two scans).
+        Remainder layers after the last full cycle become extra run-blocks.
+        """
+        kinds = self.layer_kinds()
+        p = len(self.layer_pattern)
+        n = self.num_layers
+        blocks = []
+        if p > 1 and n // p >= 2:
+            g = n // p
+            cycle = tuple(kinds[:p])
+            blocks.append((cycle, g))
+            rest = kinds[g * p:]
+        else:
+            rest = kinds
+        # merge the remainder (or everything) into homogeneous runs
+        runs = []
+        for k in rest:
+            if runs and runs[-1][0] == k:
+                runs[-1][1] += 1
+            else:
+                runs.append([k, 1])
+        for k, c in runs:
+            blocks.append(((k,), c))
+        return tuple(blocks)
+
+    def is_subquadratic(self) -> bool:
+        """True when no layer needs an unbounded full-attention KV cache."""
+        return all(m not in (ATTN, ATTN_BIDIR) for m, _ in self.layer_kinds())
+
+    def supports_long_context(self) -> bool:
+        """long_500k eligibility: every layer either SSM or windowed/chunked,
+        OR the architecture natively mixes bounded-local with (rare) global
+        layers — gemma2/llama4 style. Pure full-attention stacks return False.
+        """
+        kinds = [m for m, _ in self.layer_kinds()]
+        n_full = sum(1 for m in kinds if m == ATTN)
+        n_bounded = sum(1 for m in kinds if m in (ATTN_LOCAL, ATTN_CHUNKED) or m in SSM_KINDS)
+        if n_full == 0:
+            return True
+        # native local/global alternation: at most half the layers global
+        return n_bounded > 0 and n_full <= len(kinds) // 2
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, shape: Sequence[int], dtype, scale: float = 1.0) -> Array:
+    """Truncated-normal fan-in init (matches common LLM reference impls)."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: Array, shape: Sequence[int], dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., L, H, Dh); positions: broadcastable to (..., L)."""
+    freqs = rope_freqs(x.shape[-1], theta)           # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, Dh/2)
+    angles = angles[..., None, :]                    # (..., L, 1, Dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention math (jnp reference path; kernel path lives in repro.kernels)
+# ---------------------------------------------------------------------------
+
+def make_attention_mask(q_pos: Array, kv_pos: Array, kind: str,
+                        window: int = 0, chunk: int = 0) -> Array:
+    """(Lq, Lkv) boolean mask; True = attend."""
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    if kind == ATTN_BIDIR:
+        return jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=jnp.bool_)
+    causal = k <= q
+    if kind == ATTN:
+        return causal
+    if kind == ATTN_LOCAL:
+        return causal & (k > q - window)
+    if kind == ATTN_CHUNKED:
+        return causal & (k // chunk == q // chunk)
+    raise ValueError(f"unknown attention kind {kind!r}")
+
+
+def repeat_kv(x: Array, n_rep: int) -> Array:
+    """(B, L, Hkv, Dh) -> (B, L, Hkv*n_rep, Dh)."""
+    if n_rep == 1:
+        return x
+    b, l, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, l, h, n_rep, d)).reshape(b, l, h * n_rep, d)
+
+
+def _block_mask(q_pos: Array, k_pos: Array, kind: str, window: int,
+                chunk: int) -> Optional[Array]:
+    if kind == ATTN_BIDIR:
+        return None
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    m = k <= q
+    if kind == ATTN_LOCAL:
+        m &= k > q - window
+    elif kind == ATTN_CHUNKED:
+        m &= (k // chunk) == (q // chunk)
+    return m
+
+
+def attention_blocked(q: Array, k: Array, v: Array, q_pos: Array,
+                      kv_pos: Array, kind: str, window: int = 0,
+                      chunk: int = 0, attn_softcap_val: float = 0.0,
+                      block: int = 512) -> Array:
+    """Online-softmax attention blocked over KV (flash-attention algorithm
+    in pure XLA, à la MaxText): never materializes the (Lq, Lkv) matrix, so
+    long-sequence training/prefill fits HBM without a custom kernel.  The
+    Pallas kernel (`repro.kernels.flash_attention`) is the TPU-optimized
+    version of the same loop."""
+    b, lq, h, d = q.shape
+    lkv = k.shape[1]
+    assert lkv % block == 0, (lkv, block)
+    nb = lkv // block
+    scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32)
+
+    kb = jnp.moveaxis(k.reshape(b, nb, block, h, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block, h, d), 1, 0)
+    pb = kv_pos.reshape(nb, block)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kk, vv, pp = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kk.astype(jnp.float32)) * scale
+        s = softcap(s, attn_softcap_val)
+        mask = _block_mask(q_pos, pp, kind, window, chunk)
+        if mask is not None:
+            s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = (acc * alpha[..., None]
+                   + jnp.einsum("bhqk,bkhd->bhqd", p, vv.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, h, lq), -1e30, jnp.float32),
+            jnp.zeros((b, h, lq), jnp.float32),
+            jnp.zeros((b, h, lq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (kb, vb, pb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(v.dtype)
+
+
+def attention(q: Array, k: Array, v: Array, mask: Optional[Array],
+              attn_softcap_val: float = 0.0) -> Array:
+    """q: (B, Lq, H, Dh); k/v: (B, Lkv, H, Dh); mask: (Lq, Lkv) or None.
+
+    Reference jnp implementation.  Reductions stay in f32.  Under pjit a
+    sequence-sharded ``k``/``v`` lowers to partial-softmax + all-reduce
+    automatically (max and sum reductions over the sharded axis).
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, attn_softcap_val)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, w_down)
+
+
+def gelu_mlp(x: Array, w_up: Array, w_down: Array) -> Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up).astype(jnp.float32), approximate=True)
+    return jnp.einsum("...f,fd->...d", h.astype(x.dtype), w_down)
+
+
+# ---------------------------------------------------------------------------
+# Misc helpers
+# ---------------------------------------------------------------------------
+
+def split_keys(key: Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))

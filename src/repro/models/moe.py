@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN (DeepSeek-MoE fine-grained / Llama4 style).
+
+Switch-style dispatch with capacity factor: tokens are routed to their top-k
+experts through one-hot dispatch/combine einsums, which lower to expert
+all-to-alls under GSPMD when experts are sharded over the ``model`` mesh
+axis.  Shared experts (DeepSeek) run densely on every token.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Array, ModelConfig, dense_init
+
+
+def init_moe(cfg: ModelConfig, key: Array) -> dict:
+    d, f = cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+    e, se = cfg.num_experts, cfg.num_shared_experts
+    ks = common.split_keys(key, 7)
+    params = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), cfg.dtype),
+        "w_up": dense_init(ks[2], (e, d, f), cfg.dtype),
+        "w_down": dense_init(ks[3], (e, f, d), cfg.dtype, scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+    if se:
+        params["shared_gate"] = dense_init(ks[4], (d, se * f), cfg.dtype)
+        params["shared_up"] = dense_init(ks[5], (d, se * f), cfg.dtype)
+        params["shared_down"] = dense_init(ks[6], (se * f, d), cfg.dtype)
+    return params
+
+
+GROUP_SIZE = 1024   # routing-group length (GShard-style); bounds capacity
+
+
+def _group_size(t: int) -> int:
+    g = min(GROUP_SIZE, t)
+    while t % g:
+        g -= 1
+    return g
+
+
+def moe_ffn(cfg: ModelConfig, params: dict, x: Array) -> Tuple[Array, Array]:
+    """x: (B, L, D) -> (out, aux_loss).
+
+    Dropping MoE with capacity factor, GShard-style *grouped* routing:
+    tokens are reshaped into (G, S) groups and each group routes with its
+    own capacity C = cf*k*S/E.  The (G, S, E, C) dispatch tensor is linear
+    in token count (not quadratic like global capacity) and shards G over
+    the data axis while experts shard over the model axis — the g->e
+    resharding between the dispatch and expert einsums is exactly the MoE
+    all-to-all under GSPMD.
+    """
+    b, l, d = x.shape
+    t = b * l
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    s = _group_size(t)
+    g_n = t // s
+    cap = max(4, int(cfg.capacity_factor * k * s / e) + 1)
+
+    xg = x.reshape(g_n, s, d)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # (G, S, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position within each expert's per-group buffer (token order per slot)
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)       # (G, S, k, E)
+    flat = onehot.reshape(g_n, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(g_n, s, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)                # (G, S, k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    disp = (onehot.astype(x.dtype)[..., None]
+            * jax.nn.one_hot(pos, cap, dtype=x.dtype)[..., None, :]
+            * keep[..., None, None].astype(x.dtype))              # (G,S,k,E,C)
+    combine = (disp * gate_vals[..., None, None].astype(x.dtype)).sum(axis=2)
+    disp = disp.sum(axis=2)                                       # (G, S, E, C)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg, disp)                   # (G, E, C, D)
+    gg = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+    uu = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    h = jax.nn.silu(gg.astype(jnp.float32)).astype(xe.dtype) * uu
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    y = jnp.einsum("gecd,gsec->gsd", ye, combine)
+
+    if cfg.num_shared_experts:
+        y = y + common.swiglu(xg, params["shared_gate"], params["shared_up"],
+                              params["shared_down"])
+
+    # load-balance auxiliary loss (Switch eq. 4)
+    density = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32),
+                       axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * e * cfg.router_aux_weight
+    return y.reshape(b, l, d), aux

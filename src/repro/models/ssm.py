@@ -1,0 +1,249 @@
+"""SSM mixers: Mamba2 (Zamba2 backbone) and RWKV6 "Finch".
+
+Both share the gated linear-attention recurrence
+    S_t = diag(decay_t) S_{t-1} + k_t (outer) v_t,
+served by ``repro.kernels`` (chunked parallel form for prefill, recurrent
+single-step form for decode).  RWKV6's signature feature — *data-dependent
+decay* through a low-rank projection — is implemented faithfully
+[arXiv:2404.05892]; Mamba2 uses the SSD scalar-per-head decay
+[arXiv:2405.21060 as used by Zamba2, arXiv:2411.15242].
+
+State layout per layer:
+  mamba2: {"conv": (B, conv_w-1, conv_dim), "ssm": (B, H, N, P)}
+  rwkv6:  {"shift_tm": (B, D), "shift_cm": (B, D), "ssm": (B, H, K, V)}
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels.ssm_scan import MAX_NEG_LOGW
+from repro.models import common
+from repro.models.common import Array, ModelConfig, dense_init
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.resolved_ssm_heads
+    return dict(
+        d_inner=d_inner,
+        heads=heads,
+        head_dim=d_inner // heads,
+        state=cfg.ssm_state_dim,
+        conv_dim=d_inner + 2 * cfg.ssm_state_dim,  # x, B, C all convolved
+    )
+
+
+def init_mamba2(cfg: ModelConfig, key: Array) -> dict:
+    d = mamba2_dims(cfg)
+    ks = common.split_keys(key, 5)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * d["d_inner"] + 2 * d["state"] + d["heads"]), cfg.dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, d["conv_dim"]), cfg.dtype, scale=1.0),
+        "conv_b": jnp.zeros((d["conv_dim"],), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, d["heads"], dtype=jnp.float32)),
+        "D": jnp.ones((d["heads"],), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d["heads"],),
+                                              0.01, jnp.float32))),  # softplus^-1(0.01)
+        "norm_w": jnp.zeros((d["d_inner"],), cfg.dtype),
+        "out_proj": dense_init(ks[2], (d["d_inner"], cfg.d_model), cfg.dtype,
+                               scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    d = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d["conv_dim"]), dtype),
+        "ssm": jnp.zeros((batch, d["heads"], d["state"], d["head_dim"]), jnp.float32),
+    }
+
+
+def _mamba2_project(cfg: ModelConfig, params: dict, x: Array):
+    d = mamba2_dims(cfg)
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d["d_inner"], d["d_inner"] + d["conv_dim"]], axis=-1)
+    return z, xbc, dt, d
+
+
+def _mamba2_ssm_inputs(cfg, params, xbc_conv, dt, d):
+    """Post-conv activations -> (q, k, v, decay) in (B, H, L, ...) layout."""
+    b, l, _ = xbc_conv.shape
+    xbc_conv = jax.nn.silu(xbc_conv.astype(jnp.float32)).astype(xbc_conv.dtype)
+    xs, bs, cs = jnp.split(xbc_conv, [d["d_inner"], d["d_inner"] + d["state"]], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])      # (B, L, H)
+    # clamp per-step log-decay to the Pallas kernel's numeric contract
+    decay_h = jnp.exp(-jnp.clip(dt * jnp.exp(params["A_log"]),
+                                0.0, MAX_NEG_LOGW))                        # (B, L, H)
+    xh = xs.reshape(b, l, d["heads"], d["head_dim"])
+    # shared B/C across heads (single group)
+    q = jnp.broadcast_to(cs[:, :, None, :], (b, l, d["heads"], d["state"]))
+    k = jnp.broadcast_to(bs[:, :, None, :], (b, l, d["heads"], d["state"]))
+    v = xh * dt[..., None].astype(xh.dtype)                                # dt folds into v
+    decay = jnp.broadcast_to(decay_h[..., None], (b, l, d["heads"], d["state"]))
+    to_bhl = lambda t: jnp.moveaxis(t, 2, 1)                               # (B,H,L,·)
+    return to_bhl(q), to_bhl(k), to_bhl(v), to_bhl(decay), xh
+
+
+def mamba2_forward(cfg: ModelConfig, params: dict, x: Array,
+                   state: Optional[dict] = None) -> Tuple[Array, dict]:
+    """Full-sequence (prefill/train) pass. x: (B, L, D)."""
+    b, l, _ = x.shape
+    z, xbc, dt, d = _mamba2_project(cfg, params, x)
+    prev = init_mamba2_state(cfg, b, x.dtype) if state is None else state
+    # causal depthwise conv with carried state
+    ctx = jnp.concatenate([prev["conv"].astype(xbc.dtype), xbc], axis=1)
+    new_conv = ctx[:, -(cfg.ssm_conv - 1):, :]
+    xbc_conv = sum(ctx[:, i:i + l, :] * params["conv_w"][i] for i in range(cfg.ssm_conv))
+    xbc_conv = xbc_conv + params["conv_b"]
+    q, k, v, decay, xh = _mamba2_ssm_inputs(cfg, params, xbc_conv, dt, d)
+    out, s_new = kops.linear_scan(q, k, v, decay, bonus=None,
+                                  initial_state=prev["ssm"], use_kernel=cfg.use_flash)
+    y = jnp.moveaxis(out, 1, 2).astype(x.dtype)            # (B, L, H, P)
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, l, d["d_inner"])
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        params["norm_w"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"]), {"conv": new_conv, "ssm": s_new}
+
+
+def mamba2_decode(cfg: ModelConfig, params: dict, x: Array, state: dict) -> Tuple[Array, dict]:
+    """Single-token step. x: (B, 1, D)."""
+    b = x.shape[0]
+    z, xbc, dt, d = _mamba2_project(cfg, params, x)
+    ctx = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)  # (B, conv_w, C)
+    new_conv = ctx[:, 1:, :]
+    xbc_conv = jnp.einsum("bwc,wc->bc", ctx, params["conv_w"])[:, None, :] + params["conv_b"]
+    q, k, v, decay, xh = _mamba2_ssm_inputs(cfg, params, xbc_conv, dt, d)
+    out, s_new = kops.linear_scan_decode(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                         decay[:, :, 0], state["ssm"], bonus=None)
+    y = out.reshape(b, 1, d["heads"], d["head_dim"]).astype(x.dtype)
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, 1, d["d_inner"])
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        params["norm_w"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"]), {"conv": new_conv, "ssm": s_new}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 64  # low-rank dim of the data-dependent decay projection
+
+
+def rwkv6_dims(cfg: ModelConfig) -> Dict[str, int]:
+    heads = cfg.resolved_ssm_heads or cfg.d_model // 64
+    return dict(heads=heads, head_dim=cfg.d_model // heads)
+
+
+def init_rwkv6(cfg: ModelConfig, key: Array) -> dict:
+    d = cfg.d_model
+    dd = rwkv6_dims(cfg)
+    ks = common.split_keys(key, 12)
+    scale_out = 1.0 / max(1, cfg.num_layers) ** 0.5
+    return {
+        # time-mix interpolation coefficients (static mu per channel)
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(cfg.dtype),  # r,k,v,w,g
+        "w_r": dense_init(ks[1], (d, d), cfg.dtype),
+        "w_k": dense_init(ks[2], (d, d), cfg.dtype),
+        "w_v": dense_init(ks[3], (d, d), cfg.dtype),
+        "w_g": dense_init(ks[4], (d, d), cfg.dtype),
+        "w_o": dense_init(ks[5], (d, d), cfg.dtype, scale=scale_out),
+        # data-dependent decay: w_t = exp(-exp(w0 + (tanh(x A) B)))
+        "decay_w0": jnp.full((d,), -2.0, jnp.float32),
+        "decay_A": dense_init(ks[6], (d, RWKV_LORA), cfg.dtype),
+        "decay_B": dense_init(ks[7], (RWKV_LORA, d), cfg.dtype),
+        "bonus_u": dense_init(ks[8], (dd["heads"], dd["head_dim"]), jnp.float32, scale=1.0),
+        "ln_w": jnp.ones((d,), jnp.float32),
+        "ln_b": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "cm_mu": (jax.random.uniform(ks[9], (2, d), jnp.float32)).astype(cfg.dtype),
+        "cm_rk": dense_init(ks[10], (d, d), cfg.dtype),
+        "cm_kv": dense_init(ks[11], (d, int(3.5 * d) // 32 * 32), cfg.dtype),
+        "cm_vo": dense_init(ks[11], (int(3.5 * d) // 32 * 32, d), cfg.dtype, scale=scale_out),
+    }
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    dd = rwkv6_dims(cfg)
+    return {
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "ssm": jnp.zeros((batch, dd["heads"], dd["head_dim"], dd["head_dim"]), jnp.float32),
+    }
+
+
+def _token_shift(x: Array, prev: Array) -> Array:
+    """x: (B, L, D); prev: (B, D) = last token before this block."""
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _rwkv6_timemix_inputs(cfg, params, x, prev_tok):
+    b, l, d = x.shape
+    dd = rwkv6_dims(cfg)
+    xx = _token_shift(x, prev_tok)
+    mu = params["mu"].astype(jnp.float32)
+    mix = lambda i: (x.astype(jnp.float32) * mu[i] + xx.astype(jnp.float32) * (1 - mu[i])).astype(x.dtype)
+    r = jnp.einsum("bld,de->ble", mix(0), params["w_r"])
+    k = jnp.einsum("bld,de->ble", mix(1), params["w_k"])
+    v = jnp.einsum("bld,de->ble", mix(2), params["w_v"])
+    g = jnp.einsum("bld,de->ble", mix(4), params["w_g"])
+    # data-dependent decay (the RWKV6 contribution)
+    wx = jnp.tanh(jnp.einsum("bld,dr->blr", mix(3), params["decay_A"]).astype(jnp.float32))
+    w_log = params["decay_w0"] + jnp.einsum("blr,rd->bld", wx.astype(cfg.dtype),
+                                            params["decay_B"]).astype(jnp.float32)
+    # clamp per-step log-decay to the Pallas kernel's numeric contract
+    decay = jnp.exp(-jnp.clip(jnp.exp(w_log), 0.0, MAX_NEG_LOGW))      # (B, L, D)
+    hsplit = lambda t: jnp.moveaxis(t.reshape(b, l, dd["heads"], dd["head_dim"]), 2, 1)
+    return hsplit(r), hsplit(k), hsplit(v), hsplit(decay.astype(jnp.float32)), g
+
+
+def _rwkv6_out(cfg, params, out_bhlv, g, b, l):
+    dd = rwkv6_dims(cfg)
+    y = jnp.moveaxis(out_bhlv, 1, 2).reshape(b, l, cfg.d_model)
+    # per-head groupnorm == layer_norm applied per head; approximate with LN on D
+    y = common.layer_norm(y, params["ln_w"], params["ln_b"], cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("bld,de->ble", y, params["w_o"])
+
+
+def rwkv6_timemix(cfg: ModelConfig, params: dict, x: Array,
+                  state: Optional[dict], decode: bool) -> Tuple[Array, Array, Array]:
+    """Returns (out, new_ssm_state, new_shift). x: (B, L, D)."""
+    b, l, _ = x.shape
+    prev_tok = state["shift_tm"] if state is not None else jnp.zeros((b, cfg.d_model), x.dtype)
+    r, k, v, decay, g = _rwkv6_timemix_inputs(cfg, params, x, prev_tok)
+    s0 = state["ssm"] if state is not None else None
+    if decode:
+        out, s_new = kops.linear_scan_decode(r[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                             decay[:, :, 0], s0, bonus=params["bonus_u"])
+        out = out[:, :, None, :]
+    else:
+        out, s_new = kops.linear_scan(r, k, v, decay, bonus=params["bonus_u"],
+                                      initial_state=s0, use_kernel=cfg.use_flash)
+    y = _rwkv6_out(cfg, params, out, g, b, l)
+    return y, s_new, x[:, -1, :]
+
+
+def rwkv6_channelmix(cfg: ModelConfig, params: dict, x: Array,
+                     state: Optional[dict]) -> Tuple[Array, Array]:
+    b, l, _ = x.shape
+    prev_tok = state["shift_cm"] if state is not None else jnp.zeros((b, cfg.d_model), x.dtype)
+    xx = _token_shift(x, prev_tok)
+    mu = params["cm_mu"].astype(jnp.float32)
+    mix = lambda i: (x.astype(jnp.float32) * mu[i] + xx.astype(jnp.float32) * (1 - mu[i])).astype(x.dtype)
+    rr = jax.nn.sigmoid(jnp.einsum("bld,de->ble", mix(0), params["cm_rk"]).astype(jnp.float32))
+    kk = jnp.einsum("bld,de->ble", mix(1), params["cm_kv"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("blf,fd->bld", kk, params["cm_vo"])
+    return (rr.astype(x.dtype) * vv), x[:, -1, :]

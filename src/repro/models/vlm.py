@@ -1,0 +1,38 @@
+"""VLM support (InternVL2): stubbed vision frontend + LM backbone glue.
+
+Per the brief, the ViT/projector frontend is a STUB — ``vision_stub_embeds``
+supplies patch embeddings of the right shape (InternViT-300M: 1024-d patch
+embeddings, 256 tokens per 448px tile after pixel-shuffle), and the model
+under test is the InternLM2 language backbone that consumes them
+[arXiv:2404.16821].
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import Array, ModelConfig
+
+
+def vision_stub_embeds(cfg: ModelConfig, batch: int,
+                       key: Optional[Array] = None) -> Array:
+    """Precomputed patch embeddings stand-in: (B, vision_tokens, vision_dim)."""
+    shape = (batch, cfg.vision_tokens, cfg.vision_embed_dim)
+    if key is None:
+        return jnp.zeros(shape, jnp.float32)
+    return jax.random.normal(key, shape, jnp.float32) * 0.02
+
+
+def vlm_forward(cfg: ModelConfig, params: dict, tokens: Array,
+                patch_embeds: Array) -> Tuple[Array, Array]:
+    """Train pass over [vision prefix; text tokens]."""
+    return transformer.forward(cfg, params, tokens, prefix_embeds=patch_embeds)
+
+
+def vlm_prefill(cfg: ModelConfig, params: dict, tokens: Array,
+                patch_embeds: Array, max_len: int):
+    return transformer.prefill(cfg, params, tokens, max_len,
+                               prefix_embeds=patch_embeds)

@@ -1,0 +1,166 @@
+"""Three-term roofline from a compiled SPMD executable.
+
+  compute    = HLO_FLOPs   / (chips * peak FLOP/s)
+  memory     = HLO_bytes   / (chips * HBM bandwidth)
+  collective = coll_bytes  / (chips * ICI link bandwidth)
+
+``cost_analysis()`` supplies FLOPs/bytes; collective bytes are parsed from
+the partitioned HLO text (``compiled.as_text()``): we sum the *result*
+buffer sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, scaled to wire bytes per the op's
+algorithm (ring AG/RS move (n-1)/n of the result; AR moves 2x that;
+A2A/CP move the buffer once).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+# e.g.  %ag = bf16[4,128,1024]{2,1,0} all-gather(%x), ...
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _replica_groups_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if not m:
+        m2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if m2:
+            return int(m2.group(2))
+        return default
+    return len(m.group(1).split(","))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    wire_bytes: Dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    wire: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(4)
+        if m.group(1) is not None:   # tuple result: sum element shapes
+            nbytes = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(m.group(1)))
+        else:
+            nbytes = _shape_bytes(m.group(2), m.group(3))
+        g = max(2, _replica_groups_size(line, num_devices))
+        ring = (g - 1) / g
+        factor = {"all-gather": ring, "reduce-scatter": ring,
+                  "all-reduce": 2 * ring, "all-to-all": ring,
+                  "collective-permute": 1.0}[op]
+        counts[op] = counts.get(op, 0) + 1
+        wire[op] = wire.get(op, 0.0) + nbytes * factor
+    return CollectiveStats(counts, wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per-device
+    hlo_bytes: float          # per-device
+    coll_bytes: float         # per-device wire bytes
+    model_flops: float        # 6*N*D useful flops (global)
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    peak_mem_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> str:
+        return (f"{self.arch:26s} {self.shape:12s} {self.mesh:9s} "
+                f"compute={self.t_compute * 1e3:9.2f}ms "
+                f"memory={self.t_memory * 1e3:9.2f}ms "
+                f"coll={self.t_collective * 1e3:9.2f}ms "
+                f"-> {self.bottleneck:10s} useful={self.useful_ratio:6.3f}")
+
+
+def cost_terms(compiled, num_devices: int) -> Tuple[float, float]:
+    """(flops, bytes) per device from cost_analysis (already partitioned)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    return flops, nbytes
+
+
+def model_flops(cfg, kind: str, batch: int, seq_len: int) -> float:
+    """6*N*D for training, 2*N_active*D for inference (per step)."""
+    import jax
+    from repro.models import transformer
+
+    params_shape = jax.eval_shape(
+        lambda k: transformer.init(cfg, k), jax.random.PRNGKey(0))
+    n_total = sum(int(x.size) for x in jax.tree_util.tree_leaves(params_shape))
+    # active params for MoE: experts scaled to experts_per_token/num_experts
+    n_active = n_total
+    if cfg.num_experts:
+        flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+        expert_n = sum(
+            int(l.size) for p, l in flat
+            if any(getattr(k, "key", None) == "moe" for k in p)
+            and getattr(p[-1], "key", "") in ("w_gate", "w_up", "w_down"))
+        n_active = n_total - expert_n * (1 - cfg.experts_per_token / cfg.num_experts)
+    tokens = batch * (seq_len if kind != "decode" else 1)
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_active * tokens

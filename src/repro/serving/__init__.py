@@ -1,0 +1,4 @@
+"""LLM-side serving: batched prefill/decode engine for the assigned archs."""
+from repro.serving import engine
+
+__all__ = ["engine"]

@@ -1,0 +1,98 @@
+"""Batched serving engine for the assigned architectures.
+
+The stage-level serving ideas of the paper generalize to LLM serving as
+prefill/decode disaggregation (the paper itself cites DistServe/EPD as the
+LLM analogue); this module provides the executable stages:
+
+* ``prefill_step``  — full-prompt pass producing last-token logits + cache
+  (the compute-bound "Diffuse-like" stage; lowered for prefill_32k);
+* ``serve_step``    — ONE token against the KV/state cache (the
+  memory-bound stage; lowered for decode_32k / long_500k);
+* ``ServeEngine``   — a batch scheduler that groups queued requests into
+  padded batches and runs greedy generation (examples/serve_llm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+
+
+def prefill_step(cfg: ModelConfig, params, tokens, max_len: int,
+                 prefix_embeds=None):
+    return transformer.prefill(cfg, params, tokens, max_len, prefix_embeds)
+
+
+def serve_step(cfg: ModelConfig, params, tokens, caches, offset):
+    """ONE new token per sequence against the cache (the dry-run target)."""
+    return transformer.decode_step(cfg, params, tokens, caches, offset)
+
+
+@dataclasses.dataclass
+class GenRequest:
+    rid: int
+    prompt: np.ndarray            # (L,) int32  [or (K, L) audio]
+    max_new: int = 16
+    done: bool = False
+    output: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    """Greedy batched generation over padded same-length groups."""
+
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: List[GenRequest] = []
+        self._prefill = jax.jit(
+            lambda p, t: transformer.prefill(cfg, p, t, max_len))
+        self._decode = jax.jit(
+            lambda p, t, c, o: transformer.decode_step(cfg, p, t, c, o))
+
+    def submit(self, req: GenRequest):
+        self.queue.append(req)
+
+    def _pad_group(self) -> Tuple[List[GenRequest], np.ndarray]:
+        group = self.queue[: self.max_batch]
+        self.queue = self.queue[self.max_batch:]
+        lmax = max(r.prompt.shape[-1] for r in group)
+        padded = []
+        for r in group:
+            pad = lmax - r.prompt.shape[-1]
+            width = [(0, 0)] * (r.prompt.ndim - 1) + [(pad, 0)]  # left-pad
+            padded.append(np.pad(r.prompt, width))
+        return group, np.stack(padded)
+
+    def step(self) -> List[GenRequest]:
+        """Serve one batch group to completion; returns finished requests."""
+        if not self.queue:
+            return []
+        group, prompts = self._pad_group()
+        logits, cache, offset = self._prefill(self.params, jnp.asarray(prompts))
+        max_new = max(r.max_new for r in group)
+        outs = []
+        tok = jnp.argmax(logits[:, -1, ...], axis=-1)
+        for _ in range(max_new):
+            if self.cfg.modality == "audio_codec":
+                step_tok = tok.reshape(len(group), self.cfg.num_codebooks, 1)
+            else:
+                step_tok = tok.reshape(len(group), 1)
+            outs.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, step_tok, cache, offset)
+            offset = offset + 1
+            tok = jnp.argmax(logits[:, -1, ...], axis=-1)
+        gen = np.stack(outs, axis=1)
+        for i, r in enumerate(group):
+            r.output = gen[i, : r.max_new]
+            r.done = True
+        return group

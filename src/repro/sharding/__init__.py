@@ -1,0 +1,4 @@
+"""Distribution: partition specs per architecture + sequence parallelism."""
+from repro.sharding import partition, sequence_parallel
+
+__all__ = ["partition", "sequence_parallel"]

@@ -1,0 +1,222 @@
+"""Partition rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Conventions (single-pod mesh ("data", "model"); multi-pod prepends "pod"):
+
+* tensor parallelism on ``model``: attention/ffn projections shard their
+  hidden dimension; embeddings shard the vocab; MoE experts shard the
+  expert dimension (expert parallelism);
+* ``data`` (x ``pod``) carries the batch; decode caches shard sequence
+  across whatever axes the batch does not use (flash-decoding style — the
+  softmax max/sum over the sharded axis lowers to small all-reduces);
+* per-head scalars, norms, and small LoRA/conv params replicate.
+
+Rules are name-based over the param tree paths, so one function covers all
+ten architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+PyTree = Any
+
+# leaf-name -> (spec for the *unstacked* layer param)
+_COL = "col"     # shard last (output) dim on model
+_ROW = "row"     # shard first (input/contraction) dim on model
+_EXP = "expert"  # shard leading expert dim on model
+_REP = "rep"
+
+_RULES: Dict[str, str] = {
+    # embeddings / heads
+    "embed": "vocab_in",
+    "lm_head": "vocab_out",
+    "codebook_embed": "cb_embed",
+    "codebook_head": "cb_head",
+    "vision_proj": _REP,
+    # attention
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    # dense ffn
+    "w_gate": _COL, "w_up": _COL, "w_down": _ROW,
+    # moe
+    "router": _REP,
+    "shared_gate": _COL, "shared_up": _COL, "shared_down": _ROW,
+    # mamba2
+    "in_proj": _COL, "out_proj": _ROW,
+    "conv_w": "conv", "conv_b": "conv_b",
+    "A_log": _REP, "D": _REP, "dt_bias": _REP, "norm_w": "vec_model",
+    # rwkv6
+    "w_r": _COL, "w_k": _COL, "w_v": _COL, "w_g": _COL, "w_o": _ROW,
+    "decay_w0": _REP, "decay_A": _REP, "decay_B": _COL,
+    "bonus_u": _REP, "mu": _REP, "cm_mu": _REP,
+    "ln_w": _REP, "ln_b": _REP,
+    "cm_rk": _COL, "cm_kv": _COL, "cm_vo": _ROW,
+    # norms / misc
+    "ln1": _REP, "ln2": _REP, "q_norm": _REP, "k_norm": _REP,
+    "final_norm": _REP,
+}
+
+# moe expert tensors are distinguished by path ("moe" ancestor)
+_MOE_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _leaf_rule(path) -> Tuple[str, bool, bool]:
+    """(rule, is_stacked_layer_param, is_moe_expert)."""
+    names = [p.key for p in path if hasattr(p, "key")]
+    stacked = "blocks" in names
+    leaf = names[-1]
+    moe = "moe" in names and leaf in _MOE_EXPERT_LEAVES
+    return _RULES.get(leaf, _REP), stacked, moe
+
+
+def _spec_for(rule: str, ndim: int, stacked: bool, moe: bool, model: str
+              ) -> P:
+    lead = (None,) if stacked else ()
+    if moe:
+        # (E, D, F) / (E, F, D): expert parallelism on the expert dim
+        return P(*lead, model, None, None)
+    base = {
+        _COL: (None, model),
+        _ROW: (model, None),
+        "vocab_in": (model, None),
+        "vocab_out": (None, model),
+        "cb_embed": (None, model, None),
+        "cb_head": (None, None, model),
+        "conv": (None, model),
+        "conv_b": (model,),
+        "vec_model": (model,),
+        _REP: tuple([None] * (ndim - len(lead))),
+    }[rule]
+    spec = lead + base
+    assert len(spec) == ndim, (rule, ndim, spec)
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, params_shape: PyTree, *,
+                model_axis: str = "model") -> PyTree:
+    """PartitionSpec tree matching ``params_shape`` (from jax.eval_shape)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        rule, stacked, moe = _leaf_rule(path)
+        spec = _spec_for(rule, leaf.ndim, stacked, moe, model_axis)
+        # divisibility guard: replicate any axis that does not divide
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def validate_divisibility(specs: PyTree, shapes: PyTree, mesh: Mesh) -> PyTree:
+    """Replace specs whose sharded dims don't divide the mesh axis size
+    (e.g. 56 heads on a 16-way model axis shards the fused H*Dh dim
+    instead — if even that fails, replicate)."""
+    def fix(spec: P, leaf):
+        out = []
+        for dim, ax in enumerate(tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            out.append(ax if leaf.shape[dim] % size == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        fix, specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_shard(specs: PyTree, shapes: PyTree, mesh: Mesh,
+               data_axis: str = "data") -> PyTree:
+    """ZeRO-style sharding: additionally shard each tensor's largest
+    still-replicated dim over the data axis (when divisible).  Applied to
+    the AdamW moments (and optionally params = FSDP) it removes the
+    dominant optimizer-state term from peak memory at the cost of
+    per-step (reduce-)scatter/gather collectives."""
+    dsize = mesh.shape[data_axis]
+
+    def fix(spec: P, leaf):
+        dims = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        cands = [i for i, ax in enumerate(dims)
+                 if ax is None and leaf.shape[i] % dsize == 0
+                 and leaf.shape[i] >= dsize]
+        if not cands:
+            return P(*dims)
+        best = max(cands, key=lambda i: leaf.shape[i])
+        out = list(dims)
+        out[best] = data_axis
+        return P(*out)
+
+    return jax.tree_util.tree_map(fix, specs, shapes,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def state_specs(cfg: ModelConfig, state_shape, *, model_axis: str = "model",
+                zero_mesh: Optional[Mesh] = None, fsdp: bool = False):
+    """TrainState specs: params + AdamW moments share layouts; step scalar
+    replicates.  ``zero_mesh`` enables ZeRO sharding of the f32 moments
+    over the data axis; ``fsdp`` extends it to the params."""
+    from repro.training.loop import TrainState
+    from repro.training.optimizer import AdamWState
+    pspec = param_specs(cfg, state_shape.params, model_axis=model_axis)
+    mspec = param_specs(cfg, state_shape.opt.mu, model_axis=model_axis)
+    nspec = param_specs(cfg, state_shape.opt.nu, model_axis=model_axis)
+    if zero_mesh is not None:
+        mspec = zero_shard(mspec, state_shape.opt.mu, zero_mesh)
+        nspec = zero_shard(nspec, state_shape.opt.nu, zero_mesh)
+        if fsdp:
+            pspec = zero_shard(pspec, state_shape.params, zero_mesh)
+    return TrainState(params=pspec,
+                      opt=AdamWState(step=P(), mu=mspec, nu=nspec))
+
+
+def batch_specs(batch_shape: Dict[str, Any], data_axes) -> Dict[str, P]:
+    """Shard the batch dimension across the data(+pod) axes."""
+    return {k: P(data_axes, *([None] * (v.ndim - 1)))
+            for k, v in batch_shape.items()}
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: PyTree, batch: int,
+                mesh: Mesh, data_axes, model_axis: str = "model") -> PyTree:
+    """Decode-cache specs.
+
+    KV tensors ("k"/"v": (count, B, S, Hkv, Dh), "pos": (count, B, S)):
+    batch shards on the data axes when divisible; the sequence dim shards
+    on ``model`` — and on data+model when B=1 (long_500k flash-decoding
+    layout).  SSM/conv/shift states shard batch only.
+    """
+    daxes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    data_size = 1
+    for a in daxes:
+        data_size *= mesh.shape[a]
+    batch_ok = batch % data_size == 0 and batch >= data_size
+    b_ax = (data_axes if batch_ok else None)
+    s_ax = (model_axis if batch_ok else (*daxes, model_axis))
+
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        leaf_name = names[-1] if names else ""
+        if leaf_name in ("k", "v"):          # (count, B, S, Hkv, Dh)
+            sa = s_ax if leaf.shape[2] % (data_size * mesh.shape[model_axis]
+                                          if not batch_ok else
+                                          mesh.shape[model_axis]) == 0 else None
+            return P(None, b_ax, sa, None, None)
+        if leaf_name == "pos":               # (count, B, S)
+            sa = s_ax if leaf.shape[2] % (data_size * mesh.shape[model_axis]
+                                          if not batch_ok else
+                                          mesh.shape[model_axis]) == 0 else None
+            return P(None, b_ax, sa)
+        return P(None, b_ax, *([None] * (leaf.ndim - 2)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def named(tree_specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

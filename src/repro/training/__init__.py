@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, train state, loop, checkpointing."""
+from repro.training import checkpoint, loop, optimizer
+
+__all__ = ["checkpoint", "loop", "optimizer"]

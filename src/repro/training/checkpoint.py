@@ -1,0 +1,49 @@
+"""Checkpointing: pytree <-> .npz with path-encoded keys (no deps)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "||"
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(jax.tree_util.keystr((p,)) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(path: str, tree: PyTree) -> None:
+    flat, _ = _flatten(tree)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    # np.savez rejects some key chars when zipping; index keys positionally
+    keys = sorted(flat)
+    np.savez(tmp, __keys__=np.array(keys, dtype=object),
+             **{f"a{i}": flat[k] for i, k in enumerate(keys)})
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with np.load(path, allow_pickle=True) as data:
+        keys = list(data["__keys__"])
+        arrays = {k: data[f"a{i}"] for i, k in enumerate(keys)}
+    flat_like, treedef = _flatten(like)
+    assert set(arrays) == set(flat_like), (
+        f"checkpoint keys mismatch: {set(arrays) ^ set(flat_like)}")
+    leaves_like, tdef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_like:
+        key = _SEP.join(jax.tree_util.keystr((p,)) for p in path_k)
+        arr = arrays[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return tdef.unflatten(out)

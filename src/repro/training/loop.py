@@ -1,0 +1,85 @@
+"""Training loop: loss, train_step, and a simple driver.
+
+``train_step`` is the function the multi-pod dry-run lowers for the
+``train_4k`` input shape: forward + backward + AdamW update, with the MoE
+load-balance auxiliary loss folded in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Iterator, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from repro.training import optimizer as opt_lib
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: opt_lib.AdamWState
+
+
+def init_state(cfg: ModelConfig, key: jax.Array) -> TrainState:
+    params = transformer.init(cfg, key)
+    return TrainState(params=params, opt=opt_lib.init(params))
+
+
+def loss_fn(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ MoE aux).  batch: tokens/labels (B, L)
+    [or (B, K, L) audio; VLM batches add ``patch_embeds``]."""
+    logits, aux = transformer.forward(cfg, params, batch["tokens"],
+                                      prefix_embeds=batch.get("patch_embeds"))
+    labels = batch["labels"]
+    if cfg.modality == "audio_codec":
+        # logits (B, T, K, V); labels (B, K, T)
+        labels = jnp.moveaxis(labels, 1, 2)
+    else:
+        # VLM: score text positions only (logits cover [vision; text])
+        if logits.shape[1] != labels.shape[1]:
+            logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll) + aux
+    return loss, {"loss": loss, "nll": jnp.mean(nll), "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, ocfg: Optional[opt_lib.AdamWConfig] = None):
+    ocfg = ocfg or opt_lib.AdamWConfig()
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(state.params)
+        new_params, new_opt = opt_lib.update(ocfg, grads, state.opt, state.params)
+        metrics = dict(metrics, grad_norm=opt_lib.global_norm(grads),
+                       lr=opt_lib.schedule(ocfg, new_opt.step))
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, data: Iterator[Dict[str, jax.Array]],
+          num_steps: int, seed: int = 0,
+          ocfg: Optional[opt_lib.AdamWConfig] = None,
+          log_every: int = 10) -> Tuple[TrainState, list]:
+    """Single-host driver used by the examples and integration tests."""
+    state = init_state(cfg, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(cfg, ocfg))
+    history = []
+    t0 = time.perf_counter()
+    for i in range(num_steps):
+        batch = next(data)
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or i == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall"] = time.perf_counter() - t0
+            history.append(m)
+    return state, history

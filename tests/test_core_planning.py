@@ -1,0 +1,151 @@
+"""Orchestrator + Dispatcher invariants (incl. hypothesis properties)."""
+import random
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+import repro.configs as C
+from repro.core.dispatcher import Dispatcher
+from repro.core.orchestrator import Orchestrator
+from repro.core.placement import (PLACEMENT_TYPES, PRIMARY_PLACEMENTS,
+                                  PlacementPlan, VIRTUAL_REPLICAS,
+                                  primary_of_vr)
+from repro.core.profiler import Profiler
+from repro.core.request import Request
+
+PIPES = list(C.PIPELINE_IDS)
+
+
+@pytest.fixture(scope="module")
+def profilers():
+    return {p: Profiler(C.get(p)) for p in PIPES}
+
+
+def _random_reqs(pid, prof, rng, n=40):
+    from repro.core.workloads import MIXES
+    classes = [cls for mix in MIXES[pid].values() for cls, _ in mix]
+    out = []
+    for i in range(n):
+        res, sec = rng.choice(classes)
+        r = Request(pid, res, float(sec), arrival=rng.uniform(0, 100))
+        r.deadline = r.arrival + 2.5 * prof.pipeline_time(r)
+        out.append(r)
+    return out
+
+
+@pytest.mark.parametrize("pid", PIPES)
+def test_placement_covers_all_stages(profilers, pid):
+    prof = profilers[pid]
+    orch = Orchestrator(prof, num_chips=128)
+    reqs = _random_reqs(pid, prof, random.Random(0))
+    plan = orch.generate(reqs)
+    assert plan.num_units == 128 // prof.k_min
+    for s in "EDC":
+        assert plan.units_with(s), f"{pid}: no unit hosts stage {s}"
+    assert all(p in PLACEMENT_TYPES for p in plan.placements)
+
+
+@pytest.mark.parametrize("pid", PIPES)
+def test_optvr_monotone_feasibility(profilers, pid):
+    """OptVR picks the min-communication feasible type; every type above it
+    in the order must also be feasible (V3 = ⟨D⟩ has the least memory)."""
+    prof = profilers[pid]
+    orch = Orchestrator(prof, num_chips=128)
+    reqs = _random_reqs(pid, prof, random.Random(1))
+    for r in reqs:
+        vr = orch.opt_vr(r)
+        k = prof.optimal_degree(r, "D")
+        assert prof.fits(r, primary_of_vr(vr), k) or vr == 3
+        for earlier in range(vr):
+            assert not prof.fits(r, primary_of_vr(earlier), k)
+
+
+@given(st.integers(0, 10_000), st.integers(8, 64))
+@settings(max_examples=30, deadline=None)
+def test_split_conserves_units(seed, n_units):
+    prof = Profiler(C.get("sd3"))
+    rng = random.Random(seed)
+    rates = {"prim": rng.uniform(0.01, 10), "auxE": rng.uniform(0.01, 10),
+             "auxC": rng.uniform(0.01, 10)}
+    for vr in range(4):
+        counts = Orchestrator.split(n_units, vr, rates)
+        assert sum(counts.values()) == n_units, (vr, counts)
+        assert all(c >= 0 for c in counts.values())
+        assert primary_of_vr(vr) in counts
+
+
+@pytest.mark.parametrize("pid", PIPES)
+def test_dispatcher_respects_budgets_and_nodes(profilers, pid):
+    prof = profilers[pid]
+    orch = Orchestrator(prof, num_chips=128)
+    rng = random.Random(2)
+    reqs = _random_reqs(pid, prof, rng, n=60)
+    plan = orch.generate(reqs)
+    disp = Dispatcher(prof)
+    idle = set(range(plan.num_units))
+    free_at = {g: 0.0 for g in idle}
+    decisions = disp.dispatch(reqs, plan, idle, free_at, tau=0.0)
+    assert decisions, pid
+    used = set()
+    for dec in decisions:
+        # D units: correct type, intra-node, disjoint, idle
+        ptypes = {plan.placements[g] for g in dec.d_units}
+        assert len(ptypes) == 1 and "D" in ptypes.pop()
+        nodes = {plan.node_of(g) for g in dec.d_units}
+        assert len(nodes) == 1, "SP instance must be intra-node"
+        assert not (set(dec.d_units) & used)
+        used |= set(dec.d_units)
+        assert len(dec.d_units) == dec.degree
+        # E/C cover their stages
+        assert all("E" in plan.placements[g] for g in dec.e_units)
+        assert all("C" in plan.placements[g] for g in dec.c_units)
+        # memory feasibility (the F filter)
+        prim = plan.placements[dec.d_units[0]]
+        assert prof.fits(dec.request, prim, dec.degree)
+
+
+def test_dispatcher_prefers_low_comm_vr(profilers):
+    """With every type idle and feasible, V0 (no inter-stage comm) wins."""
+    prof = profilers["sd3"]
+    plan = PlacementPlan(["EDC"] * 8 + ["DC"] * 8 + ["ED"] * 8 + ["D"] * 4
+                         + ["E"] * 2 + ["C"] * 2, unit_size=prof.k_min)
+    disp = Dispatcher(prof)
+    r = Request("sd3", 512)
+    r.deadline = 1e9
+    idle = set(range(plan.num_units))
+    decisions = disp.dispatch([r], plan, idle, {g: 0.0 for g in idle}, 0.0)
+    assert decisions[0].vr_type == 0
+
+
+def test_aging_eventually_dispatches_late_request(profilers):
+    """W_r grows past the starvation threshold (App. C.2 aging)."""
+    prof = profilers["sd3"]
+    disp = Dispatcher(prof)
+    late = Request("sd3", 1536)
+    late.deadline = 0.1  # hopeless deadline
+    options, budgets = disp.build_options(
+        [late], tau=1000.0, idle_by_type={"EDC": 8, "DC": 0, "ED": 0, "D": 0})
+    assert options[0], "late request must still get (aged) options"
+    assert all(o.reward > 0 for o in options[0])
+
+
+def test_cross_node_sp_selects_across_nodes(profilers):
+    """Beyond-paper: pod-wide SP combines adjacent nodes when one node
+    cannot host the degree (EXPERIMENTS.md §Perf pair 4)."""
+    prof = profilers["sd3"]
+    plan = PlacementPlan(["EDC"] * 32, unit_size=1, units_per_node=8)
+    idle = set(range(32))
+    assert Dispatcher.select_units(plan, "EDC", 16, idle) is None
+    units = Dispatcher.select_units(plan, "EDC", 16, idle, cross_node=True)
+    assert units is not None and len(units) == 16
+
+
+def test_cross_node_profiler_extends_degrees(profilers):
+    import repro.configs as C
+    from repro.core.profiler import Profiler
+    base = profilers["flux"]
+    wide = Profiler(C.get("flux"), cross_node_sp=True)
+    assert wide.max_degree_units > base.max_degree_units
+    heavy = Request("flux", 4096)
+    assert wide.optimal_degree(heavy, "D") >= base.optimal_degree(heavy, "D")

@@ -1,0 +1,62 @@
+"""ILP solver: exactness vs brute force (hypothesis property tests)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import ilp
+
+
+@st.composite
+def instances(draw):
+    n = draw(st.integers(1, 5))
+    dims = draw(st.integers(1, 3))
+    budgets = [draw(st.integers(0, 8)) for _ in range(dims)]
+    options = []
+    for _ in range(n):
+        m = draw(st.integers(0, 4))
+        opts = [ilp.Option(dim=draw(st.integers(0, dims - 1)),
+                           usage=draw(st.sampled_from([1, 2, 4, 8])),
+                           reward=draw(st.floats(-5, 20, allow_nan=False,
+                                                 width=32)))
+                for _ in range(m)]
+        options.append(opts)
+    return options, budgets
+
+
+@given(instances())
+@settings(max_examples=150, deadline=None)
+def test_solver_matches_brute_force(inst):
+    options, budgets = inst
+    sol = ilp.solve(options, budgets)
+    assert sol.optimal
+    assert abs(sol.reward - ilp.brute_force(options, budgets)) < 1e-6
+
+
+@given(instances())
+@settings(max_examples=100, deadline=None)
+def test_solution_is_feasible(inst):
+    options, budgets = inst
+    sol = ilp.solve(options, budgets)
+    used = [0] * len(budgets)
+    for r, o in sol.choices.items():
+        assert o in options[r]
+        assert o.reward > 0
+        used[o.dim] += o.usage
+    for u, b in zip(used, budgets):
+        assert u <= b
+    # reward accounting
+    assert abs(sum(o.reward for o in sol.choices.values()) - sol.reward) < 1e-6
+
+
+def test_anytime_cap_returns_feasible():
+    import random
+    rng = random.Random(0)
+    options = [[ilp.Option(rng.randrange(4), rng.choice([1, 2, 4, 8]),
+                           rng.uniform(10, 1000)) for _ in range(8)]
+               for _ in range(300)]
+    budgets = [64, 32, 16, 16]
+    sol = ilp.solve(options, budgets, node_cap=5000, time_cap=0.05)
+    used = [0] * 4
+    for r, o in sol.choices.items():
+        used[o.dim] += o.usage
+    assert all(u <= b for u, b in zip(used, budgets))
+    assert sol.reward > 0

@@ -1,0 +1,94 @@
+"""Profiler calibration invariants (the paper's §2.1/§3 observations)."""
+import pytest
+
+import repro.configs as C
+from repro.core.profiler import HBM_BYTES, Profiler
+from repro.core.request import Request
+
+PIPES = list(C.PIPELINE_IDS)
+
+
+@pytest.fixture(scope="module")
+def profs():
+    return {p: Profiler(C.get(p)) for p in PIPES}
+
+
+def _mid_req(pid):
+    return Request(pid, 720, 4.0) if C.get(pid).is_video else Request(pid, 1024)
+
+
+@pytest.mark.parametrize("pid", PIPES)
+def test_diffuse_dominates(profs, pid):
+    """§2.1: Diffuse is > 70% of end-to-end time."""
+    p = profs[pid]
+    r = _mid_req(pid)
+    t_d = p.stage_time(r, "D", p.optimal_degree(r, "D") * p.k_min)
+    assert t_d / p.pipeline_time(r) > 0.5
+
+
+@pytest.mark.parametrize("pid", PIPES)
+def test_encode_is_parallelism_averse(profs, pid):
+    p = profs[pid]
+    r = _mid_req(pid)
+    assert p.optimal_degree(r, "E") == 1
+    assert p.speedup(r, "E", 8 * p.k_min) < 2.0
+
+
+@pytest.mark.parametrize("pid", ["sd3", "flux"])
+def test_fig3_optimal_degree_grows_with_resolution(profs, pid):
+    p = profs[pid]
+    degs = [p.optimal_degree(Request(pid, res), "D")
+            for res in (128, 512, 1024, 2048, 4096)]
+    assert degs == sorted(degs)
+    assert degs[0] == 1 and degs[-1] >= 4
+
+
+@pytest.mark.parametrize("pid", PIPES)
+def test_decode_scales_worse_than_diffuse(profs, pid):
+    p = profs[pid]
+    r = _mid_req(pid)
+    k = 8 * p.k_min
+    assert p.efficiency(r, "C", k) < p.efficiency(r, "D", k)
+
+
+def test_mp_fold_matches_memory_pressure(profs):
+    """Flux/HYV need k_min>1 (their Diffuse > 1 chip); sd3/cog do not."""
+    assert profs["sd3"].k_min == 1
+    assert profs["cogvideox"].k_min == 1
+    assert profs["flux"].k_min >= 2
+    assert profs["hunyuanvideo"].k_min >= 2
+
+
+def test_colocated_infeasibility_drives_disaggregation(profs):
+    """HYV cannot host ⟨EDC⟩ even with the MP fold -> always disaggregated;
+    B1-B4 (no fold) cannot host flux at all (the paper's OOM rows)."""
+    hyv = profs["hunyuanvideo"]
+    assert hyv.unit_param_bytes("EDC") > HBM_BYTES
+    flux_nofold = Profiler(C.get("flux"), force_k_min=1)
+    assert flux_nofold.unit_param_bytes("EDC") > HBM_BYTES
+
+
+@pytest.mark.parametrize("pid", PIPES)
+def test_memory_model_monotonicity(profs, pid):
+    p = profs[pid]
+    r = _mid_req(pid)
+    assert p.peak_mem(r, "D", 1) >= p.peak_mem(r, "D", 2)
+    assert p.peak_mem(r, "EDC", 1) >= p.peak_mem(r, "D", 1)
+    # the paper's Q_DC > Q_ED (since l_C >> l_E) holds for heavy requests;
+    # tiny latents under a 4096-dim T5-XXL condition can invert it
+    heavy = (Request(pid, 720, 8.0) if C.get(pid).is_video
+             else Request(pid, 4096))
+    assert p.comm_bytes(heavy, "DC") > p.comm_bytes(heavy, "ED")
+
+
+@pytest.mark.parametrize("pid", PIPES)
+def test_stage_times_positive_and_finite(profs, pid):
+    p = profs[pid]
+    from repro.core.workloads import MIXES
+    for mix in MIXES[pid].values():
+        for (res, sec), _ in mix:
+            r = Request(pid, res, float(sec))
+            for s in "EDC":
+                for k in (1, 2, 4, 8):
+                    t = p.stage_time(r, s, k * p.k_min)
+                    assert 0 < t < 3600

@@ -1,0 +1,117 @@
+"""Runtime Engine semantics: merging, Adjust-on-Dispatch, handoff buffers."""
+import pytest
+
+import repro.configs as C
+from repro.core.dispatcher import DispatchDecision
+from repro.core.placement import PlacementPlan
+from repro.core.profiler import DISPATCH_OVERHEAD, Profiler
+from repro.core.request import Request
+from repro.core.runtime import CAP_HB, RuntimeEngine
+from repro.core.simulator import SimConfig
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return Profiler(C.get("sd3"))
+
+
+def _req(prof, res=1024):
+    r = Request("sd3", res)
+    r.deadline = 1e9
+    return r
+
+
+def _plan(types):
+    return PlacementPlan(list(types), unit_size=1, units_per_node=8)
+
+
+def test_merging_execute_saves_overhead(prof):
+    """E+D+C colocated on one unit runs as merged atomic executions."""
+    plan = _plan(["EDC"] * 8)
+    eng = RuntimeEngine(prof, plan)
+    r = _req(prof)
+    dec = DispatchDecision(r, 0, 1, (0,), (0,), (0,))
+    times = eng.execute(dec, tau=0.0)
+    assert eng.stats.merged_runs == 2  # E+D and D+C both merged
+    assert times["E"][1] <= times["D"][0] + 1e-9
+    assert times["D"][1] <= times["C"][0] + 1e-9
+    # separate units: same stages, no merge, transfers appear
+    eng2 = RuntimeEngine(prof, _plan(["ED"] * 4 + ["C"] * 4))
+    dec2 = DispatchDecision(r, 2, 1, (0,), (0,), (4,))
+    eng2.execute(dec2, tau=0.0)
+    assert eng2.stats.merged_runs == 1   # only E+D merged
+    assert eng2.stats.device_pushes == 1  # D->C push
+
+
+def test_adjust_on_dispatch_defers_loads(prof):
+    """Placement switch updates metadata instantly; replica loads happen on
+    the first dispatch that needs them, and only there."""
+    plan = _plan(["EDC"] * 8)
+    eng = RuntimeEngine(prof, plan)
+    new = _plan(["DC"] * 4 + ["E"] * 4)
+    eng.apply_placement(new, tau=0.0)
+    assert eng.stats.placement_switches == 1
+    assert eng.stats.adjust_loads == 0          # nothing moved yet
+    assert eng.plan.placements[0] == "DC"
+    assert "E" in eng.units[4].resident or eng.units[4].resident == {"E", "D", "C"}
+    r = _req(prof)
+    dec = DispatchDecision(r, 1, 1, (0,), (4,), (0,))
+    eng.execute(dec, tau=0.0)
+    # E was already resident (old EDC) -> no load; nothing new needed
+    assert eng.stats.adjust_loads == 0
+    # now force a unit that never had C: switch an E unit to C
+    eng.apply_placement(_plan(["DC"] * 4 + ["E"] * 3 + ["C"]), tau=0.0)
+    dec2 = DispatchDecision(r, 1, 1, (1,), (4,), (7,))
+    pre = eng.stats.adjust_loads
+    eng.execute(dec2, tau=0.0)
+    assert eng.stats.adjust_loads == pre  # C resident from initial EDC too
+
+    # fresh engine where residency genuinely lacks the stage
+    eng3 = RuntimeEngine(prof, _plan(["E"] * 8))
+    eng3.apply_placement(_plan(["EDC"] * 8), tau=0.0)
+    dec3 = DispatchDecision(r, 0, 1, (0,), (0,), (0,))
+    eng3.execute(dec3, tau=0.0)
+    assert eng3.stats.adjust_loads == 2          # D and C loaded on dispatch
+    assert eng3.stats.adjust_load_time > 0
+
+
+def test_downtime_adjust_blocks_cluster(prof):
+    eng = RuntimeEngine(prof, _plan(["E"] * 8), adjust_on_dispatch=False)
+    cost = eng.apply_placement(_plan(["EDC"] * 8), tau=0.0,
+                               downtime_adjust=True)
+    assert cost > 0
+    assert eng.stats.downtime > 0
+    assert all(u.free_at >= cost for u in eng.units)
+
+
+def test_handoff_buffer_overflow_host_path(prof):
+    eng = RuntimeEngine(prof, _plan(["ED"] * 4 + ["C"] * 4))
+    eng.units[4].hb_staged = CAP_HB  # destination HB full
+    r = _req(prof, res=1536)
+    dec = DispatchDecision(r, 2, 1, (0,), (0,), (4,))
+    eng.execute(dec, tau=0.0)
+    assert eng.stats.host_path_pushes == 1
+    assert eng.stats.device_pushes == 0
+
+
+def test_reinstance_hot_set_is_free(prof):
+    eng = RuntimeEngine(prof, _plan(["EDC"] * 16))
+    r = _req(prof)
+    # contiguous intra-node set of 4 -> hot
+    eng.execute(DispatchDecision(r, 0, 4, (0, 1, 2, 3), (0, 1, 2, 3),
+                                 (0,)), tau=0.0)
+    assert eng.stats.lazy_group_inits == 0
+    # non-contiguous set -> lazy init once, then cached
+    eng.execute(DispatchDecision(r, 0, 2, (8, 10), (8, 10), (8,)), tau=100.0)
+    assert eng.stats.lazy_group_inits == 1
+    eng.execute(DispatchDecision(r, 0, 2, (8, 10), (8, 10), (8,)), tau=200.0)
+    assert eng.stats.lazy_group_inits == 1
+
+
+def test_fifo_reservation(prof):
+    """Plans on busy units start after the units free up."""
+    eng = RuntimeEngine(prof, _plan(["EDC"] * 8))
+    r1, r2 = _req(prof), _req(prof)
+    t1 = eng.execute(DispatchDecision(r1, 0, 1, (0,), (0,), (0,)), tau=0.0)
+    t2 = eng.execute(DispatchDecision(r2, 0, 1, (0,), (0,), (0,)), tau=0.0)
+    assert t2["E"][0] >= t1["C"][1] - 1e-9

@@ -1,0 +1,98 @@
+"""End-to-end behaviour: the paper's headline claims, at test scale."""
+import pytest
+
+from repro.core.baselines import BASELINES
+from repro.core.simulator import SimConfig, run_sim
+from repro.core.trident import TridentScheduler
+
+DUR = 60.0
+
+
+@pytest.fixture(scope="module")
+def flux_results():
+    out = {"trident": run_sim("flux", TridentScheduler, "medium", DUR)}
+    for b in ("B1", "B3", "B6"):
+        out[b] = run_sim("flux", BASELINES[b], "medium", DUR)
+    return out
+
+
+def test_colocated_baselines_oom_on_flux(flux_results):
+    """Fig. 10: B1-B4 OOM on Flux (no MP fold); stage-level systems do not."""
+    assert flux_results["B1"].oom
+    assert flux_results["B3"].oom
+    assert not flux_results["B6"].oom
+    assert not flux_results["trident"].oom
+
+
+def test_trident_beats_b6_on_flux(flux_results):
+    t, b6 = flux_results["trident"], flux_results["B6"]
+    assert t.slo_attainment > b6.slo_attainment
+    assert t.n_finished == t.n_requests
+
+
+def test_all_requests_complete(flux_results):
+    t = flux_results["trident"]
+    assert t.n_finished == t.n_requests
+    assert t.n_request_oom == 0
+
+
+def test_vr_distribution_prefers_low_comm(flux_results):
+    """Fig. 12: most requests land on the lowest-communication VR type."""
+    hist = flux_results["trident"].vr_histogram
+    total = sum(hist.values())
+    assert hist.get(0, 0) + hist.get(1, 0) > 0.8 * total
+
+
+def test_sd3_colocated_baselines_run():
+    """sd3 fits colocated (Table 2) — B1 must run, not OOM."""
+    r = run_sim("sd3", BASELINES["B1"], "light", 30.0)
+    assert not r.oom
+    assert r.n_finished > 0
+
+
+def test_trident_vs_b1_sd3_heavy():
+    t = run_sim("sd3", TridentScheduler, "heavy", DUR)
+    b1 = run_sim("sd3", BASELINES["B1"], "heavy", DUR)
+    assert not b1.oom
+    assert t.slo_attainment >= b1.slo_attainment
+
+
+def test_ablation_stage_aware_helps_flux():
+    full = run_sim("flux", TridentScheduler, "heavy", DUR)
+    wo = run_sim("flux", TridentScheduler, "heavy", DUR, stage_aware=False)
+    assert full.slo_attainment >= wo.slo_attainment
+
+
+def test_proactive_push_no_worse():
+    cfg_off = SimConfig(proactive_push=False)
+    on = run_sim("hunyuanvideo", TridentScheduler, "medium", DUR)
+    off = run_sim("hunyuanvideo", TridentScheduler, "medium", DUR,
+                  sim_cfg=cfg_off)
+    assert on.mean_latency <= off.mean_latency * 1.05
+
+
+def test_deterministic_given_seed():
+    a = run_sim("cogvideox", TridentScheduler, "medium", 30.0, seed=7)
+    b = run_sim("cogvideox", TridentScheduler, "medium", 30.0, seed=7)
+    assert a.slo_attainment == b.slo_attainment
+    assert a.mean_latency == b.mean_latency
+
+
+def test_dynamic_batching_improves_light_flood():
+    """App. E.1: batching same-class lightweight requests improves p95
+    under a light-request flood; and every batched request still finishes."""
+    on = run_sim("sd3", TridentScheduler, "dynamic", 120.0, rate=45.0)
+    off = run_sim("sd3", TridentScheduler, "dynamic", 120.0, rate=45.0,
+                  enable_batching=False)
+    assert on.n_finished == on.n_requests
+    assert on.p95_latency <= off.p95_latency
+    assert on.slo_attainment >= off.slo_attainment
+
+
+def test_cross_node_sp_reduces_heavy_latency():
+    """Beyond-paper pod-wide SP: heavy flux requests finish faster."""
+    base = run_sim("flux", TridentScheduler, "heavy", 120.0)
+    wide = run_sim("flux", TridentScheduler, "heavy", 120.0,
+                   cross_node_sp=True)
+    assert wide.mean_latency < base.mean_latency
+    assert wide.n_finished == wide.n_requests

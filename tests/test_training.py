@@ -1,0 +1,88 @@
+"""Training substrate: convergence, optimizer math, checkpoint, data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.data import pipeline as dp
+from repro.training import checkpoint, loop, optimizer as opt
+
+
+def test_loss_decreases_dense():
+    cfg = C.get_smoke("yi-9b")
+    dcfg = dp.DataConfig(batch=4, seq_len=32)
+    _, hist = loop.train(cfg, dp.iterator(cfg, dcfg), num_steps=25, log_every=5)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_loss_decreases_ssm():
+    cfg = C.get_smoke("rwkv6-3b")
+    dcfg = dp.DataConfig(batch=4, seq_len=32)
+    _, hist = loop.train(cfg, dp.iterator(cfg, dcfg), num_steps=25, log_every=5)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_adamw_schedule():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(opt.schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(opt.schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(opt.schedule(cfg, jnp.int32(100))) - 0.1) < 1e-6
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    cfg = opt.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=1000,
+                          weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.15
+
+
+def test_grad_clip_limits_update():
+    params = {"w": jnp.zeros((3,))}
+    state = opt.init(params)
+    cfg = opt.AdamWConfig(lr=1e-3, warmup_steps=0, grad_clip=1.0,
+                          weight_decay=0.0)
+    big = {"w": jnp.full((3,), 1e9)}
+    new, _ = opt.update(cfg, big, state, params)
+    assert np.isfinite(np.asarray(new["w"])).all()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = C.get_smoke("gemma2-9b")
+    params = jax.eval_shape(lambda: None) if False else None
+    from repro.models import transformer as tf
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, params)
+    back = checkpoint.restore(path, params)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_data_determinism_and_sharding_shapes():
+    cfg = C.get_smoke("deepseek-moe-16b")
+    dcfg = dp.DataConfig(batch=8, seq_len=16, seed=3)
+    a = dp.synthetic_batch(cfg, dcfg, 5)
+    b = dp.synthetic_batch(cfg, dcfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = dp.synthetic_batch(cfg, dcfg, 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    spec = dp.batch_spec(cfg, dcfg)
+    assert spec["tokens"].shape == a["tokens"].shape
+
+
+def test_vlm_train_step_masks_vision_positions():
+    cfg = C.get_smoke("internvl2-2b")
+    state = loop.init_state(cfg, jax.random.PRNGKey(0))
+    dcfg = dp.DataConfig(batch=2, seq_len=16)
+    batch = {k: jnp.asarray(v) for k, v in dp.synthetic_batch(cfg, dcfg, 0).items()}
+    step = jax.jit(loop.make_train_step(cfg))
+    _, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))

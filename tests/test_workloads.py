@@ -1,0 +1,60 @@
+"""Workload traces + orchestrator alpha-mode ablation."""
+import statistics
+
+import pytest
+
+import repro.configs as C
+from repro.core.orchestrator import Orchestrator
+from repro.core.profiler import Profiler
+from repro.core import workloads
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return Profiler(C.get("flux"))
+
+
+def test_steady_rates_and_mixes(prof):
+    tr = workloads.steady_trace("flux", "heavy", 600.0, prof, seed=1)
+    rate = len(tr) / 600.0
+    assert abs(rate - workloads.RATES["flux"]) < 0.3
+    # heavy mix skews to high resolutions (Table 5)
+    share_hi = sum(r.resolution >= 3072 for r in tr) / len(tr)
+    assert share_hi > 0.35
+    # arrivals sorted, deadlines = 2.5x optimal (AlpaServe convention)
+    for r in tr[:50]:
+        assert abs((r.deadline - r.arrival) / prof.pipeline_time(r) - 2.5) < 1e-6
+
+
+def test_dynamic_trace_shifts_mix(prof):
+    tr = workloads.dynamic_trace("flux", 600.0, prof, seed=2)
+    span = 600.0 / len(workloads.DYNAMIC_PATTERN)
+    first = [r for r in tr if r.arrival < span]
+    heavy_span_idx = 2  # pattern[2] is 70% heavy
+    heavy = [r for r in tr if heavy_span_idx * span <= r.arrival
+             < (heavy_span_idx + 1) * span]
+    mean_res = lambda rs: statistics.mean(r.resolution for r in rs)
+    assert mean_res(heavy) > mean_res(first)
+
+
+def test_proprietary_trace_tidal(prof):
+    tr = workloads.proprietary_trace("flux", 600.0, prof, seed=3)
+    buckets = [0] * 10
+    for r in tr:
+        buckets[min(9, int(r.arrival / 60))] += 1
+    assert max(buckets) > 2 * (min(buckets) + 1)   # pronounced tide
+
+
+def test_alpha_mode_demand_vs_count(prof):
+    """Demand weighting provisions more D-capacity for heavy-skewed mixes
+    than count weighting (the beyond-paper orchestrator refinement)."""
+    tr = workloads.steady_trace("flux", "heavy", 300.0, prof, seed=4)
+    demand = Orchestrator(prof, 128, alpha_mode="demand").generate(tr)
+    count = Orchestrator(prof, 128, alpha_mode="count").generate(tr)
+    heavy_cap = lambda plan: sum(
+        n for t, n in plan.type_histogram().items() if t in ("DC", "D"))
+    assert heavy_cap(demand) >= heavy_cap(count)
+    # both remain valid full-coverage plans
+    for plan in (demand, count):
+        for s in "EDC":
+            assert plan.units_with(s)
