@@ -36,7 +36,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-style fast pass: e2e smoke set only, with the "
+                         "event-vs-tick speedup check (BENCH_event_sim.json)")
     args = ap.parse_args()
+    if args.smoke:
+        t0 = time.perf_counter()
+        print("# --- e2e (smoke) ---", flush=True)
+        from benchmarks import e2e
+        emit(e2e.run_smoke())
+        print(f"# e2e smoke took {time.perf_counter() - t0:.1f}s", flush=True)
+        sys.exit(0)
     mods = [args.only] if args.only else MODULES
     ok = True
     for name in mods:

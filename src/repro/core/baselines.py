@@ -14,7 +14,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.dispatcher import DispatchDecision, Dispatcher
 from repro.core.placement import PlacementPlan
-from repro.core.profiler import HBM_BYTES, Profiler
+from repro.core.profiler import HBM_BYTES, MEM_RESERVE, Profiler
 from repro.core.request import Request
 from repro.core.simulator import Scheduler, SimConfig, Simulator
 from repro.core.workloads import MIXES
@@ -31,7 +31,7 @@ class _ColocatedBase(Scheduler):
     FORCE_KMIN = 1   # no MP fold — the paper's colocated-system setting
 
     def initial_placement(self) -> Optional[PlacementPlan]:
-        if self.prof.unit_param_bytes("EDC") + 512 * 2 ** 20 > HBM_BYTES:
+        if self.prof.unit_param_bytes("EDC") + MEM_RESERVE > HBM_BYTES:
             return None   # OOM: the whole pipeline cannot colocate
         n = self.sim_cfg.num_chips // self.prof.k_min
         return PlacementPlan(["EDC"] * n, unit_size=self.prof.k_min,
@@ -60,7 +60,7 @@ class B1StaticPipeline(_ColocatedBase):
     def tick(self, sim: Simulator, tau: float) -> List[DispatchDecision]:
         out = []
         avail = set(sim.engine.idle_units(tau))
-        for req in sorted(list(sim.pending), key=lambda r: r.arrival):
+        for req in sorted(sim.pending, key=lambda r: r.arrival):
             units = Dispatcher.select_units(sim.engine.plan, "EDC",
                                             self.k_static, avail)
             if units is None:
@@ -111,7 +111,7 @@ class B2BucketedPipeline(_ColocatedBase):
     def tick(self, sim: Simulator, tau: float) -> List[DispatchDecision]:
         out = []
         avail = set(sim.engine.idle_units(tau))
-        for req in sorted(list(sim.pending), key=lambda r: r.arrival):
+        for req in sorted(sim.pending, key=lambda r: r.arrival):
             k = self.prof.optimal_degree(req, "D")
             bucket = {g for g in avail if self.bucket_of_unit.get(g, 1) == k}
             units = Dispatcher.select_units(sim.engine.plan, "EDC", k, bucket)
@@ -133,7 +133,7 @@ class B3DynamicPipelineFIFO(_ColocatedBase):
     def tick(self, sim: Simulator, tau: float) -> List[DispatchDecision]:
         out = []
         avail = set(sim.engine.idle_units(tau))
-        for req in sorted(list(sim.pending), key=lambda r: r.arrival):
+        for req in sorted(sim.pending, key=lambda r: r.arrival):
             k = self.prof.optimal_degree(req, "D")
             units = Dispatcher.select_units(sim.engine.plan, "EDC", k, avail)
             if units is None:
@@ -165,7 +165,7 @@ class B4DynamicPipelineSRTF(_ColocatedBase):
     def tick(self, sim: Simulator, tau: float) -> List[DispatchDecision]:
         out = []
         avail = set(sim.engine.idle_units(tau))
-        for req in sorted(list(sim.pending), key=lambda r: srtf_key(self.prof, r, tau)):
+        for req in sorted(sim.pending, key=lambda r: srtf_key(self.prof, r, tau)):
             k = self.prof.optimal_degree(req, "D")
             units = Dispatcher.select_units(sim.engine.plan, "EDC", k, avail)
             if units is None:
@@ -251,7 +251,7 @@ class B5BucketedStage(_StageDisaggBase):
         out = []
         avail = set(sim.engine.idle_units(tau))
         free_at = sim.engine.free_at()
-        for req in sorted(list(sim.pending), key=lambda r: r.arrival):
+        for req in sorted(sim.pending, key=lambda r: r.arrival):
             k = self.prof.optimal_degree(req, "D")
             bucket = {g for g in avail if self.bucket_of_unit.get(g, 0) == k}
             units = Dispatcher.select_units(sim.engine.plan, "D", k, bucket)
@@ -274,7 +274,7 @@ class B6DynamicStageSRTF(_StageDisaggBase):
         out = []
         avail = set(sim.engine.idle_units(tau))
         free_at = sim.engine.free_at()
-        for req in sorted(list(sim.pending), key=lambda r: srtf_key(self.prof, r, tau)):
+        for req in sorted(sim.pending, key=lambda r: srtf_key(self.prof, r, tau)):
             k = self.prof.optimal_degree(req, "D")
             units = Dispatcher.select_units(sim.engine.plan, "D", k, avail)
             if units is None:

@@ -65,6 +65,9 @@ class Dispatcher:
         self.max_batch = max_batch
         self.solver_time_cap = solver_time_cap
         self.last_solve_stats: Dict[str, float] = {}
+        # previous solve's surviving (dim, usage) per request id — warm-starts
+        # the ILP incumbent under steady load (requests pending across ticks)
+        self._warm: Dict[int, Tuple[int, int]] = {}
 
     # -- reward / penalty (App. C.2) ----------------------------------------
 
@@ -190,7 +193,12 @@ class Dispatcher:
         idle_by_type = {t: sum(1 for g in plan.units_of_type(t) if g in idle_units)
                         for t in PRIMARY_PLACEMENTS}
         options, budgets = self.build_options(reqs, tau, idle_by_type)
-        sol = ilp.solve(options, budgets, time_cap=self.solver_time_cap)
+        warm = {ri: self._warm[req.rid] for ri, req in enumerate(reqs)
+                if req.rid in self._warm}
+        sol = ilp.solve(options, budgets, time_cap=self.solver_time_cap,
+                        warm=warm)
+        self._warm = {reqs[ri].rid: (opt.dim, opt.usage)
+                      for ri, opt in sol.choices.items()}
         self.last_solve_stats = {"nodes": sol.nodes, "optimal": sol.optimal,
                                  "reward": sol.reward, "n_reqs": len(reqs)}
 

@@ -12,6 +12,17 @@ Solved exactly by depth-first branch-and-bound with an admissible bound
 cap keeps per-tick latency bounded (the incumbent is returned if hit, making
 the solver anytime) — matching the paper's sub-100 ms per-tick budget
 (Table 4).  Cross-checked against brute force in tests/test_ilp.py.
+
+Hot-path refinements (all exactness-preserving):
+  * options whose usage exceeds their dimension's budget are dropped up
+    front, which also tightens the additive suffix bound;
+  * cross-dimension dominance: an option on a *slack* dimension (one whose
+    budget covers every request's largest option there, so it can never be
+    binding) prunes any option of the same request with no more reward —
+    swapping into a slack dimension can never break feasibility;
+  * ``warm`` re-seeds the incumbent from the previous tick's surviving
+    (dim, usage) choices, so the branch-and-bound starts near last tick's
+    optimum and prunes far more aggressively under steady load.
 """
 from __future__ import annotations
 
@@ -37,13 +48,22 @@ class Solution:
     optimal: bool
 
 
-def _greedy(options: Sequence[Sequence[Option]], budgets: List[int]) -> Tuple[Dict[int, Option], float]:
-    """Initial incumbent: requests by best reward desc, best feasible option."""
-    order = sorted(range(len(options)),
-                   key=lambda r: -max((o.reward for o in options[r]), default=0.0))
+def _greedy(options: Sequence[Sequence[Option]], budgets: List[int],
+            seed: Optional[Dict[int, Option]] = None
+            ) -> Tuple[Dict[int, Option], float]:
+    """Incumbent: honor ``seed`` choices first (feasibility-checked), then
+    fill the rest by best reward desc, best feasible option."""
     rem = list(budgets)
     chosen: Dict[int, Option] = {}
     total = 0.0
+    if seed:
+        for r, o in seed.items():
+            if o.usage <= rem[o.dim]:
+                chosen[r] = o
+                rem[o.dim] -= o.usage
+                total += o.reward
+    order = sorted((r for r in range(len(options)) if r not in chosen),
+                   key=lambda r: -max((o.reward for o in options[r]), default=0.0))
     for r in order:
         best = None
         for o in sorted(options[r], key=lambda o: (-o.reward, o.usage)):
@@ -58,17 +78,45 @@ def _greedy(options: Sequence[Sequence[Option]], budgets: List[int]) -> Tuple[Di
 
 
 def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
-          node_cap: int = 200_000, time_cap: float = 0.2) -> Solution:
-    """Maximize total reward.  ``options[r]`` lists request r's choices."""
+          node_cap: int = 200_000, time_cap: float = 0.2,
+          warm: Optional[Dict[int, Tuple[int, int]]] = None) -> Solution:
+    """Maximize total reward.  ``options[r]`` lists request r's choices.
+
+    ``warm`` maps request index -> (dim, usage) chosen on a previous solve
+    of a similar instance; it only seeds the incumbent (rewards are re-read
+    from the current options), so optimality claims are unaffected.
+    """
     n = len(options)
     budgets = list(budgets)
 
-    # Pareto-prune per request: drop options dominated in (reward, usage)
+    # feasibility filter: an option can never fit if its usage alone
+    # exceeds its dimension's budget
+    feasible: List[List[Option]] = [
+        [o for o in opts if o.reward > 0 and o.usage <= budgets[o.dim]]
+        for opts in options]
+
+    # slack dimensions: budget covers every request's largest option there,
+    # so the dimension can never be binding in any solution
+    max_use = [0] * len(budgets)
+    for opts in feasible:
+        per_dim: Dict[int, int] = {}
+        for o in opts:
+            per_dim[o.dim] = max(per_dim.get(o.dim, 0), o.usage)
+        for d, u in per_dim.items():
+            max_use[d] += u
+    slack = [max_use[d] <= budgets[d] for d in range(len(budgets))]
+
+    # dominance prune per request:
+    #   * same dim: dominated in (reward, usage) — classic Pareto;
+    #   * cross dim: any option on a slack dimension dominates options with
+    #     no more reward (swapping to it can never break feasibility).
     pruned: List[List[Option]] = []
-    for opts in options:
+    for opts in feasible:
+        slack_best = max((o.reward for o in opts if slack[o.dim]), default=None)
         keep: List[Option] = []
         for o in sorted(opts, key=lambda o: (o.usage, -o.reward)):
-            if o.reward <= 0:
+            if (slack_best is not None and o.reward < slack_best
+                    and not slack[o.dim]):
                 continue
             if any(p.dim == o.dim and p.reward >= o.reward and p.usage <= o.usage
                    for p in keep):
@@ -76,19 +124,47 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
             keep.append(o)
         pruned.append(keep)
 
-    # order: largest best-reward first (tightens the additive bound quickly)
+    # order: largest best-reward first (tightens the additive bound quickly);
+    # requests with *identical* option lists sort adjacently so the DFS can
+    # break their symmetry (steady traffic yields many same-class requests
+    # with bit-identical rewards)
     best_reward = [max((o.reward for o in opts), default=0.0) for opts in pruned]
-    order = sorted(range(n), key=lambda r: -best_reward[r])
+    sig = [tuple(sorted((o.dim, o.usage, o.reward) for o in opts))
+           for opts in pruned]
+    order = sorted(range(n), key=lambda r: (-best_reward[r], sig[r]))
     # suffix bound: best achievable from request position j onward
     suffix = [0.0] * (n + 1)
     for j in range(n - 1, -1, -1):
         suffix[j] = suffix[j + 1] + best_reward[order[j]]
+    # symmetry: skipping request j entirely makes every identical following
+    # request interchangeable with it, so the skip branch may jump the group
+    skip_to = list(range(1, n + 1))
+    for j in range(n - 2, -1, -1):
+        if sig[order[j]] == sig[order[j + 1]]:
+            skip_to[j] = skip_to[j + 1]
 
+    seed: Dict[int, Option] = {}
+    if warm:
+        for r, (dim, usage) in warm.items():
+            if 0 <= r < n:
+                for o in pruned[r]:
+                    if o.dim == dim and o.usage == usage:
+                        seed[r] = o
+                        break
     incumbent, inc_reward = _greedy(pruned, budgets)
+    if seed:
+        warm_inc, warm_reward = _greedy(pruned, budgets, seed=seed)
+        if warm_reward > inc_reward:
+            incumbent, inc_reward = warm_inc, warm_reward
     state = {"best": inc_reward, "choices": dict(incumbent), "nodes": 0,
              "t0": time.perf_counter(), "capped": False}
 
-    def dfs(j: int, rem: List[int], cur: float, chosen: Dict[int, Option]):
+    # pre-sort each request's options best-reward-first once (the DFS used
+    # to re-sort at every node on the hot path)
+    by_reward = [sorted(opts, key=lambda o: -o.reward) for opts in pruned]
+
+    def dfs(j: int, rem: List[int], cap_rem: int, cur: float,
+            chosen: Dict[int, Option]):
         if state["capped"]:
             return
         state["nodes"] += 1
@@ -99,20 +175,29 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
         if cur > state["best"]:
             state["best"] = cur
             state["choices"] = dict(chosen)
-        if j >= n or cur + suffix[j] <= state["best"] + 1e-12:
+        if j >= n:
+            return
+        # capacity-aware admissible bound: every option consumes >= 1 unit,
+        # so at most cap_rem more requests can be served; ``order`` is
+        # reward-descending, so their best case is the next cap_rem entries
+        # of the suffix array.  This is what lets backlog >> capacity
+        # instances (the dispatch flood case) prove optimality quickly
+        # instead of burning the node cap.
+        bound = suffix[j] - suffix[min(n, j + cap_rem)]
+        if cur + bound <= state["best"] + 1e-12:
             return
         r = order[j]
         # try options best-first, then the skip branch
-        for o in sorted(pruned[r], key=lambda o: -o.reward):
+        for o in by_reward[r]:
             if o.usage <= rem[o.dim]:
                 rem[o.dim] -= o.usage
                 chosen[r] = o
-                dfs(j + 1, rem, cur + o.reward, chosen)
+                dfs(j + 1, rem, cap_rem - o.usage, cur + o.reward, chosen)
                 del chosen[r]
                 rem[o.dim] += o.usage
-        dfs(j + 1, rem, cur, chosen)
+        dfs(skip_to[j], rem, cap_rem, cur, chosen)
 
-    dfs(0, list(budgets), 0.0, {})
+    dfs(0, list(budgets), sum(budgets), 0.0, {})
     return Solution(choices=state["choices"], reward=state["best"],
                     nodes=state["nodes"], optimal=not state["capped"])
 

@@ -6,6 +6,10 @@ engine).  Placement-switch trigger (§5.3): the fastest stage's throughput
 at least 1.5x the slowest — with a secondary congestion signal (dispatch
 backlog vs idle primary capacity) to catch starvation transients where
 throughput ratios alone are uninformative.
+
+Windowed aggregates (per-stage counts, per-placement busy-time sums) are
+maintained incrementally on record/trim, so every query is O(1) in the
+window size — this sits on the scheduler wake-up hot path.
 """
 from __future__ import annotations
 
@@ -26,12 +30,20 @@ class Monitor:
         self._completions: Deque[Tuple[float, str, str, float]] = collections.deque()
         self._backlog: Deque[Tuple[float, int, int]] = collections.deque()
         self.last_switch: float = -1e9
+        # incremental window aggregates (kept in lockstep with _completions)
+        self._stage_counts: Dict[str, int] = collections.defaultdict(int)
+        self._ptype_sums: Dict[str, float] = collections.defaultdict(float)
+        self._ptype_counts: Dict[str, int] = collections.defaultdict(int)
 
     # -- recording -------------------------------------------------------------
 
     def record_stage(self, tau: float, stage: str, ptype: str,
                      duration: float = 0.0):
         self._completions.append((tau, stage, ptype, duration))
+        self._stage_counts[stage] += 1
+        if duration > 0:
+            self._ptype_sums[ptype] += duration
+            self._ptype_counts[ptype] += 1
         self._trim(tau)
 
     def record_backlog(self, tau: float, pending: int, idle_primary: int):
@@ -39,16 +51,34 @@ class Monitor:
         self._trim(tau)
 
     def _trim(self, tau: float):
-        for q in (self._completions, self._backlog):
-            while q and q[0][0] < tau - self.t_win:
-                q.popleft()
+        cutoff = tau - self.t_win
+        q = self._completions
+        while q and q[0][0] < cutoff:
+            _, s, p, dur = q.popleft()
+            self._stage_counts[s] -= 1
+            if dur > 0:
+                self._ptype_sums[p] -= dur
+                self._ptype_counts[p] -= 1
+        b = self._backlog
+        while b and b[0][0] < cutoff:
+            b.popleft()
 
     # -- queries ---------------------------------------------------------------
 
+    def next_window_boundary(self) -> Optional[float]:
+        """Earliest future time a retained sample exits the sliding window.
+
+        The event-driven simulator wakes at these boundaries so windowed
+        rates (and the placement-switch trigger) are re-evaluated exactly
+        when they can change, instead of every tick."""
+        heads = [q[0][0] for q in (self._completions, self._backlog) if q]
+        if not heads:
+            return None
+        return min(heads) + self.t_win
+
     def stage_rates(self, tau: float) -> Dict[str, float]:
         self._trim(tau)
-        counts = collections.Counter(s for _, s, _, _ in self._completions)
-        return {s: counts.get(s, 0) / self.t_win for s in "EDC"}
+        return {s: self._stage_counts.get(s, 0) / self.t_win for s in "EDC"}
 
     def placement_rates(self, tau: float, plan_hist: Dict[str, int],
                         min_count: int = 8) -> Dict[str, float]:
@@ -56,29 +86,27 @@ class Monitor:
         placement type.  Throughput-over-window would conflate idleness with
         slowness and mis-drive the Split — capacity is what balances rates."""
         self._trim(tau)
-        sums: Dict[str, float] = collections.defaultdict(float)
-        counts: Dict[str, int] = collections.Counter()
-        for _, _, p, dur in self._completions:
-            if dur > 0:
-                sums[p] += dur
-                counts[p] += 1
-        return {p: counts[p] / sums[p] for p in counts
-                if counts[p] >= min_count and sums[p] > 0}
+        return {p: self._ptype_counts[p] / self._ptype_sums[p]
+                for p in self._ptype_counts
+                if self._ptype_counts[p] >= min_count and self._ptype_sums[p] > 0}
 
     def pattern_change(self, tau: float, cooldown: float = 60.0) -> bool:
         if tau - self.last_switch < cooldown or tau < self.t_win / 2:
             return False   # warm-up: pipeline lag makes early ratios noise
         self._trim(tau)
-        counts = collections.Counter(s for _, s, _, _ in self._completions)
+        counts = self._stage_counts
         trigger = False
         if all(counts.get(s, 0) >= MIN_SAMPLES for s in "EDC"):
             rates = [counts.get(s, 0) for s in "EDC"]
             if max(rates) / min(rates) >= SWITCH_RATIO:
                 trigger = True
         # congestion: backlog persistently exceeds idle primary capacity
+        # (peek the newest MIN_SAMPLES right-to-left; copying the whole
+        # window deque per wake-up is O(T_win))
         if len(self._backlog) >= MIN_SAMPLES:
-            recent = list(self._backlog)[-MIN_SAMPLES:]
-            if all(p > 2 * max(1, i) for _, p, i in recent):
+            it = reversed(self._backlog)
+            if all(p > 2 * max(1, i)
+                   for _, p, i in (next(it) for _ in range(MIN_SAMPLES))):
                 trigger = True
         if trigger:
             self.last_switch = tau

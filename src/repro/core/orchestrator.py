@@ -18,7 +18,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.core.placement import (AUXILIARY_PLACEMENTS, C, D, DC, E, ED, EDC,
                                   PRIMARY_PLACEMENTS, PlacementPlan,
                                   VIRTUAL_REPLICAS, primary_of_vr)
-from repro.core.profiler import Profiler
+from repro.core.profiler import HBM_BYTES, MEM_RESERVE, Profiler
 from repro.core.request import Request
 
 
@@ -157,9 +157,24 @@ class Orchestrator:
 
     # -- Algorithm 2 main -----------------------------------------------------------
 
+    def feasible(self) -> bool:
+        """A plan exists iff there is at least one unit and every stage's
+        MP-folded parameters fit a single unit (V3 disaggregates fully, so
+        per-stage fit is both necessary and sufficient)."""
+        if self.num_units < 1:
+            return False
+        return all(self.prof.unit_param_bytes(s) + MEM_RESERVE <= HBM_BYTES
+                   for s in "EDC")
+
     def generate(self, reqs: Sequence[Request],
                  measured_rates: Optional[Dict[str, float]] = None
-                 ) -> PlacementPlan:
+                 ) -> Optional[PlacementPlan]:
+        """Algorithm 2.  Returns ``None`` when no feasible placement exists —
+        the same contract ``Scheduler.initial_placement`` exposes, so both
+        bootstrap and re-placement callers handle infeasibility uniformly
+        (the simulator reports OOM; ``maybe_replace`` keeps the old plan)."""
+        if not self.feasible():
+            return None
         sample = list(reqs)
         if not sample:
             # bootstrap with a nominal mid-size request

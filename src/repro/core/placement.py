@@ -63,11 +63,32 @@ class PlacementPlan:
     def node_of(self, unit: int) -> int:
         return unit // self.units_per_node
 
+    def _index(self):
+        """Lazy unit indices (plans are immutable after construction): these
+        lookups run on every scheduler wake-up."""
+        idx = self.__dict__.get("_idx")
+        if idx is None:
+            by_type: Dict[str, List[int]] = {}
+            with_stage: Dict[str, List[int]] = {}
+            for g, p in enumerate(self.placements):
+                by_type.setdefault(p, []).append(g)
+                for s in p:
+                    with_stage.setdefault(s, []).append(g)
+            primary = frozenset(g for g, p in enumerate(self.placements)
+                                if p in PRIMARY_PLACEMENTS)
+            idx = self.__dict__["_idx"] = (by_type, with_stage, primary)
+        return idx
+
     def units_with(self, stage: str) -> List[int]:
-        return [g for g, p in enumerate(self.placements) if stage in p]
+        return self._index()[1].get(stage, [])
 
     def units_of_type(self, ptype: str) -> List[int]:
-        return [g for g, p in enumerate(self.placements) if p == ptype]
+        return self._index()[0].get(ptype, [])
+
+    @property
+    def primary_units(self) -> FrozenSet[int]:
+        """Units whose placement carries the D stage."""
+        return self._index()[2]
 
     def count_of_type(self, ptype: str) -> int:
         return sum(1 for p in self.placements if p == ptype)

@@ -36,6 +36,7 @@ ICI_BW = 50e9                # bytes/s per link
 DCN_BW = 25e9                # bytes/s per host (inter-pod)
 HOST_BW = 10e9               # host<->device staging path
 HBM_BYTES = 16 * 2 ** 30     # 16 GiB
+MEM_RESERVE = 512 * 2 ** 20  # per-chip runtime reserve (compiler scratch etc.)
 MFU = 0.5                    # sustained matmul efficiency (long sequences)
 MFU_CONV = 0.12              # conv stacks (<=128ch) utilize the MXU poorly
 SEQ_MFU_KNEE = 384           # per-chip tokens below which MFU degrades
@@ -87,6 +88,12 @@ class Profiler:
         # exactly the paper's "pre-profiled candidate resolutions" (§5.1)
         self._time_memo: Dict[Tuple, float] = {}
         self._deg_memo: Dict[Tuple, int] = {}
+        self._fits_memo: Dict[Tuple, bool] = {}
+
+    @staticmethod
+    def _class_key(req: Request) -> Tuple:
+        """Workload-class memo key: (pipeline, resolution, seconds) + prompt."""
+        return req.key() + (req.cond_len,)
 
     # -- static model facts --------------------------------------------------
 
@@ -188,7 +195,7 @@ class Profiler:
 
     def stage_time(self, req: Request, stage: str, k_chips: int) -> float:
         """Wall-clock estimate of stage ``stage`` at SP degree ``k_chips``."""
-        key = (req.resolution, req.seconds, req.cond_len, stage, k_chips)
+        key = self._class_key(req) + (stage, k_chips)
         hit = self._time_memo.get(key)
         if hit is not None:
             return hit
@@ -241,7 +248,7 @@ class Profiler:
     def optimal_batch(self, req: Request, stage: str, k_chips: int,
                       cap: int = 8) -> int:
         """Largest batch whose latency stays within 1.2x single (E.1)."""
-        key = (req.resolution, req.seconds, req.cond_len, stage, k_chips, "bs")
+        key = self._class_key(req) + (stage, k_chips, "bs")
         hit = self._deg_memo.get(key)
         if hit is not None:
             return hit
@@ -264,7 +271,7 @@ class Profiler:
     def optimal_degree(self, req: Request, stage: str) -> int:
         """Paper's *optimal parallelism strategy*: highest degree with
         efficiency > 0.8 (footnote 4). In scheduling *units*."""
-        key = (req.resolution, req.seconds, req.cond_len, stage)
+        key = self._class_key(req) + (stage,)
         hit = self._deg_memo.get(key)
         if hit is not None:
             return hit
@@ -305,10 +312,18 @@ class Profiler:
             return min(a, 4 * 2 ** 30) if s == "C" else a
 
         peak = max(act(s) for s in ptype)
-        return self.unit_param_bytes(ptype) + peak + 512 * 2 ** 20  # reserve
+        return self.unit_param_bytes(ptype) + peak + MEM_RESERVE
 
     def fits(self, req: Request, ptype: str, k_units: int) -> bool:
-        return self.peak_mem(req, ptype, k_units) <= HBM_BYTES
+        """Memory-feasibility filter F_{r,i,k} — memoized: it sits on the
+        dispatch hot path (called per pending request x VR type x degree,
+        every scheduler wake-up)."""
+        key = self._class_key(req) + (ptype, k_units)
+        hit = self._fits_memo.get(key)
+        if hit is None:
+            hit = self.peak_mem(req, ptype, k_units) <= HBM_BYTES
+            self._fits_memo[key] = hit
+        return hit
 
     # -- inter-stage communication -------------------------------------------------
 

@@ -24,6 +24,7 @@ executions (examples/serve_pipeline.py).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.dispatcher import DispatchDecision
@@ -71,11 +72,26 @@ class RuntimeEngine:
             for g, p in enumerate(plan.placements)]
         self._groups: Set[frozenset] = set()
         self.stats = EngineStats()
+        # idle tracking: busy units sit in a (free_at, uid) heap and migrate
+        # back to the idle set lazily as the clock passes their release time
+        # — idle_units() is then O(released) instead of O(units) per wake-up.
+        # Stale heap entries (unit re-reserved meanwhile) are dropped on pop.
+        self._idle: Set[int] = {u.uid for u in self.units}
+        self._busy_heap: List[Tuple[float, int]] = []
 
     # ------------------------------------------------------------------ state
 
+    def _mark_busy(self, uid: int, until: float) -> None:
+        self._idle.discard(uid)
+        heapq.heappush(self._busy_heap, (until, uid))
+
     def idle_units(self, tau: float) -> Set[int]:
-        return {u.uid for u in self.units if u.free_at <= tau}
+        heap = self._busy_heap
+        while heap and heap[0][0] <= tau:
+            _, uid = heapq.heappop(heap)
+            if self.units[uid].free_at <= tau:   # else: re-reserved since
+                self._idle.add(uid)
+        return set(self._idle)
 
     def free_at(self) -> Dict[int, float]:
         return {u.uid: u.free_at for u in self.units}
@@ -99,6 +115,7 @@ class RuntimeEngine:
             barrier = max([tau] + [u.free_at for u in self.units]) + cost
             for u in self.units:
                 u.free_at = barrier
+                self._mark_busy(u.uid, barrier)
             self.stats.downtime += cost
         for u, new_p in zip(self.units, new_plan.placements):
             u.placement = new_p
@@ -171,6 +188,7 @@ class RuntimeEngine:
             u = self.units[g]
             u.free_at = finish
             u.hb_staged = 0.0
+            self._mark_busy(g, finish)
 
     # ----------------------------------------------------------- dispatch plans
 

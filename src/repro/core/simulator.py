@@ -5,12 +5,27 @@ The simulator owns the clock and the arrival trace; *all* scheduling logic
 the production code from this package — only stage execution latencies come
 from the Profiler's cost model instead of wall-clock TPU runs.  This is the
 substrate behind every paper figure reproduction (Fig. 10-15, Table 4).
+
+Two clock modes share one per-step body (admit arrivals -> drain completion
+events -> maybe re-place -> dispatch):
+
+* ``tick`` — the original fixed-step loop: the scheduler runs every
+  ``SimConfig.tick`` seconds across the whole horizon, O(horizon/tick).
+* ``event`` (default) — an event-heap-driven clock: the scheduler only
+  wakes when state can change — the next arrival, the next stage
+  completion (which is also when units cross their ``free_at``), the next
+  Monitor-window boundary, or a ``max_idle_gap`` cap that preserves
+  periodic re-placement/aging checks while requests are pending.  Wake-ups
+  are quantized *up* to the same tick grid, so on traces where the skipped
+  ticks are no-ops the two modes produce bit-identical results
+  (tests/test_event_sim.py) at O(events) cost.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import math
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import repro.configs as configs
 from repro.core.monitor import Monitor
@@ -30,6 +45,10 @@ class SimConfig:
     adjust_on_dispatch: bool = True
     downtime_adjust: bool = False     # Fig. 13 ablation
     seed: int = 0
+    mode: str = "event"               # "event" (O(events)) | "tick" (legacy)
+    max_idle_gap: float = 1.0         # event mode: max clock jump while
+                                      # requests are pending (keeps periodic
+                                      # re-placement/aging checks alive)
 
 
 @dataclasses.dataclass
@@ -49,6 +68,7 @@ class SimResult:
     vr_histogram: Dict[int, int]
     engine_stats: Dict[str, float]
     solver_ms: float = 0.0
+    sched_wakeups: int = 0            # scheduler invocations (event vs tick)
 
     def summary(self) -> str:
         if self.oom:
@@ -58,6 +78,43 @@ class SimResult:
                 f"SLO={self.slo_attainment * 100:5.1f}%  "
                 f"mean={self.mean_latency:7.2f}s  p95={self.p95_latency:7.2f}s  "
                 f"fin={self.n_finished}/{self.n_requests}")
+
+
+class PendingSet:
+    """Arrival-ordered, rid-indexed set of pending requests.
+
+    Backed by an insertion-ordered dict so dispatch bookkeeping is O(1) per
+    removal instead of the O(n) ``list.remove`` scans the tick loop did;
+    iteration yields requests in arrival (admission) order.
+    """
+
+    __slots__ = ("_by_rid",)
+
+    def __init__(self, reqs: Sequence[Request] = ()):
+        self._by_rid: Dict[int, Request] = {r.rid: r for r in reqs}
+
+    def add(self, req: Request) -> None:
+        self._by_rid[req.rid] = req
+
+    append = add   # drop-in for the old list-based field
+
+    def remove(self, req: Request) -> None:
+        del self._by_rid[req.rid]
+
+    def discard(self, req: Request) -> None:
+        self._by_rid.pop(req.rid, None)
+
+    def __contains__(self, req: Request) -> bool:
+        return req.rid in self._by_rid
+
+    def __iter__(self) -> Iterator[Request]:
+        return iter(self._by_rid.values())
+
+    def __len__(self) -> int:
+        return len(self._by_rid)
+
+    def __bool__(self) -> bool:
+        return bool(self._by_rid)
 
 
 class Scheduler:
@@ -80,6 +137,10 @@ class Scheduler:
         return None
 
 
+# completion event: (finish, seq, stage, placement type, duration, request)
+Event = Tuple[float, int, str, str, float, Request]
+
+
 class Simulator:
     def __init__(self, pipeline_id: str, scheduler: Scheduler,
                  trace: Sequence[Request], sim_cfg: SimConfig):
@@ -88,15 +149,20 @@ class Simulator:
         self.trace = sorted(trace, key=lambda r: r.arrival)
         self.cfg = sim_cfg
         self.prof = scheduler.prof
-        self.pending: List[Request] = []     # arrived, not yet dispatched
+        self.pending = PendingSet()          # arrived, not yet dispatched
+        self.new_arrivals: List[Request] = []  # admitted since the last step
         self.engine: Optional[RuntimeEngine] = None
         self.monitor = Monitor()
-        self._events: List[Tuple[float, int, str, str, Request]] = []  # stage completions
+        self._events: List[Event] = []       # stage-completion heap
         self._eseq = 0
         self.vr_histogram: Dict[int, int] = {}
         self.placement_log: List[Tuple[float, Dict[str, int]]] = []
         self.throughput: Dict[int, int] = {}
         self.request_oom: List[Request] = []
+        self.sched_wakeups = 0
+        # monitor-window wake-ups only matter to schedulers that re-place
+        self._replace_capable = (type(scheduler).maybe_replace
+                                 is not Scheduler.maybe_replace)
 
     # ---------------------------------------------------------------- helpers
 
@@ -121,52 +187,116 @@ class Simulator:
     # ---------------------------------------------------------------- main loop
 
     def run(self) -> SimResult:
-        workload_name = getattr(self.trace, "name", "trace")
         plan = self.scheduler.initial_placement()
-        if plan is None:   # colocated placement cannot hold the models
+        if plan is None:   # no feasible placement (e.g. colocated OOM)
             return self._oom_result()
         self.engine = RuntimeEngine(
             self.prof, plan, proactive_push=self.cfg.proactive_push,
             adjust_on_dispatch=self.cfg.adjust_on_dispatch)
         self.placement_log.append((0.0, plan.type_histogram()))
-
-        trace_end = self.trace[-1].arrival if self.trace else 0.0
-        horizon = trace_end + self.cfg.horizon_slack
-        ai = 0
-        tau = 0.0
-        dispatched: set = set()
-        while tau <= horizon:
-            # admit arrivals
-            while ai < len(self.trace) and self.trace[ai].arrival <= tau:
-                self.pending.append(self.trace[ai])
-                ai += 1
-            # drain completion events up to now (feeds the Monitor)
-            while self._events and self._events[0][0] <= tau:
-                t, _, s, ptype, dur, req = heapq.heappop(self._events)
-                self.monitor.record_stage(t, s, ptype, dur)
-                if s == "C":
-                    self.throughput[int(t // 60)] = self.throughput.get(int(t // 60), 0) + 1
-            # placement switch?
-            new_plan = self.scheduler.maybe_replace(self, tau)
-            if new_plan is not None:
-                self.engine.apply_placement(new_plan, tau,
-                                            downtime_adjust=self.cfg.downtime_adjust)
-                self.placement_log.append((tau, new_plan.type_histogram()))
-            # dispatch
-            decisions = self.scheduler.tick(self, tau)
-            for dec in decisions:
-                times = self.engine.execute(dec, tau)
-                self.record_decision(dec, times)
-                dispatched.add(dec.request.rid)
-                self.pending.remove(dec.request)
-                for co in getattr(dec, "corequests", ()):
-                    dispatched.add(co.rid)
-                    self.pending.remove(co)
-            if (ai >= len(self.trace) and not self.pending
-                    and not self._events):
-                break
-            tau += self.cfg.tick
+        if self.cfg.mode == "tick":
+            self._run_tick()
+        else:
+            self._run_event()
         return self._result()
+
+    # -- one scheduler step (shared by both clock modes) ----------------------
+
+    def _admit(self, tau: float, ai: int) -> int:
+        new: List[Request] = []
+        trace = self.trace
+        while ai < len(trace) and trace[ai].arrival <= tau:
+            self.pending.add(trace[ai])
+            new.append(trace[ai])
+            ai += 1
+        self.new_arrivals = new
+        return ai
+
+    def _drain_events(self, tau: float) -> None:
+        """Feed completion events up to ``tau`` into the Monitor."""
+        while self._events and self._events[0][0] <= tau:
+            t, _, s, ptype, dur, req = heapq.heappop(self._events)
+            self.monitor.record_stage(t, s, ptype, dur)
+            if s == "C":
+                self.throughput[int(t // 60)] = self.throughput.get(int(t // 60), 0) + 1
+
+    def _step(self, tau: float) -> None:
+        """Placement switch check + dispatch at time ``tau``."""
+        self.sched_wakeups += 1
+        new_plan = self.scheduler.maybe_replace(self, tau)
+        if new_plan is not None:
+            self.engine.apply_placement(new_plan, tau,
+                                        downtime_adjust=self.cfg.downtime_adjust)
+            self.placement_log.append((tau, new_plan.type_histogram()))
+        for dec in self.scheduler.tick(self, tau):
+            times = self.engine.execute(dec, tau)
+            self.record_decision(dec, times)
+            self.pending.remove(dec.request)
+            for co in getattr(dec, "corequests", ()):
+                self.pending.remove(co)
+
+    def _horizon(self) -> float:
+        trace_end = self.trace[-1].arrival if self.trace else 0.0
+        return trace_end + self.cfg.horizon_slack
+
+    def _done(self, ai: int) -> bool:
+        return ai >= len(self.trace) and not self.pending and not self._events
+
+    # -- legacy fixed-tick clock (reference for the equivalence tests) --------
+
+    def _run_tick(self) -> None:
+        tick = self.cfg.tick
+        horizon = self._horizon()
+        ai = 0
+        i = 0
+        while i * tick <= horizon:
+            tau = i * tick
+            ai = self._admit(tau, ai)
+            self._drain_events(tau)
+            self._step(tau)
+            if self._done(ai):
+                break
+            i += 1
+
+    # -- event-heap-driven clock ----------------------------------------------
+
+    def _run_event(self) -> None:
+        """Jump the clock between the times state can actually change.
+
+        Wake-up candidates: next arrival, next stage-completion event (unit
+        ``free_at`` crossings always coincide with one), the next
+        Monitor-window boundary, and — only while requests are pending, since
+        dispatch rewards/aging depend on tau — a ``max_idle_gap`` heartbeat.
+        Each wake-up is quantized up to the tick grid so dispatch timestamps
+        land exactly where the tick clock would have placed them.
+        """
+        tick = self.cfg.tick
+        horizon = self._horizon()
+        gap = max(self.cfg.max_idle_gap, tick)
+        ai = 0
+        i = 0
+        while i * tick <= horizon:
+            tau = i * tick
+            ai = self._admit(tau, ai)
+            self._drain_events(tau)
+            self._step(tau)
+            if self._done(ai):
+                break
+            t_next = math.inf
+            if ai < len(self.trace):
+                t_next = self.trace[ai].arrival
+            if self._events:
+                t_next = min(t_next, self._events[0][0])
+            if self._replace_capable and (self.pending or self._events):
+                boundary = self.monitor.next_window_boundary()
+                if boundary is not None and boundary > tau:
+                    t_next = min(t_next, boundary)
+            if self.pending:
+                t_next = min(t_next, tau + gap)
+            if t_next is math.inf:
+                break   # nothing can ever change state again
+            # quantize up to the tick grid; always advance at least one tick
+            i = max(i + 1, int(math.ceil(t_next / tick - 1e-9)))
 
     # ---------------------------------------------------------------- results
 
@@ -209,7 +339,8 @@ class Simulator:
             throughput_timeline=sorted((60.0 * b, c) for b, c in self.throughput.items()),
             placement_switches=self.placement_log,
             vr_histogram=dict(self.vr_histogram),
-            engine_stats=stats)
+            engine_stats=stats,
+            sched_wakeups=self.sched_wakeups)
 
 
 def run_sim(pipeline_id: str, scheduler_cls, workload: str, duration: float,

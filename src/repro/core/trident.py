@@ -54,6 +54,8 @@ class TridentScheduler(Scheduler):
             return None
         measured = sim.monitor.placement_rates(tau, sim.engine.plan.type_histogram())
         new_plan = self.orch.generate(recent, measured_rates=measured)
+        if new_plan is None:   # no feasible re-placement: keep the current plan
+            return None
         if new_plan.type_histogram() == sim.engine.plan.type_histogram():
             return None
         return new_plan
@@ -61,7 +63,10 @@ class TridentScheduler(Scheduler):
     # -- Algorithm 1, lines 9-10 (dispatch) --------------------------------------
 
     def tick(self, sim: Simulator, tau: float) -> List[DispatchDecision]:
-        for r in sim.pending:
+        # the simulator exposes the batch admitted since the last step, so
+        # recent-arrival bookkeeping is O(new) instead of O(pending) per tick
+        new = getattr(sim, "new_arrivals", None)
+        for r in (sim.pending if new is None else new):
             if r.rid not in self._recent_ids:
                 self._recent.append(r)
                 self._recent_ids.add(r.rid)
@@ -70,8 +75,7 @@ class TridentScheduler(Scheduler):
             self._recent = self._recent[-4096:]
             self._recent_ids -= {r.rid for r in drop}
         idle = sim.engine.idle_units(tau)
-        idle_primary = sum(1 for g in idle
-                           if sim.engine.plan.placements[g] in PRIMARY_PLACEMENTS)
+        idle_primary = len(idle & sim.engine.plan.primary_units)
         sim.monitor.record_backlog(tau, len(sim.pending), idle_primary)
         if not sim.pending or idle_primary == 0:
             return []

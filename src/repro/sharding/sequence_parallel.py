@@ -26,6 +26,14 @@ from repro.kernels import ops as kops
 Array = jax.Array
 
 
+def _pvary(x: Array, axes: Tuple[str, ...]) -> Array:
+    """``jax.lax.pvary`` marks a replicated value as device-varying for
+    shard_map's replication checker; on older jax (< 0.6) the primitive
+    does not exist and the check accepts the raw value."""
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axes) if fn is not None else x
+
+
 def ulysses_attention(q: Array, k: Array, v: Array, mesh: Mesh,
                       axis: str = "model", causal: bool = False,
                       softcap: float = 0.0) -> Array:
@@ -67,7 +75,7 @@ def scan_chunk_parallel(q: Array, k: Array, v: Array, decay: Array,
     def body(qs, ks, vs, ws):
         bb, hh, _, kk = qs.shape
         vv = vs.shape[-1]
-        zero = jax.lax.pvary(jnp.zeros((bb, hh, kk, vv), jnp.float32), (axis,))
+        zero = _pvary(jnp.zeros((bb, hh, kk, vv), jnp.float32), (axis,))
         _, s_local = kops.linear_scan(qs, ks, vs, ws, bonus=bonus,
                                       initial_state=zero)
         # total decay of the local chunk per (B, H, K)

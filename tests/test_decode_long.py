@@ -10,6 +10,10 @@ import pytest
 import repro.configs as C
 from repro.models import transformer as tf
 
+# long-horizon stress sweeps (~2 min total): excluded from the tier-1 fast
+# subset; `pytest -m slow` / `-m ""` runs them
+pytestmark = pytest.mark.slow
+
 
 def _roll(cfg, params, toks, steps, max_len):
     """Greedy-free teacher-forced decode: feed toks one by one, collect

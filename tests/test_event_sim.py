@@ -1,0 +1,136 @@
+"""Event-driven clock vs the legacy fixed-tick clock.
+
+The event-driven simulator quantizes wake-ups onto the tick grid, so on
+traces where the skipped ticks are no-ops it must reproduce the tick
+simulator's results exactly — while doing far fewer scheduler wake-ups on
+sparse traces.  Also covers the unified ``Orchestrator.generate`` ->
+``maybe_replace`` infeasibility contract.
+"""
+import pytest
+
+import repro.configs as C
+from repro.core.baselines import BASELINES
+from repro.core.orchestrator import Orchestrator
+from repro.core.profiler import Profiler
+from repro.core.request import Request
+from repro.core.simulator import PendingSet, SimConfig, Simulator, run_sim
+from repro.core.trident import TridentScheduler
+
+SCENARIOS = [
+    ("sd3", TridentScheduler, "light", 30.0),
+    ("hunyuanvideo", TridentScheduler, "medium", 60.0),
+    ("sd3", BASELINES["B1"], "light", 30.0),
+    ("sd3", BASELINES["B4"], "light", 30.0),
+    ("hunyuanvideo", BASELINES["B6"], "heavy", 90.0),
+]
+
+
+def _pair(pid, cls, wl, dur):
+    tick = run_sim(pid, cls, wl, dur, sim_cfg=SimConfig(mode="tick"))
+    event = run_sim(pid, cls, wl, dur, sim_cfg=SimConfig(mode="event"))
+    return tick, event
+
+
+@pytest.mark.parametrize("pid,cls,wl,dur", SCENARIOS,
+                         ids=[f"{p}-{c.name}-{w}" for p, c, w, _ in SCENARIOS])
+def test_event_clock_matches_tick_clock(pid, cls, wl, dur):
+    tick, event = _pair(pid, cls, wl, dur)
+    assert event.slo_attainment == tick.slo_attainment
+    assert event.vr_histogram == tick.vr_histogram
+    assert event.n_finished == tick.n_finished
+    assert event.n_requests == tick.n_requests
+    for a, b in ((tick.mean_latency, event.mean_latency),
+                 (tick.p95_latency, event.p95_latency)):
+        assert abs(a - b) <= 1e-6 * max(1.0, abs(a)), (a, b)
+    assert event.placement_switches == tick.placement_switches
+
+
+def test_event_clock_does_fewer_wakeups_on_sparse_trace():
+    """The point of the tentpole: O(events), not O(horizon/tick)."""
+    tick, event = _pair("hunyuanvideo", TridentScheduler, "medium", 60.0)
+    assert event.sched_wakeups < tick.sched_wakeups / 2
+
+
+def test_event_clock_handles_oom_and_empty_trace():
+    r = run_sim("flux", BASELINES["B1"], "medium", 30.0)   # colocated OOM
+    assert r.oom
+    prof = Profiler(C.get("sd3"))
+    sched = TridentScheduler(prof, SimConfig(), [])
+    sim = Simulator("sd3", sched, [], SimConfig())
+    res = sim.run()
+    assert res.n_requests == 0 and not res.oom
+
+
+def test_pending_set_is_id_indexed():
+    a, b = Request("sd3", 512), Request("sd3", 1024)
+    ps = PendingSet()
+    ps.add(a)
+    ps.append(b)          # list-style alias
+    assert a in ps and b in ps and len(ps) == 2
+    assert list(ps) == [a, b]   # admission order preserved
+    ps.remove(a)
+    assert a not in ps and len(ps) == 1
+    ps.discard(a)         # idempotent
+    with pytest.raises(KeyError):
+        ps.remove(a)
+
+
+def test_events_heap_entries_are_six_tuples():
+    """Regression: the declared event type must match what
+    ``record_decision`` pushes (finish, seq, stage, ptype, duration, req)."""
+    r = Request("sd3", 512)
+    prof = Profiler(C.get("sd3"))
+    sched = TridentScheduler(prof, SimConfig(), [r])
+    sim = Simulator("sd3", sched, [r], SimConfig())
+    sim.engine = type("_E", (), {})()
+    plan = Orchestrator(prof, num_chips=8).generate([r])
+    sim.engine.plan = plan
+    from repro.core.dispatcher import DispatchDecision
+    dec = DispatchDecision(request=r, vr_type=0, degree=1,
+                           d_units=(0,), e_units=(0,), c_units=(0,))
+    sim.record_decision(dec, {"E": (0.0, 1.0), "D": (1.0, 2.0),
+                              "C": (2.0, 3.0)})
+    assert len(sim._events) == 3
+    for ev in sim._events:
+        assert len(ev) == 6
+        fin, seq, stage, ptype, dur, req = ev
+        assert req is r and dur >= 0.0
+
+
+# -- Orchestrator.generate / maybe_replace infeasibility contract -------------
+
+def test_generate_returns_none_when_infeasible():
+    prof = Profiler(C.get("flux"))
+    orch = Orchestrator(prof, num_chips=0)        # no units at all
+    assert orch.generate([Request("flux", 1024)]) is None
+    healthy = Orchestrator(prof, num_chips=128)
+    assert healthy.generate([Request("flux", 1024)]) is not None
+
+
+def test_maybe_replace_survives_infeasible_generate(monkeypatch):
+    """Re-placement when no feasible plan exists must keep the old plan,
+    not crash on ``None.type_histogram()``."""
+    cfg = SimConfig(num_chips=128)
+    prof = Profiler(C.get("sd3"))
+    from repro.core import workloads
+    trace = workloads.make_trace("sd3", "light", 30.0, prof, seed=0)
+    sched = TridentScheduler(prof, cfg, trace)
+    sim = Simulator("sd3", sched, trace, cfg)
+    monkeypatch.setattr(sched.orch, "generate",
+                        lambda *a, **kw: None)
+    res = sim.run()            # bootstrap hits the OOM path gracefully
+    assert res.oom
+
+    # now a healthy bootstrap but infeasible *re*-placement
+    sched2 = TridentScheduler(prof, cfg, trace)
+    sim2 = Simulator("sd3", sched2, trace, cfg)
+    plan = sched2.initial_placement()
+    assert plan is not None
+    from repro.core.runtime import RuntimeEngine
+    sim2.engine = RuntimeEngine(prof, plan)
+    sched2._recent = list(trace[:16])
+    sched2._recent_ids = {r.rid for r in sched2._recent}
+    monkeypatch.setattr(sim2.monitor, "pattern_change", lambda *a, **kw: True)
+    monkeypatch.setattr(sched2.orch, "generate", lambda *a, **kw: None)
+    assert sched2.maybe_replace(sim2, tau=100.0) is None
+    assert sim2.engine.plan is plan               # old plan untouched

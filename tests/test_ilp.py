@@ -1,54 +1,99 @@
-"""ILP solver: exactness vs brute force (hypothesis property tests)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""ILP solver: exactness vs brute force.
+
+Property-style tests over a seeded random-case generator, so the suite
+needs no optional ``hypothesis`` dependency; when hypothesis is installed
+the same properties also run fuzzed (see the bottom of the file).
+"""
+import random
+
+import pytest
 
 from repro.core import ilp
 
 
-@st.composite
-def instances(draw):
-    n = draw(st.integers(1, 5))
-    dims = draw(st.integers(1, 3))
-    budgets = [draw(st.integers(0, 8)) for _ in range(dims)]
+def make_instance(seed: int):
+    """Random small instance: mirrors the old hypothesis strategy."""
+    rng = random.Random(seed)
+    n = rng.randint(1, 5)
+    dims = rng.randint(1, 3)
+    budgets = [rng.randint(0, 8) for _ in range(dims)]
     options = []
     for _ in range(n):
-        m = draw(st.integers(0, 4))
-        opts = [ilp.Option(dim=draw(st.integers(0, dims - 1)),
-                           usage=draw(st.sampled_from([1, 2, 4, 8])),
-                           reward=draw(st.floats(-5, 20, allow_nan=False,
-                                                 width=32)))
-                for _ in range(m)]
-        options.append(opts)
+        m = rng.randint(0, 4)
+        options.append([ilp.Option(dim=rng.randrange(dims),
+                                   usage=rng.choice([1, 2, 4, 8]),
+                                   reward=rng.uniform(-5, 20))
+                        for _ in range(m)])
+    # duplicate option lists exercise the solver's symmetry breaking
+    if n > 2 and rng.random() < 0.4:
+        options[1] = list(options[0])
     return options, budgets
 
 
-@given(instances())
-@settings(max_examples=150, deadline=None)
-def test_solver_matches_brute_force(inst):
-    options, budgets = inst
-    sol = ilp.solve(options, budgets)
-    assert sol.optimal
-    assert abs(sol.reward - ilp.brute_force(options, budgets)) < 1e-6
+@pytest.mark.parametrize("block", range(5))
+def test_solver_matches_brute_force(block):
+    for seed in range(block * 50, block * 50 + 50):
+        options, budgets = make_instance(seed)
+        sol = ilp.solve(options, budgets)
+        assert sol.optimal
+        assert abs(sol.reward - ilp.brute_force(options, budgets)) < 1e-6, seed
 
 
-@given(instances())
-@settings(max_examples=100, deadline=None)
-def test_solution_is_feasible(inst):
-    options, budgets = inst
-    sol = ilp.solve(options, budgets)
-    used = [0] * len(budgets)
-    for r, o in sol.choices.items():
-        assert o in options[r]
-        assert o.reward > 0
-        used[o.dim] += o.usage
-    for u, b in zip(used, budgets):
-        assert u <= b
-    # reward accounting
-    assert abs(sum(o.reward for o in sol.choices.values()) - sol.reward) < 1e-6
+@pytest.mark.parametrize("block", range(3))
+def test_solution_is_feasible(block):
+    for seed in range(1000 + block * 50, 1000 + block * 50 + 50):
+        options, budgets = make_instance(seed)
+        sol = ilp.solve(options, budgets)
+        used = [0] * len(budgets)
+        for r, o in sol.choices.items():
+            assert o in options[r]
+            assert o.reward > 0
+            used[o.dim] += o.usage
+        for u, b in zip(used, budgets):
+            assert u <= b
+        # reward accounting
+        assert abs(sum(o.reward for o in sol.choices.values()) - sol.reward) < 1e-6
+
+
+def test_warm_start_preserves_optimality():
+    """A warm hint — even an adversarially bad or stale one — only seeds the
+    incumbent and must not change the optimum."""
+    for seed in range(200):
+        options, budgets = make_instance(seed)
+        ref = ilp.solve(options, budgets)
+        rng = random.Random(seed + 999)
+        warm = {}
+        for r, opts in enumerate(options):
+            if opts and rng.random() < 0.7:
+                o = rng.choice(opts)
+                warm[r] = (o.dim, o.usage)
+        warm[len(options) + 3] = (0, 1)   # stale index must be ignored
+        sol = ilp.solve(options, budgets, warm=warm)
+        assert sol.optimal
+        assert abs(sol.reward - ref.reward) < 1e-6, seed
+
+
+def test_warm_start_speeds_reconvergence():
+    """Re-solving an instance from last round's optimal choices must not
+    explore more nodes than solving cold: the warm incumbent starts at the
+    optimum, so the branch-and-bound prunes a subset of the cold tree.
+    (Both solves must reach proven optimality — a capped solve's node count
+    is wall-clock dependent — so the instance is kept small.)"""
+    rng = random.Random(42)
+    options = [[ilp.Option(rng.randrange(2), rng.choice([1, 2, 4]),
+                           rng.uniform(100, 1000)) for _ in range(3)]
+               for _ in range(14)]
+    budgets = [8, 8]
+    cold = ilp.solve(options, budgets, time_cap=60.0)
+    assert cold.optimal, "instance must be provably solvable for this test"
+    warm = {r: (o.dim, o.usage) for r, o in cold.choices.items()}
+    resolved = ilp.solve(options, budgets, warm=warm, time_cap=60.0)
+    assert resolved.optimal
+    assert abs(resolved.reward - cold.reward) < 1e-6
+    assert resolved.nodes <= cold.nodes
 
 
 def test_anytime_cap_returns_feasible():
-    import random
     rng = random.Random(0)
     options = [[ilp.Option(rng.randrange(4), rng.choice([1, 2, 4, 8]),
                            rng.uniform(10, 1000)) for _ in range(8)]
@@ -60,3 +105,36 @@ def test_anytime_cap_returns_feasible():
         used[o.dim] += o.usage
     assert all(u <= b for u, b in zip(used, budgets))
     assert sol.reward > 0
+
+
+# -- optional hypothesis fuzzing (runs only when the dep is installed) --------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @st.composite
+    def instances(draw):
+        n = draw(st.integers(1, 5))
+        dims = draw(st.integers(1, 3))
+        budgets = [draw(st.integers(0, 8)) for _ in range(dims)]
+        options = []
+        for _ in range(n):
+            m = draw(st.integers(0, 4))
+            opts = [ilp.Option(dim=draw(st.integers(0, dims - 1)),
+                               usage=draw(st.sampled_from([1, 2, 4, 8])),
+                               reward=draw(st.floats(-5, 20, allow_nan=False,
+                                                     width=32)))
+                    for _ in range(m)]
+            options.append(opts)
+        return options, budgets
+
+    @given(instances())
+    @settings(max_examples=150, deadline=None)
+    def test_solver_matches_brute_force_fuzzed(inst):
+        options, budgets = inst
+        sol = ilp.solve(options, budgets)
+        assert sol.optimal
+        assert abs(sol.reward - ilp.brute_force(options, budgets)) < 1e-6
+except ImportError:
+    pass

@@ -78,6 +78,7 @@ def test_deterministic_given_seed():
     assert a.mean_latency == b.mean_latency
 
 
+@pytest.mark.slow
 def test_dynamic_batching_improves_light_flood():
     """App. E.1: batching same-class lightweight requests improves p95
     under a light-request flood; and every batched request still finishes."""
@@ -89,6 +90,7 @@ def test_dynamic_batching_improves_light_flood():
     assert on.slo_attainment >= off.slo_attainment
 
 
+@pytest.mark.slow
 def test_cross_node_sp_reduces_heavy_latency():
     """Beyond-paper pod-wide SP: heavy flux requests finish faster."""
     base = run_sim("flux", TridentScheduler, "heavy", 120.0)
