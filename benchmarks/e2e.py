@@ -10,6 +10,12 @@ Also hosts:
   stage-level sub-clusters under one arrival budget.  At this horizon the
   O(horizon/tick) loop does ~10^5 scheduler iterations per pipeline; the
   event clock makes the scenario routine.
+* ``--mixed --shared``: the same 512 chips as ONE shared cluster
+  (core/fleet.py) under a heterogeneous trace with a mid-trace traffic-mix
+  flip.  Compares the fleet scheduler trio — static sub-clusters (the
+  ``--mixed`` paradigm), proportional-share, adaptive — and records the
+  adaptive-vs-static goodput and P95 deltas in ``BENCH_shared_cluster.json``
+  (acceptance: >= 1.2x P95 improvement).
 """
 from __future__ import annotations
 
@@ -55,6 +61,16 @@ SMOKE_SCENARIOS: Tuple[Tuple[str, str, str, float, Optional[float]], ...] = (
 # 512-chip mixed deployment: static sub-clusters per pipeline, each run by
 # its own TridentServe instance over its share of the arrival budget.
 MIXED_PARTITION: Dict[str, int] = {"sd3": 128, "flux": 192, "cogvideox": 192}
+
+# Shared-cluster variant: one 512-chip pool, heterogeneous trace with a
+# mid-trace mix flip (image-dominated first half, heavy-pipeline second
+# half).  Rates/flip live next to the trace generator so there is exactly
+# one tuned scenario definition (workloads.FLEET_RATES / MIX_FLIP).
+from repro.core.workloads import FLEET_RATES as SHARED_RATES
+from repro.core.workloads import MIX_FLIP as SHARED_FLIP
+
+SHARED_PIPELINES = ("sd3", "flux", "cogvideox")
+SHARED_MODES = ("static", "proportional", "adaptive")
 
 
 def run(quick: bool = True) -> List[Row]:
@@ -192,6 +208,10 @@ def run_smoke(bench_path: Optional[str] = "BENCH_event_sim.json",
                  {"wall_event_s": round(wall_event, 3),
                   "wall_tick_s": round(wall_tick, 3),
                   "wakeups_event": wk_event, "wakeups_tick": wk_tick}))
+    # machine-checkable parity row: benchmarks.run --smoke exits nonzero
+    # when the event clock stops reproducing the tick clock's metrics
+    rows.append(("e2e_smoke/metrics_match_event_vs_tick",
+                 float(_smoke_metrics_match(rows, tick_rows)), {}))
     bench = {
         "bench": "event_driven_simulator_smoke",
         "scenarios": [list(s) for s in SMOKE_SCENARIOS],
@@ -272,6 +292,119 @@ def run_mixed(quick: bool = True) -> List[Row]:
     return rows
 
 
+# ---------------------------------------------------------------- shared-512
+
+def run_mixed_shared(quick: bool = True,
+                     bench_path: Optional[str] = "BENCH_shared_cluster.json",
+                     duration: Optional[float] = None,
+                     modes: Tuple[str, ...] = SHARED_MODES,
+                     fleet_cfg_kw: Optional[Dict] = None) -> List[Row]:
+    """512-chip shared cluster, SD3+Flux+CogVideoX, mid-trace mix flip.
+
+    One heterogeneous trace per mode (same seed -> identical arrivals);
+    modes are the fleet scheduler trio.  The static baseline partitions the
+    pool from the first-window traffic (today's ``--mixed`` paradigm) and
+    never moves; when the mix flips, its Flux/CogVideoX slices drown while
+    SD3 chips idle — the adaptive fleet re-partitions and the gap between
+    the two is the headline number.
+    """
+    from repro.core import workloads
+    from repro.core.fleet import FleetConfig, PipelineRegistry, run_fleet
+
+    dur = duration if duration is not None else (600.0 if quick else 3600.0)
+    registry = PipelineRegistry(SHARED_PIPELINES)
+    profs = {pid: registry.profiler(pid) for pid in SHARED_PIPELINES}
+    rows: List[Row] = []
+    results = {}
+    for mode in modes:
+        cfg = FleetConfig(num_chips=512, **(fleet_cfg_kw or {}))
+        # a fresh trace per mode (requests are mutated by the sim; the seed
+        # makes arrivals identical), built outside the wall timer so the
+        # per-mode wall_s measures the fleet simulator alone
+        trace = workloads.fleet_trace(SHARED_PIPELINES, dur, profs, seed=0,
+                                      rates=SHARED_RATES, phases=SHARED_FLIP)
+        t0 = time.perf_counter()
+        res = run_fleet(SHARED_PIPELINES, mode=mode, duration=dur, cfg=cfg,
+                        registry=registry, trace=trace)
+        wall = time.perf_counter() - t0
+        results[mode] = res
+        rows.append((f"e2e_shared512/{mode}/p95_s", round(res.p95_latency, 3),
+                     {"slo_pct": round(res.slo_attainment * 100, 2),
+                      "goodput_rps": round(res.goodput, 3),
+                      "mean_s": round(res.mean_latency, 3),
+                      "finished": res.n_finished, "requests": res.n_requests,
+                      "repartitions": len(res.repartitions) - 1,
+                      "swap_cost_s": round(res.swap_cost_s, 2),
+                      "wakeups": res.sched_wakeups,
+                      "wall_s": round(wall, 2)}))
+        for pid, m in res.per_pipeline.items():
+            rows.append((f"e2e_shared512/{mode}/{pid}/p95_s",
+                         round(m["p95_s"], 3),
+                         {"slo_pct": round(m["slo"] * 100, 2),
+                          "mean_s": round(m["mean_s"], 3),
+                          "finished": int(m["finished"]),
+                          "requests": int(m["requests"]),
+                          "chips_final": int(m["chips"])}))
+    return _shared_summary_rows(rows, results, bench_path, dur)
+
+
+def run_shared_smoke() -> List[Row]:
+    """CI-sized ``--mixed --shared`` variant: short flip trace, static vs
+    adaptive only, fleet windows shrunk to match — exercises the whole fleet
+    path (partition, mix-shift detection, re-partition with reload costs)
+    on every smoke run without touching BENCH_shared_cluster.json."""
+    return run_mixed_shared(bench_path=None, duration=240.0,
+                            modes=("static", "adaptive"),
+                            fleet_cfg_kw={"t_win": 90.0, "cooldown": 60.0})
+
+
+def _shared_summary_rows(rows: List[Row], results: Dict,
+                         bench_path: Optional[str], dur: float) -> List[Row]:
+    if "static" in results and "adaptive" in results:
+        st, ad = results["static"], results["adaptive"]
+        p95_x = st.p95_latency / max(ad.p95_latency, 1e-9)
+        goodput_x = ad.goodput / max(st.goodput, 1e-9)
+        worst_x = (max(m["p95_s"] for m in st.per_pipeline.values())
+                   / max(1e-9, max(m["p95_s"]
+                                   for m in ad.per_pipeline.values())))
+        rows.append(("e2e_shared512/p95_improvement_adaptive_vs_static",
+                     round(p95_x, 2),
+                     {"goodput_x": round(goodput_x, 3),
+                      "worst_pipeline_p95_x": round(worst_x, 2)}))
+        if bench_path:
+            bench = {
+                "bench": "shared_cluster_mix_flip",
+                "num_chips": 512,
+                "pipelines": list(SHARED_PIPELINES),
+                "duration_s": dur,
+                "rates_rps": SHARED_RATES,
+                "phases": [[f, dict(m)] for f, m in SHARED_FLIP],
+                "p95_improvement_adaptive_vs_static": round(p95_x, 2),
+                "goodput_improvement_adaptive_vs_static": round(goodput_x, 3),
+                "worst_pipeline_p95_improvement": round(worst_x, 2),
+                "modes": {
+                    mode: {
+                        "p95_s": round(r.p95_latency, 3),
+                        "mean_s": round(r.mean_latency, 3),
+                        "slo_pct": round(r.slo_attainment * 100, 2),
+                        "goodput_rps": round(r.goodput, 3),
+                        "finished": r.n_finished,
+                        "requests": r.n_requests,
+                        "repartitions": len(r.repartitions) - 1,
+                        "swap_cost_s": round(r.swap_cost_s, 2),
+                        "units_reloaded": r.units_reloaded,
+                        "per_pipeline": {
+                            pid: {k: (round(v, 3) if isinstance(v, float)
+                                      else v) for k, v in m.items()}
+                            for pid, m in r.per_pipeline.items()},
+                    } for mode, r in results.items()},
+            }
+            with open(bench_path, "w") as f:
+                json.dump(bench, f, indent=2)
+                f.write("\n")
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -283,6 +416,10 @@ if __name__ == "__main__":
                          "(writes BENCH_event_sim.json)")
     ap.add_argument("--mixed", action="store_true",
                     help="512-chip mixed SD3+Flux+CogVideoX scenario")
+    ap.add_argument("--shared", action="store_true",
+                    help="one shared 512-chip cluster under a mix-flip "
+                         "trace; fleet scheduler trio (writes "
+                         "BENCH_shared_cluster.json); implies --mixed")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--bench-json", default="BENCH_event_sim.json")
     ap.add_argument("--seed-ref", default=None,
@@ -291,7 +428,9 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.smoke:
         emit(run_smoke(bench_path=args.bench_json, seed_ref=args.seed_ref))
-    if args.mixed:
+    if args.shared:
+        emit(run_mixed_shared(quick=not args.full))
+    elif args.mixed:
         emit(run_mixed(quick=not args.full))
-    if not args.smoke and not args.mixed:
+    if not args.smoke and not args.mixed and not args.shared:
         emit(run(quick=not args.full))

@@ -37,16 +37,33 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-style fast pass: e2e smoke set only, with the "
-                         "event-vs-tick speedup check (BENCH_event_sim.json)")
+                    help="CI-style fast pass: e2e smoke set with the "
+                         "event-vs-tick speedup check (BENCH_event_sim.json) "
+                         "plus a short shared-cluster co-serving run")
     args = ap.parse_args()
     if args.smoke:
         t0 = time.perf_counter()
         print("# --- e2e (smoke) ---", flush=True)
         from benchmarks import e2e
-        emit(e2e.run_smoke())
+        smoke_rows = e2e.run_smoke()
+        emit(smoke_rows)
         print(f"# e2e smoke took {time.perf_counter() - t0:.1f}s", flush=True)
-        sys.exit(0)
+        t0 = time.perf_counter()
+        print("# --- e2e (shared-cluster smoke) ---", flush=True)
+        emit(e2e.run_shared_smoke())
+        print(f"# shared smoke took {time.perf_counter() - t0:.1f}s",
+              flush=True)
+        # event-vs-tick parity is the smoke pass's one hard check: a clock
+        # regression must fail CI, not just land in BENCH_event_sim.json.
+        # The row must be present — a missing row is a broken check, not a
+        # passing one.
+        parity = [v for n, v, _ in smoke_rows
+                  if n.endswith("metrics_match_event_vs_tick")]
+        parity_ok = len(parity) == 1 and parity[0] == 1.0
+        if not parity_ok:
+            print("# SMOKE FAILURE: event clock diverged from tick clock",
+                  flush=True)
+        sys.exit(0 if parity_ok else 1)
     mods = [args.only] if args.only else MODULES
     ok = True
     for name in mods:

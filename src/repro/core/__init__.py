@@ -15,11 +15,14 @@ The paper's contribution, as a composable system:
 * ``trident``      — the full TridentServe scheduler (Algorithm 1)
 * ``baselines``    — B1-B6 (§8.1, Appendix D.2)
 * ``workloads``    — Steady/Dynamic/Proprietary traces (Table 5, Fig. 9)
+* ``fleet``        — shared-cluster co-serving of heterogeneous pipelines:
+                     one placement plan for the whole cluster, chip budgets
+                     re-partitioned with the live traffic mix
 """
-from repro.core import (baselines, dispatcher, ilp, monitor, orchestrator,
-                        placement, profiler, request, runtime, simulator,
-                        trident, workloads)
+from repro.core import (baselines, dispatcher, fleet, ilp, monitor,
+                        orchestrator, placement, profiler, request, runtime,
+                        simulator, trident, workloads)
 
-__all__ = ["baselines", "dispatcher", "ilp", "monitor", "orchestrator",
-           "placement", "profiler", "request", "runtime", "simulator",
-           "trident", "workloads"]
+__all__ = ["baselines", "dispatcher", "fleet", "ilp", "monitor",
+           "orchestrator", "placement", "profiler", "request", "runtime",
+           "simulator", "trident", "workloads"]

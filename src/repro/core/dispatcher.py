@@ -60,10 +60,18 @@ class DispatchDecision:
 
 class Dispatcher:
     def __init__(self, profiler: Profiler, max_batch: int = 64,
-                 solver_time_cap: float = 0.05):
+                 solver_time_cap: float = 0.05, aggregate: bool = False):
+        """``aggregate`` turns on multiplicity-aware ILP aggregation:
+        pending requests with identical option lists (same class, same
+        reward state) enter the solver once with a count instead of N
+        times, so dense same-class floods build capacity-bounded instances
+        (see ``ilp.solve_grouped``).  Off by default so the single-pipeline
+        dispatch path is bit-identical to its pre-aggregation behavior; the
+        fleet layer (core/fleet.py) turns it on."""
         self.prof = profiler
         self.max_batch = max_batch
         self.solver_time_cap = solver_time_cap
+        self.aggregate = aggregate
         self.last_solve_stats: Dict[str, float] = {}
         # previous solve's surviving (dim, usage) per request id — warm-starts
         # the ILP incumbent under steady load (requests pending across ticks)
@@ -141,6 +149,44 @@ class Dispatcher:
             options.append(opts)
         return options, budgets
 
+    def _solve_grouped(self, reqs: Sequence[Request],
+                       options: List[List[ilp.Option]], budgets: List[int]
+                       ) -> Tuple[Dict[int, ilp.Option], Dict[str, float]]:
+        """Multiplicity-aware solve: requests with identical option lists
+        form one group with a count.  Granted copies map back to the
+        group's members in deadline order (``reqs`` is deadline-sorted),
+        best-reward option first, so the earliest-deadline member gets the
+        fastest grant."""
+        groups: Dict[Tuple[ilp.Option, ...], int] = {}
+        members: List[List[int]] = []
+        gopts: List[List[ilp.Option]] = []
+        for ri, opts in enumerate(options):
+            if not opts:
+                continue
+            key = tuple(opts)
+            g = groups.get(key)
+            if g is None:
+                g = groups[key] = len(gopts)
+                gopts.append(opts)
+                members.append([])
+            members[g].append(ri)
+        warm: Dict[int, List[Tuple[int, int]]] = {}
+        for g, mem in enumerate(members):
+            seeds = [self._warm[reqs[ri].rid] for ri in mem
+                     if reqs[ri].rid in self._warm]
+            if seeds:
+                warm[g] = seeds
+        gsol = ilp.solve_grouped(gopts, budgets,
+                                 [len(mem) for mem in members],
+                                 time_cap=self.solver_time_cap, warm=warm)
+        choices: Dict[int, ilp.Option] = {}
+        for g, granted in gsol.alloc.items():
+            for ri, opt in zip(members[g], granted):
+                choices[ri] = opt
+        return choices, {"nodes": gsol.nodes, "optimal": gsol.optimal,
+                         "reward": gsol.reward, "n_solved": gsol.n_slots,
+                         "n_groups": len(gopts)}
+
     # -- unit selection ---------------------------------------------------------
 
     @staticmethod
@@ -193,19 +239,23 @@ class Dispatcher:
         idle_by_type = {t: sum(1 for g in plan.units_of_type(t) if g in idle_units)
                         for t in PRIMARY_PLACEMENTS}
         options, budgets = self.build_options(reqs, tau, idle_by_type)
-        warm = {ri: self._warm[req.rid] for ri, req in enumerate(reqs)
-                if req.rid in self._warm}
-        sol = ilp.solve(options, budgets, time_cap=self.solver_time_cap,
-                        warm=warm)
+        if self.aggregate:
+            choices, stats = self._solve_grouped(reqs, options, budgets)
+        else:
+            warm = {ri: self._warm[req.rid] for ri, req in enumerate(reqs)
+                    if req.rid in self._warm}
+            sol = ilp.solve(options, budgets, time_cap=self.solver_time_cap,
+                            warm=warm)
+            choices = sol.choices
+            stats = {"nodes": sol.nodes, "optimal": sol.optimal,
+                     "reward": sol.reward, "n_solved": len(reqs)}
         self._warm = {reqs[ri].rid: (opt.dim, opt.usage)
-                      for ri, opt in sol.choices.items()}
-        self.last_solve_stats = {"nodes": sol.nodes, "optimal": sol.optimal,
-                                 "reward": sol.reward, "n_reqs": len(reqs)}
+                      for ri, opt in choices.items()}
+        self.last_solve_stats = {**stats, "n_reqs": len(reqs)}
 
         decisions: List[DispatchDecision] = []
-        taken: set = set()
         avail = set(idle_units)
-        for ri, opt in sorted(sol.choices.items(), key=lambda kv: -kv[1].reward):
+        for ri, opt in sorted(choices.items(), key=lambda kv: -kv[1].reward):
             req = reqs[ri]
             prim = primary_of_vr(opt.dim)
             units = self.select_units(plan, prim, opt.usage, avail,

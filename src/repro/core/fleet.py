@@ -1,0 +1,748 @@
+"""Shared-cluster co-serving for heterogeneous diffusion pipelines.
+
+TridentServe (Algorithm 1/2) derives one placement plan *per pipeline*; a
+multi-model deployment then degenerates to static per-pipeline sub-clusters
+— exactly the static, manual paradigm the paper argues against, one level
+up.  This module adds the missing layer: **one placement plan for the whole
+cluster**, spanning every pipeline, with the chip budget per pipeline
+re-derived from the live traffic mix (GENSERVE-style co-serving, DiffServe-
+style demand tracking).
+
+* ``PipelineRegistry``     — one ``Profiler`` per served pipeline.
+* ``FleetPlacementPlan``   — the cluster-wide plan: per-pipeline chip
+  ranges + pipeline-tagged sub-plans, so each scheduling unit carries
+  ``(pipeline, placement_type)``.
+* ``FleetOrchestrator``    — demand-weighted, node-quantized chip budgets
+  (the unit-time footprint of each pipeline's recent traffic — the
+  ``alpha_mode="demand"`` idea lifted one level up), then Algorithm 2 runs
+  *per pipeline* inside its budget.
+* ``FleetScheduler`` trio  — ``static`` (sub-clusters fixed at deploy time:
+  today's ``--mixed``), ``proportional`` (re-partition to windowed demand
+  every window, no hysteresis), ``adaptive`` (re-partition only on a
+  ``FleetMonitor.mix_shift``, with hysteresis + cooldown, demand blended
+  with queued backlog so a post-shift queue drains fast).
+* ``FleetSimulator``       — one event-driven clock over the shared chip
+  pool.  Each pipeline runs the unmodified single-pipeline TridentServe
+  stack (``TridentScheduler`` + ``RuntimeEngine`` + ``Monitor``) inside a
+  *lane*; on re-partition, chips change hands and the per-unit weight-swap
+  cost (reload latency, charged on pipeline *or* type change) is paid by
+  pre-busying the new units — so an idle Flux unit really can be handed to
+  a backlogged SD3 class, at a price the hysteresis must beat.
+
+The single-pipeline system is the 1-pipeline special case: a fleet with one
+registered pipeline reproduces ``Simulator`` + ``TridentScheduler`` results
+exactly (tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import repro.configs as configs
+from repro.core.monitor import FleetMonitor, Monitor
+from repro.core.orchestrator import Orchestrator
+from repro.core.placement import PlacementPlan
+from repro.core.profiler import Profiler
+from repro.core.request import Request
+from repro.core.runtime import EngineStats, RuntimeEngine
+from repro.core.simulator import PendingSet, Scheduler, SimConfig
+from repro.core.trident import TridentScheduler
+from repro.core import workloads
+
+
+def request_footprint(prof: Profiler, req: Request) -> float:
+    """Unit-time footprint of one request: Diffuse chip-seconds at the
+    profiled optimal degree.  The single currency the fleet partitions by —
+    demand windows, backlog weights, and chip budgets must all be measured
+    in it for ``FleetOrchestrator.budgets`` to mix them."""
+    k = prof.optimal_degree(req, "D")
+    return prof.stage_time(req, "D", k * prof.k_min) * k * prof.k_min
+
+
+class PipelineRegistry:
+    """One Profiler per served pipeline, keyed by config name."""
+
+    def __init__(self, pipeline_ids: Sequence[str] = (),
+                 cross_node_sp: bool = False):
+        self.cross_node_sp = cross_node_sp
+        self._profs: Dict[str, Profiler] = {}
+        for pid in pipeline_ids:
+            self.register(pid)
+
+    def register(self, pipeline_id: str,
+                 profiler: Optional[Profiler] = None) -> Profiler:
+        if profiler is None:
+            profiler = Profiler(configs.get(pipeline_id),
+                                cross_node_sp=self.cross_node_sp)
+        self._profs[pipeline_id] = profiler
+        return profiler
+
+    def profiler(self, pipeline_id: str) -> Profiler:
+        return self._profs[pipeline_id]
+
+    @property
+    def pipelines(self) -> Tuple[str, ...]:
+        return tuple(self._profs)
+
+    def __len__(self) -> int:
+        return len(self._profs)
+
+    def __contains__(self, pipeline_id: str) -> bool:
+        return pipeline_id in self._profs
+
+
+@dataclasses.dataclass
+class FleetPlacementPlan:
+    """One placement plan spanning the whole cluster: contiguous chip
+    ranges per pipeline, each carrying a pipeline-tagged ``PlacementPlan``."""
+    total_chips: int
+    chip_ranges: Dict[str, Tuple[int, int]]     # pipeline -> [lo, hi) chips
+    subplans: Dict[str, PlacementPlan]
+
+    def budget_histogram(self) -> Dict[str, int]:
+        return {p: hi - lo for p, (lo, hi) in self.chip_ranges.items()}
+
+    def tagged_units(self) -> List[Tuple[str, str]]:
+        """(pipeline, placement_type) for every scheduling unit."""
+        out: List[Tuple[str, str]] = []
+        for pid, plan in self.subplans.items():
+            out.extend((pid, p) for p in plan.placements)
+        return out
+
+    def type_histogram(self) -> Dict[Tuple[str, str], int]:
+        hist: Dict[Tuple[str, str], int] = {}
+        for tag in self.tagged_units():
+            hist[tag] = hist.get(tag, 0) + 1
+        return hist
+
+    def unit_chips(self, pipeline: str, unit: int) -> Tuple[int, int]:
+        """[lo, hi) chip span of one scheduling unit."""
+        lo, _ = self.chip_ranges[pipeline]
+        k = self.subplans[pipeline].unit_size
+        return (lo + unit * k, lo + (unit + 1) * k)
+
+
+class FleetOrchestrator:
+    """Chip budgets from demand, Algorithm 2 per pipeline inside each."""
+
+    def __init__(self, registry: PipelineRegistry, num_chips: int = 512,
+                 chips_per_node: int = 8):
+        self.reg = registry
+        self.num_chips = num_chips
+        self.chips_per_node = chips_per_node
+        # per-pipeline Algorithm-2 orchestrators, resized at each partition
+        self._orchs = {pid: Orchestrator(registry.profiler(pid),
+                                         num_chips=chips_per_node,
+                                         chips_per_node=chips_per_node)
+                       for pid in registry.pipelines}
+
+    # -- demand weights --------------------------------------------------------
+
+    def demand_weights(self, reqs: Sequence[Request]) -> Dict[str, float]:
+        """Unit-time footprint (chip-seconds of Diffuse work at the profiled
+        optimal degree) per pipeline — ``alpha_mode="demand"``, one level up."""
+        w = {pid: 0.0 for pid in self.reg.pipelines}
+        for r in reqs:
+            w[r.pipeline] += request_footprint(self.reg.profiler(r.pipeline), r)
+        return w
+
+    # -- chip budgets ----------------------------------------------------------
+
+    def budgets(self, weights: Dict[str, float]) -> Dict[str, int]:
+        """Demand-proportional chip budgets, quantized to whole nodes by
+        largest remainder; every pipeline keeps at least one node so it can
+        always serve (and Algorithm 2 stays feasible within its slice)."""
+        upn = self.chips_per_node
+        n_nodes = self.num_chips // upn
+        pids = list(self.reg.pipelines)
+        assert n_nodes >= len(pids), "cluster smaller than one node/pipeline"
+        total = sum(max(0.0, weights.get(p, 0.0)) for p in pids)
+        if total <= 0.0:
+            raw = {p: n_nodes / len(pids) for p in pids}
+        else:
+            raw = {p: n_nodes * max(0.0, weights.get(p, 0.0)) / total
+                   for p in pids}
+        base = {p: max(1, math.floor(raw[p])) for p in pids}
+        while sum(base.values()) > n_nodes:   # floors may overshoot n_nodes
+            p = max(pids, key=lambda p: base[p])
+            base[p] -= 1
+        rem = n_nodes - sum(base.values())
+        order = sorted(pids, key=lambda p: -(raw[p] - math.floor(raw[p])))
+        i = 0
+        while rem > 0:
+            base[order[i % len(order)]] += 1
+            rem -= 1
+            i += 1
+        return {p: base[p] * upn for p in pids}
+
+    # -- plan generation -------------------------------------------------------
+
+    def generate(self, recent: Dict[str, Sequence[Request]],
+                 budgets: Dict[str, int],
+                 measured: Optional[Dict[str, Dict[str, float]]] = None
+                 ) -> Optional[FleetPlacementPlan]:
+        """One cluster-wide plan: Algorithm 2 per pipeline on its budget.
+        Returns ``None`` when any pipeline has no feasible placement (the
+        same contract ``Orchestrator.generate`` exposes)."""
+        ranges: Dict[str, Tuple[int, int]] = {}
+        subplans: Dict[str, PlacementPlan] = {}
+        lo = 0
+        for pid in self.reg.pipelines:
+            chips = budgets[pid]
+            orch = self._orchs[pid]
+            orch.resize(chips)
+            plan = orch.generate(list(recent.get(pid, ())),
+                                 measured_rates=(measured or {}).get(pid))
+            if plan is None:
+                return None
+            plan.pipeline = pid
+            ranges[pid] = (lo, lo + chips)
+            subplans[pid] = plan
+            lo += chips
+        return FleetPlacementPlan(self.num_chips, ranges, subplans)
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    num_chips: int = 512
+    chips_per_node: int = 8
+    tick: float = 0.25
+    horizon_slack: float = 600.0
+    seed: int = 0
+    proactive_push: bool = True
+    adjust_on_dispatch: bool = True
+    max_idle_gap: float = 1.0
+    adaptive_idle_gap: bool = True    # profile-guided heartbeat (fleet runs
+                                      # are long; quiet lanes should not pin
+                                      # the clock to 1 s jumps)
+    idle_gap_max: float = 16.0
+    aggregate_ilp: bool = True        # multiplicity-aware dispatch ILP
+    t_win: float = 180.0              # fleet demand window (s)
+    hysteresis: float = 0.10          # min demand-share move to re-partition
+    cooldown: float = 120.0           # min time between re-partitions (s)
+
+    def lane_sim_cfg(self, num_chips: int) -> SimConfig:
+        return SimConfig(num_chips=num_chips, tick=self.tick,
+                         horizon_slack=self.horizon_slack,
+                         proactive_push=self.proactive_push,
+                         adjust_on_dispatch=self.adjust_on_dispatch,
+                         seed=self.seed, mode="event",
+                         max_idle_gap=self.max_idle_gap,
+                         adaptive_idle_gap=self.adaptive_idle_gap,
+                         idle_gap_max=self.idle_gap_max)
+
+
+class Lane:
+    """One pipeline's slice of the fleet: the unmodified single-pipeline
+    TridentServe stack over a chip range.  Exposes the attribute surface
+    ``TridentScheduler`` expects from ``Simulator`` (pending / engine /
+    monitor / new_arrivals / fail_request_oom), so the lane *is* the
+    1-pipeline special case."""
+
+    def __init__(self, pipeline: str, prof: Profiler, sim_cfg: SimConfig,
+                 trace: Sequence[Request], aggregate_ilp: bool = False):
+        self.pipeline = pipeline
+        self.prof = prof
+        self.sched = TridentScheduler(prof, sim_cfg, trace,
+                                      aggregate_ilp=aggregate_ilp)
+        self.monitor = Monitor()
+        self.pending = PendingSet()
+        self.new_arrivals: List[Request] = []
+        self.engine: Optional[RuntimeEngine] = None
+        self.request_oom: List[Request] = []
+        self.vr_histogram: Dict[int, int] = {}
+        self.throughput: Dict[int, int] = {}
+        self.placement_log: List[Tuple[float, Dict[str, int]]] = []
+        self._stats_base = EngineStats()   # stats of retired engines
+
+    def fail_request_oom(self, req: Request) -> None:
+        self.request_oom.append(req)
+
+    def bank_engine_stats(self) -> None:
+        """Fold the outgoing engine's counters into the lane total before a
+        re-partition replaces it."""
+        if self.engine is None:
+            return
+        for f in dataclasses.fields(EngineStats):
+            setattr(self._stats_base, f.name,
+                    getattr(self._stats_base, f.name)
+                    + getattr(self.engine.stats, f.name))
+
+    def engine_stats(self) -> Dict[str, float]:
+        total = dataclasses.asdict(self._stats_base)
+        if self.engine is not None:
+            for k, v in dataclasses.asdict(self.engine.stats).items():
+                total[k] += v
+        return total
+
+
+# ---------------------------------------------------------------- schedulers
+
+class FleetScheduler:
+    """Static sub-clusters: partitioned once from the deploy-time traffic
+    sample (the first fleet window of the trace), never moved — today's
+    ``--mixed`` behavior expressed inside the fleet substrate."""
+
+    name = "fleet-static"
+
+    def __init__(self, fleet_orch: FleetOrchestrator, fleet_cfg: FleetConfig,
+                 fixed_budgets: Optional[Dict[str, int]] = None):
+        self.orch = fleet_orch
+        self.cfg = fleet_cfg
+        self.fixed_budgets = fixed_budgets
+        self.basis_shares: Optional[Dict[str, float]] = None
+
+    def initial_budgets(self, trace: Sequence[Request]) -> Dict[str, int]:
+        if self.fixed_budgets is not None:
+            return dict(self.fixed_budgets)
+        prefix = [r for r in trace if r.arrival <= self.cfg.t_win]
+        if not prefix:
+            prefix = list(trace[:256])
+        w = self.orch.demand_weights(prefix)
+        total = sum(w.values())
+        if total > 0:
+            self.basis_shares = {p: v / total for p, v in w.items()}
+        return self.orch.budgets(w)
+
+    def maybe_repartition(self, fleet: "FleetSimulator", tau: float
+                          ) -> Optional[Dict[str, int]]:
+        return None
+
+
+class ProportionalFleetScheduler(FleetScheduler):
+    """Re-partition to the windowed demand shares at every fleet window —
+    no hysteresis, so weight-swap cost is paid whenever node-quantized
+    shares wiggle.  The ablation the adaptive scheduler is judged against."""
+
+    name = "fleet-prop"
+
+    def maybe_repartition(self, fleet, tau):
+        mon = fleet.fleet_monitor
+        if tau - mon.last_repartition < self.cfg.t_win:
+            return None
+        shares = mon.demand_shares(tau)
+        if not shares:
+            return None
+        budgets = self.orch.budgets(shares)
+        if budgets == fleet.plan.budget_histogram():
+            self.basis_shares = shares
+            mon.last_repartition = tau   # window served; check again next win
+            return None
+        return budgets
+
+
+class AdaptiveFleetScheduler(FleetScheduler):
+    """Re-partition only on a Monitor-detected traffic-mix shift (total
+    variation of windowed demand shares vs the partition's basis >= the
+    hysteresis threshold, past the cooldown).  Budgets weight windowed
+    arrival demand *plus* the queued backlog footprint, so chips stranded
+    on a now-idle pipeline move to the backlogged one and drain its queue."""
+
+    name = "fleet-adaptive"
+
+    def maybe_repartition(self, fleet, tau):
+        mon = fleet.fleet_monitor
+        if not mon.mix_shift(tau, self.basis_shares,
+                             threshold=self.cfg.hysteresis,
+                             cooldown=self.cfg.cooldown):
+            return None
+        shares = mon.demand_shares(tau)
+        demand = mon.demand(tau)
+        backlog = fleet.backlog_weights()
+        weights = {p: demand.get(p, 0.0) + backlog.get(p, 0.0)
+                   for p in self.orch.reg.pipelines}
+        budgets = self.orch.budgets(weights)
+        if budgets == fleet.plan.budget_histogram():
+            # partition already matches the shifted demand at node
+            # granularity: adopt the shares as the new basis so the trigger
+            # stops firing.  Otherwise the basis only moves once the swap
+            # actually succeeds (FleetSimulator._repartition) — an aborted
+            # re-partition must leave the trigger armed.
+            self.basis_shares = shares
+            return None
+        return budgets
+
+
+FLEET_SCHEDULERS = {
+    "static": FleetScheduler,
+    "proportional": ProportionalFleetScheduler,
+    "adaptive": AdaptiveFleetScheduler,
+}
+
+
+# ---------------------------------------------------------------- results
+
+@dataclasses.dataclass
+class FleetResult:
+    scheduler: str
+    num_chips: int
+    oom: bool
+    n_requests: int
+    n_finished: int
+    n_request_oom: int
+    slo_attainment: float
+    goodput: float                    # on-time completions / s of trace span
+    mean_latency: float
+    p95_latency: float
+    per_pipeline: Dict[str, Dict[str, float]]
+    # cumulative RuntimeEngine counters per lane, summed across the engines
+    # retired by re-partitions (Lane.bank_engine_stats)
+    engine_stats: Dict[str, Dict[str, float]]
+    repartitions: List[Tuple[float, Dict[str, int]]]
+    swap_cost_s: float
+    units_reloaded: int
+    sched_wakeups: int
+
+    def summary(self) -> str:
+        if self.oom:
+            return f"{self.scheduler:15s} OOM (no feasible fleet plan)"
+        return (f"{self.scheduler:15s} SLO={self.slo_attainment * 100:5.1f}%  "
+                f"goodput={self.goodput:6.2f}/s  "
+                f"mean={self.mean_latency:7.2f}s  "
+                f"p95={self.p95_latency:7.2f}s  "
+                f"fin={self.n_finished}/{self.n_requests}  "
+                f"swaps={len(self.repartitions) - 1}")
+
+
+# fleet completion event:
+#   (finish, seq, pipeline, stage, ptype, dur, batch members)
+# — the whole batch rides along so per-pipeline SLO windows count every
+# finished request, not one per dispatch decision
+FleetEvent = Tuple[float, int, str, str, str, float, Tuple[Request, ...]]
+
+
+class FleetSimulator:
+    """Event-driven co-serving simulator: one clock, one chip pool, one
+    fleet placement plan; per-pipeline lanes run the production
+    single-pipeline scheduler code unchanged."""
+
+    def __init__(self, registry: PipelineRegistry, scheduler: FleetScheduler,
+                 trace: Sequence[Request], cfg: Optional[FleetConfig] = None):
+        self.reg = registry
+        self.fleet_sched = scheduler
+        self.orch = scheduler.orch
+        self.trace = sorted(trace, key=lambda r: r.arrival)
+        self.cfg = cfg or FleetConfig()
+        assert all(r.pipeline in registry for r in self.trace), \
+            "trace contains requests for unregistered pipelines"
+        self.fleet_monitor = FleetMonitor(t_win=self.cfg.t_win)
+        self.lanes: Dict[str, Lane] = {}
+        self.plan: Optional[FleetPlacementPlan] = None
+        self._events: List[FleetEvent] = []
+        self._eseq = 0
+        self.repartition_log: List[Tuple[float, Dict[str, int]]] = []
+        self.sched_wakeups = 0
+        self.swap_cost_s = 0.0
+        self.units_reloaded = 0
+        self._track_flips = self.cfg.adaptive_idle_gap
+        self._dl_heap: List[Tuple[float, str, int]] = []
+        self._repartition_capable = (
+            type(scheduler).maybe_repartition
+            is not FleetScheduler.maybe_repartition)
+
+    # ---------------------------------------------------------------- helpers
+
+    def backlog_weights(self) -> Dict[str, float]:
+        """Outstanding unit-time footprint (chip-seconds) per lane queue."""
+        return {pid: sum(request_footprint(lane.prof, r)
+                         for r in lane.pending)
+                for pid, lane in self.lanes.items()}
+
+    def _record(self, lane: Lane, dec, times: Dict[str, Tuple[float, float]]):
+        members = (dec.request,) + tuple(getattr(dec, "corequests", ()))
+        for s, (start, fin) in times.items():
+            for req in members:
+                req.stage_done[s] = fin
+            ptype = lane.engine.plan.placements[
+                (dec.d_units if s == "D" else
+                 dec.e_units if s == "E" else dec.c_units)[0]]
+            heapq.heappush(self._events, (fin, self._eseq, lane.pipeline, s,
+                                          ptype, fin - start, members))
+            self._eseq += 1
+        lane.vr_histogram[dec.vr_type] = (lane.vr_histogram.get(dec.vr_type, 0)
+                                          + len(members))
+
+    # ---------------------------------------------------------------- main
+
+    def run(self) -> FleetResult:
+        budgets = self.fleet_sched.initial_budgets(self.trace)
+        sub_traces = {pid: [r for r in self.trace if r.pipeline == pid]
+                      for pid in self.reg.pipelines}
+        recent = {pid: sub_traces[pid][:64] for pid in self.reg.pipelines}
+        self.plan = self.orch.generate(recent, budgets)
+        if self.plan is None:
+            return self._oom_result()
+        for pid in self.reg.pipelines:
+            prof = self.reg.profiler(pid)
+            lane = Lane(pid, prof, self.cfg.lane_sim_cfg(budgets[pid]),
+                        sub_traces[pid], aggregate_ilp=self.cfg.aggregate_ilp)
+            lane.engine = RuntimeEngine(
+                prof, self.plan.subplans[pid],
+                proactive_push=self.cfg.proactive_push,
+                adjust_on_dispatch=self.cfg.adjust_on_dispatch)
+            lane.placement_log.append(
+                (0.0, self.plan.subplans[pid].type_histogram()))
+            self.lanes[pid] = lane
+        self.repartition_log.append((0.0, dict(budgets)))
+        # the initial partition is a partition event: the swap cooldown runs
+        # from deployment, so a seconds-old (near-empty) demand window can't
+        # trigger an immediate re-partition
+        self.fleet_monitor.last_repartition = 0.0
+        self._run_event()
+        return self._result()
+
+    # -- one scheduler step ---------------------------------------------------
+
+    def _admit(self, tau: float, ai: int) -> int:
+        for lane in self.lanes.values():
+            lane.new_arrivals = []
+        trace = self.trace
+        while ai < len(trace) and trace[ai].arrival <= tau:
+            r = trace[ai]
+            lane = self.lanes[r.pipeline]
+            lane.pending.add(r)
+            lane.new_arrivals.append(r)
+            self.fleet_monitor.record_arrival(
+                r.arrival, r.pipeline, request_footprint(lane.prof, r))
+            if self._track_flips:
+                heapq.heappush(self._dl_heap, (r.deadline, r.pipeline, r.rid))
+            ai += 1
+        return ai
+
+    def _drain(self, tau: float) -> None:
+        while self._events and self._events[0][0] <= tau:
+            t, _, pid, s, ptype, dur, members = heapq.heappop(self._events)
+            lane = self.lanes[pid]
+            lane.monitor.record_stage(t, s, ptype, dur)
+            if s == "C":
+                lane.throughput[int(t // 60)] = (
+                    lane.throughput.get(int(t // 60), 0) + 1)
+                for req in members:
+                    self.fleet_monitor.record_finish(t, pid,
+                                                     t <= req.deadline)
+
+    def _step(self, tau: float) -> None:
+        self.sched_wakeups += 1
+        budgets = self.fleet_sched.maybe_repartition(self, tau)
+        if budgets is not None:
+            self._repartition(budgets, tau)
+        for pid, lane in self.lanes.items():
+            new_plan = lane.sched.maybe_replace(lane, tau)
+            if new_plan is not None:
+                new_plan.pipeline = pid
+                lane.engine.apply_placement(new_plan, tau)
+                self.plan.subplans[pid] = new_plan
+                lane.placement_log.append((tau, new_plan.type_histogram()))
+            for dec in lane.sched.tick(lane, tau):
+                times = lane.engine.execute(dec, tau)
+                self._record(lane, dec, times)
+                lane.pending.remove(dec.request)
+                for co in getattr(dec, "corequests", ()):
+                    lane.pending.remove(co)
+
+    # -- re-partitioning ------------------------------------------------------
+
+    def _repartition(self, budgets: Dict[str, int], tau: float) -> None:
+        """Move chips between lanes.  Per-chip in-flight work and stage
+        residency carry over; units whose pipeline or placement type changed
+        hands pay the weight-reload latency before becoming dispatchable."""
+        old = self.plan
+        chip_free: Dict[int, float] = {}
+        chip_owner: Dict[int, Tuple[str, frozenset]] = {}
+        for pid, lane in self.lanes.items():
+            lo, _ = old.chip_ranges[pid]
+            k = old.subplans[pid].unit_size
+            for u in lane.engine.units:
+                for c in range(lo + u.uid * k, lo + (u.uid + 1) * k):
+                    chip_free[c] = u.free_at
+                    chip_owner[c] = (pid, frozenset(u.resident))
+        recent = {}
+        measured = {}
+        for pid, lane in self.lanes.items():
+            recent[pid] = [r for r in lane.sched._recent
+                           if r.arrival > tau - lane.sched.t_win][-512:]
+            measured[pid] = lane.monitor.placement_rates(
+                tau, old.subplans[pid].type_histogram())
+        new_plan = self.orch.generate(recent, budgets, measured)
+        if new_plan is None:   # no feasible re-partition: keep the old plan
+            return
+        for pid, lane in self.lanes.items():
+            sub = new_plan.subplans[pid]
+            prof = lane.prof
+            lane.bank_engine_stats()
+            engine = RuntimeEngine(
+                prof, sub, proactive_push=self.cfg.proactive_push,
+                adjust_on_dispatch=self.cfg.adjust_on_dispatch)
+            busy: Dict[int, float] = {}
+            lo, _ = new_plan.chip_ranges[pid]
+            k = sub.unit_size
+            for g, ptype in enumerate(sub.placements):
+                chips = range(lo + g * k, lo + (g + 1) * k)
+                base = max(chip_free.get(c, 0.0) for c in chips)
+                need = set(ptype)
+                reload = 0.0
+                for c in chips:
+                    owner = chip_owner.get(c)
+                    missing = (need if owner is None or owner[0] != pid
+                               else need - owner[1])
+                    if missing:
+                        reload = max(reload, sum(
+                            prof.stage_load_time(s, via_host=True)
+                            for s in missing))
+                if reload > 0.0:
+                    self.swap_cost_s += reload
+                    self.units_reloaded += 1
+                    busy[g] = max(tau, base) + reload
+                elif base > 0.0:
+                    busy[g] = base
+            engine.seed_unit_state(busy)
+            lane.engine = engine
+            lane.sched.orch.resize(budgets[pid])
+            lane.placement_log.append((tau, sub.type_histogram()))
+        self.plan = new_plan
+        self.fleet_monitor.last_repartition = tau
+        # the swap happened: only now does the partition's demand basis move
+        # (an aborted re-partition must leave the mix-shift trigger armed)
+        self.fleet_sched.basis_shares = self.fleet_monitor.demand_shares(tau)
+        self.repartition_log.append((tau, dict(budgets)))
+
+    # -- event-heap-driven clock (mirrors Simulator._run_event) ----------------
+
+    def _aging_flips(self, tau: float) -> int:
+        flips = 0
+        heap = self._dl_heap
+        while heap and heap[0][0] <= tau:
+            _, pid, rid = heapq.heappop(heap)
+            if self.lanes[pid].pending.has_rid(rid):
+                flips += 1
+        return flips
+
+    def _run_event(self) -> None:
+        tick = self.cfg.tick
+        trace_end = self.trace[-1].arrival if self.trace else 0.0
+        horizon = trace_end + self.cfg.horizon_slack
+        gap_base = max(self.cfg.max_idle_gap, tick)
+        gap_max = max(self.cfg.idle_gap_max, gap_base)
+        gap = gap_base
+        lane_replace = {
+            pid: type(lane.sched).maybe_replace is not Scheduler.maybe_replace
+            for pid, lane in self.lanes.items()}
+        ai = 0
+        i = 0
+        while i * tick <= horizon:
+            tau = i * tick
+            ai = self._admit(tau, ai)
+            self._drain(tau)
+            self._step(tau)
+            pending = any(lane.pending for lane in self.lanes.values())
+            if ai >= len(self.trace) and not pending and not self._events:
+                break
+            if self._track_flips:
+                gap = (gap_base if self._aging_flips(tau)
+                       else min(gap * 2.0, gap_max))
+            t_next = math.inf
+            if ai < len(self.trace):
+                t_next = self.trace[ai].arrival
+            if self._events:
+                t_next = min(t_next, self._events[0][0])
+            for pid, lane in self.lanes.items():
+                if lane_replace[pid] and (lane.pending or self._events):
+                    boundary = lane.monitor.next_window_boundary()
+                    if boundary is not None and boundary > tau:
+                        t_next = min(t_next, boundary)
+            if self._repartition_capable and (pending or self._events):
+                boundary = self.fleet_monitor.next_window_boundary()
+                if boundary is not None and boundary > tau:
+                    t_next = min(t_next, boundary)
+            if pending:
+                t_next = min(t_next, tau + gap)
+            if t_next is math.inf:
+                break
+            i = max(i + 1, int(math.ceil(t_next / tick - 1e-9)))
+
+    # ---------------------------------------------------------------- results
+
+    def _oom_result(self) -> FleetResult:
+        return FleetResult(
+            scheduler=self.fleet_sched.name, num_chips=self.cfg.num_chips,
+            oom=True, n_requests=len(self.trace), n_finished=0,
+            n_request_oom=len(self.trace), slo_attainment=0.0, goodput=0.0,
+            mean_latency=float("inf"), p95_latency=float("inf"),
+            per_pipeline={}, engine_stats={}, repartitions=[],
+            swap_cost_s=0.0, units_reloaded=0, sched_wakeups=0)
+
+    @staticmethod
+    def _metrics(reqs: Sequence[Request], oom_ids: set,
+                 horizon_lat: float) -> Dict[str, float]:
+        lat: List[float] = []
+        on_time = 0
+        finished = 0
+        for r in reqs:
+            if r.rid in oom_ids:
+                lat.append(horizon_lat)
+                continue
+            if r.finished:
+                finished += 1
+                lat.append(r.latency)
+                on_time += int(r.on_time)
+            else:
+                lat.append(horizon_lat - r.arrival)   # censored
+        lat_sorted = sorted(lat)
+        n = len(lat_sorted)
+        return {
+            "requests": n, "finished": finished, "on_time": on_time,
+            "slo": on_time / max(1, n),
+            "mean_s": sum(lat) / max(1, n),
+            "p95_s": lat_sorted[int(0.95 * (n - 1))] if n else 0.0,
+        }
+
+    def _result(self) -> FleetResult:
+        trace_end = self.trace[-1].arrival if self.trace else 0.0
+        horizon_lat = trace_end + self.cfg.horizon_slack
+        oom_ids = {r.rid for lane in self.lanes.values()
+                   for r in lane.request_oom}
+        per_pipeline: Dict[str, Dict[str, float]] = {}
+        for pid, lane in self.lanes.items():
+            reqs = [r for r in self.trace if r.pipeline == pid]
+            m = self._metrics(reqs, oom_ids, horizon_lat)
+            m["chips"] = self.plan.chip_ranges[pid][1] - \
+                self.plan.chip_ranges[pid][0]
+            per_pipeline[pid] = m
+        agg = self._metrics(self.trace, oom_ids, horizon_lat)
+        return FleetResult(
+            scheduler=self.fleet_sched.name, num_chips=self.cfg.num_chips,
+            oom=False, n_requests=len(self.trace),
+            n_finished=int(agg["finished"]), n_request_oom=len(oom_ids),
+            slo_attainment=agg["slo"],
+            goodput=agg["on_time"] / max(trace_end, 1e-9),
+            mean_latency=agg["mean_s"], p95_latency=agg["p95_s"],
+            per_pipeline=per_pipeline,
+            engine_stats={pid: lane.engine_stats()
+                          for pid, lane in self.lanes.items()},
+            repartitions=self.repartition_log,
+            swap_cost_s=self.swap_cost_s, units_reloaded=self.units_reloaded,
+            sched_wakeups=self.sched_wakeups)
+
+
+# ---------------------------------------------------------------- convenience
+
+def run_fleet(pipelines: Sequence[str], mode: str = "adaptive",
+              duration: float = 600.0, cfg: Optional[FleetConfig] = None,
+              seed: int = 0, rates: Optional[Dict[str, float]] = None,
+              phases: Optional[Sequence] = None, level: str = "medium",
+              trace: Optional[Sequence[Request]] = None,
+              registry: Optional[PipelineRegistry] = None,
+              fixed_budgets: Optional[Dict[str, int]] = None) -> FleetResult:
+    """Build registry + heterogeneous trace + fleet scheduler and run."""
+    cfg = cfg or FleetConfig(seed=seed)
+    registry = registry or PipelineRegistry(pipelines)
+    if trace is None:
+        profs = {pid: registry.profiler(pid) for pid in registry.pipelines}
+        trace = workloads.fleet_trace(pipelines, duration, profs, seed=seed,
+                                      rates=rates, phases=phases, level=level)
+    orch = FleetOrchestrator(registry, num_chips=cfg.num_chips,
+                             chips_per_node=cfg.chips_per_node)
+    sched = FLEET_SCHEDULERS[mode](orch, cfg, fixed_budgets=fixed_budgets)
+    return FleetSimulator(registry, sched, trace, cfg).run()

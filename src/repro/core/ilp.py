@@ -48,6 +48,64 @@ class Solution:
     optimal: bool
 
 
+@dataclasses.dataclass
+class GroupedSolution:
+    """Result of ``solve_grouped``: per-group granted options."""
+    alloc: Dict[int, List[Option]]   # group index -> one Option per copy
+    reward: float
+    nodes: int
+    optimal: bool
+    n_slots: int                     # expanded instance size actually solved
+
+
+def solve_grouped(options: Sequence[Sequence[Option]],
+                  budgets: Sequence[int], counts: Sequence[int],
+                  node_cap: int = 200_000, time_cap: float = 0.2,
+                  warm: Optional[Dict[int, Sequence[Tuple[int, int]]]] = None
+                  ) -> GroupedSolution:
+    """Multiplicity-aware dispatch ILP: group g enters once with a count.
+
+    ``options[g]`` is the option list shared by ``counts[g]`` identical
+    requests; up to ``counts[g]`` copies of group g may be granted (each
+    copy independently picks one option and consumes its usage).  Instead
+    of materializing every member — a dense same-class flood puts thousands
+    of identical rows in front of the solver — each group is expanded only
+    up to its *capacity bound*: every option consumes at least one unit, so
+    no solution grants more copies than ``sum(budgets) // min_usage``.  The
+    truncated members are interchangeable with the kept ones, so the
+    optimum is unchanged; the expanded instance then reuses ``solve`` (whose
+    identical-row symmetry breaking collapses the remaining copies).
+
+    ``warm`` maps group index -> (dim, usage) pairs granted to the group on
+    a previous solve; they seed the incumbent exactly like ``solve``'s warm
+    starts.
+    """
+    total_budget = int(sum(budgets))
+    slot_group: List[int] = []           # expanded slot -> group index
+    slot_opts: List[Sequence[Option]] = []
+    warm_slots: Dict[int, Tuple[int, int]] = {}
+    for g, (opts, m) in enumerate(zip(options, counts)):
+        if not opts or m <= 0:
+            continue
+        min_use = max(1, min(o.usage for o in opts))
+        cap = min(int(m), total_budget // min_use)
+        seeds = list((warm or {}).get(g, ()))
+        for i in range(cap):
+            if i < len(seeds):
+                warm_slots[len(slot_group)] = tuple(seeds[i])
+            slot_group.append(g)
+            slot_opts.append(opts)
+    sol = solve(slot_opts, budgets, node_cap=node_cap, time_cap=time_cap,
+                warm=warm_slots or None)
+    alloc: Dict[int, List[Option]] = {}
+    for si, o in sol.choices.items():
+        alloc.setdefault(slot_group[si], []).append(o)
+    for granted in alloc.values():
+        granted.sort(key=lambda o: (-o.reward, o.usage))
+    return GroupedSolution(alloc=alloc, reward=sol.reward, nodes=sol.nodes,
+                           optimal=sol.optimal, n_slots=len(slot_group))
+
+
 def _greedy(options: Sequence[Sequence[Option]], budgets: List[int],
             seed: Optional[Dict[int, Option]] = None
             ) -> Tuple[Dict[int, Option], float]:

@@ -111,3 +111,102 @@ class Monitor:
         if trigger:
             self.last_switch = tau
         return trigger
+
+
+class FleetMonitor:
+    """Cross-pipeline windows for the shared-cluster fleet (core/fleet.py).
+
+    Per-pipeline sliding-window aggregates over a heterogeneous trace:
+
+    * *demand* — unit-time footprint of arrivals (chip-seconds of Diffuse
+      work at the profiled optimal degree), the quantity the fleet
+      orchestrator weights chip budgets by (``alpha_mode="demand"`` lifted
+      one level up);
+    * *SLO attainment* — windowed on-time fraction per pipeline.
+
+    ``mix_shift`` is the fleet's re-partition trigger: the windowed demand
+    shares have drifted from the shares the current partition was built for
+    (the *basis*) by at least the hysteresis threshold, and the swap
+    cooldown has elapsed — so weight-swap cost is not paid on noise.
+    Aggregates are maintained incrementally (O(1) amortized per record),
+    like ``Monitor``'s: queries sit on the fleet wake-up path.
+    """
+
+    def __init__(self, t_win: float = 180.0):
+        self.t_win = t_win
+        self._arrivals: Deque[Tuple[float, str, float]] = collections.deque()
+        self._demand: Dict[str, float] = collections.defaultdict(float)
+        self._fin: Deque[Tuple[float, str, bool]] = collections.deque()
+        self._fin_n: Dict[str, int] = collections.defaultdict(int)
+        self._fin_on: Dict[str, int] = collections.defaultdict(int)
+        self.last_repartition: float = -1e9
+
+    # -- recording -------------------------------------------------------------
+
+    def record_arrival(self, tau: float, pipeline: str, cost: float) -> None:
+        self._arrivals.append((tau, pipeline, cost))
+        self._demand[pipeline] += cost
+        self._trim(tau)
+
+    def record_finish(self, tau: float, pipeline: str, on_time: bool) -> None:
+        self._fin.append((tau, pipeline, on_time))
+        self._fin_n[pipeline] += 1
+        self._fin_on[pipeline] += int(on_time)
+        self._trim(tau)
+
+    def _trim(self, tau: float) -> None:
+        cutoff = tau - self.t_win
+        q = self._arrivals
+        while q and q[0][0] < cutoff:
+            _, p, c = q.popleft()
+            self._demand[p] -= c
+        f = self._fin
+        while f and f[0][0] < cutoff:
+            _, p, on = f.popleft()
+            self._fin_n[p] -= 1
+            self._fin_on[p] -= int(on)
+
+    # -- queries ---------------------------------------------------------------
+
+    def demand(self, tau: float) -> Dict[str, float]:
+        """Raw windowed unit-time demand (chip-seconds) per pipeline."""
+        self._trim(tau)
+        return {p: v for p, v in self._demand.items() if v > 0}
+
+    def demand_shares(self, tau: float) -> Dict[str, float]:
+        """Windowed unit-time demand share per pipeline (sums to 1)."""
+        self._trim(tau)
+        total = sum(v for v in self._demand.values() if v > 0)
+        if total <= 0:
+            return {}
+        return {p: max(0.0, v) / total for p, v in self._demand.items()
+                if v > 0}
+
+    def slo_attainment(self, tau: float) -> Dict[str, float]:
+        self._trim(tau)
+        return {p: self._fin_on[p] / self._fin_n[p]
+                for p in self._fin_n if self._fin_n[p] > 0}
+
+    def next_window_boundary(self) -> Optional[float]:
+        heads = [q[0][0] for q in (self._arrivals, self._fin) if q]
+        if not heads:
+            return None
+        return min(heads) + self.t_win
+
+    def mix_shift(self, tau: float, basis: Optional[Dict[str, float]],
+                  threshold: float = 0.10, cooldown: float = 120.0,
+                  min_arrivals: int = 32) -> bool:
+        """Has the traffic mix moved away from ``basis`` (the demand shares
+        underlying the current partition) by at least ``threshold`` (total
+        variation distance), past the cooldown, on enough evidence?"""
+        if tau - self.last_repartition < cooldown:
+            return False
+        if len(self._arrivals) < min_arrivals or basis is None:
+            return False
+        shares = self.demand_shares(tau)
+        if not shares:
+            return False
+        keys = set(shares) | set(basis)
+        dist = 0.5 * sum(abs(shares.get(k, 0.0) - basis.get(k, 0.0))
+                         for k in keys)
+        return dist >= threshold

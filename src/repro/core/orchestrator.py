@@ -36,6 +36,13 @@ class Orchestrator:
         self.units_per_node = max(1, chips_per_node // profiler.k_min)
         self.alpha_mode = alpha_mode
 
+    def resize(self, num_chips: int) -> None:
+        """Re-target the orchestrator at a new chip budget.  Used by the
+        fleet layer (core/fleet.py) when the shared-cluster partition moves
+        chips between pipelines; subsequent ``generate`` calls plan within
+        the new budget."""
+        self.num_units = num_chips // self.prof.k_min
+
     # -- Algorithm 2, lines 1-2 ----------------------------------------------
 
     def opt_vr(self, req: Request) -> int:
@@ -103,6 +110,15 @@ class Orchestrator:
         if n_c < (1 if n_t >= 3 else 0):
             n_c = max(0, n_c)
             n_p = n_t - n_e - n_c
+        # degenerate guard (n_t <= 2 with extreme rates): the rounding above
+        # can let the aux buckets swallow the whole budget; shrink the larger
+        # aux until the primary keeps at least one unit
+        while n_p < 1 and (n_e > 0 or n_c > 0):
+            if n_e >= n_c:
+                n_e -= 1
+            else:
+                n_c -= 1
+            n_p += 1
         # feasibility: aux capacity must cover the primary's service rate
         while n_p > 1 and (n_e * v_e < n_p * v_p or n_c * v_c < n_p * v_p):
             n_p -= 1
@@ -140,10 +156,31 @@ class Orchestrator:
                 counts[prim] = want - need
         # fix total
         drift = total - sum(counts.values())
-        if drift != 0:
-            # give/take from the largest bucket
+        if drift > 0:
+            # surplus units go to the largest bucket
             t = max(counts, key=lambda t: counts[t])
-            counts[t] = max(0, counts[t] + drift)
+            counts[t] += drift
+        elif drift < 0:
+            # shed units largest-bucket-first.  A single lump subtraction
+            # could silently zero the largest bucket — including the only
+            # D-carrying one, leaving a plan that can never run Diffuse —
+            # so shed one unit at a time and never take a primary bucket's
+            # last unit while it is the only primary left.
+            for _ in range(-drift):
+                pick = None
+                n_prim = sum(c for t, c in counts.items()
+                             if t in PRIMARY_PLACEMENTS)
+                for t in sorted(counts, key=lambda t: -counts[t]):
+                    if counts[t] <= 0:
+                        continue
+                    if t in PRIMARY_PLACEMENTS and n_prim <= 1:
+                        continue
+                    pick = t
+                    break
+                if pick is None:   # only a lone primary unit remains
+                    break
+                counts[pick] -= 1
+            counts = {t: c for t, c in counts.items() if c > 0}
         # pack: homogeneous blocks node by node, primaries first
         order = [t for t in (EDC, DC, ED, D, E, C) if counts.get(t, 0) > 0]
         placements: List[str] = []

@@ -48,13 +48,24 @@ def vr_of_primary(ptype: str) -> int:
 
 @dataclasses.dataclass
 class PlacementPlan:
-    """P = {π_g}: placement type per scheduling unit (k_min chips)."""
+    """P = {π_g}: placement type per scheduling unit (k_min chips).
+
+    ``pipeline`` tags the owning pipeline when the plan is one slice of a
+    shared-cluster fleet plan (core/fleet.py): each scheduling unit then
+    carries ``(pipeline, placement_type)``.  Single-tenant plans leave it
+    empty — the 1-pipeline special case.
+    """
     placements: List[str]                 # index = unit id
     unit_size: int = 1                    # chips per unit (App. E.2 MP fold)
     units_per_node: int = 8               # 8-chip nodes / unit_size
+    pipeline: str = ""                    # owning pipeline in a fleet plan
 
     def __post_init__(self):
         assert all(p in PLACEMENT_TYPES for p in self.placements)
+
+    def tagged(self, unit: int) -> Tuple[str, str]:
+        """(pipeline, placement_type) of one scheduling unit."""
+        return (self.pipeline, self.placements[unit])
 
     @property
     def num_units(self) -> int:
@@ -99,4 +110,4 @@ class PlacementPlan:
 
     def copy(self) -> "PlacementPlan":
         return PlacementPlan(list(self.placements), self.unit_size,
-                             self.units_per_node)
+                             self.units_per_node, self.pipeline)

@@ -96,6 +96,18 @@ class RuntimeEngine:
     def free_at(self) -> Dict[int, float]:
         return {u.uid: u.free_at for u in self.units}
 
+    def seed_unit_state(self, busy_until: Dict[int, float]) -> None:
+        """Pre-busy freshly built units (fleet re-partition, core/fleet.py):
+        a unit inherits the in-flight work of the chips it now owns plus the
+        weight-reload latency charged when its pipeline or placement type
+        changed hands."""
+        for uid, t in busy_until.items():
+            u = self.units[uid]
+            if t > u.free_at:
+                u.free_at = t
+            if u.free_at > 0.0:
+                self._mark_busy(uid, u.free_at)
+
     # ----------------------------------------------------------- placement plan
 
     def apply_placement(self, new_plan: PlacementPlan, tau: float,

@@ -49,6 +49,11 @@ class SimConfig:
     max_idle_gap: float = 1.0         # event mode: max clock jump while
                                       # requests are pending (keeps periodic
                                       # re-placement/aging checks alive)
+    adaptive_idle_gap: bool = False   # profile-guided heartbeat: double the
+                                      # gap while no pending request crosses
+                                      # its deadline (no aging flips), reset
+                                      # to max_idle_gap when one does
+    idle_gap_max: float = 16.0        # ceiling for the adaptive gap (s)
 
 
 @dataclasses.dataclass
@@ -103,6 +108,9 @@ class PendingSet:
 
     def discard(self, req: Request) -> None:
         self._by_rid.pop(req.rid, None)
+
+    def has_rid(self, rid: int) -> bool:
+        return rid in self._by_rid
 
     def __contains__(self, req: Request) -> bool:
         return req.rid in self._by_rid
@@ -160,6 +168,11 @@ class Simulator:
         self.throughput: Dict[int, int] = {}
         self.request_oom: List[Request] = []
         self.sched_wakeups = 0
+        # profile-guided heartbeat: deadlines of pending requests, drained
+        # as the clock passes them to observe aging flips (adaptive mode)
+        self._track_flips = (sim_cfg.mode == "event"
+                             and sim_cfg.adaptive_idle_gap)
+        self._dl_heap: List[Tuple[float, int]] = []
         # monitor-window wake-ups only matter to schedulers that re-place
         self._replace_capable = (type(scheduler).maybe_replace
                                  is not Scheduler.maybe_replace)
@@ -208,9 +221,25 @@ class Simulator:
         while ai < len(trace) and trace[ai].arrival <= tau:
             self.pending.add(trace[ai])
             new.append(trace[ai])
+            if self._track_flips:
+                heapq.heappush(self._dl_heap, (trace[ai].deadline,
+                                               trace[ai].rid))
             ai += 1
         self.new_arrivals = new
         return ai
+
+    def _aging_flips(self, tau: float) -> int:
+        """Deadlines crossed up to ``tau`` among still-pending requests —
+        the events that change dispatch rewards while nothing else moves.
+        The observed flip rate steers the heartbeat gap (profile-guided
+        ``max_idle_gap``): no flips -> the gap doubles, a flip -> reset."""
+        flips = 0
+        heap = self._dl_heap
+        while heap and heap[0][0] <= tau:
+            _, rid = heapq.heappop(heap)
+            if self.pending.has_rid(rid):
+                flips += 1
+        return flips
 
     def _drain_events(self, tau: float) -> None:
         """Feed completion events up to ``tau`` into the Monitor."""
@@ -272,7 +301,9 @@ class Simulator:
         """
         tick = self.cfg.tick
         horizon = self._horizon()
-        gap = max(self.cfg.max_idle_gap, tick)
+        gap_base = max(self.cfg.max_idle_gap, tick)
+        gap_max = max(self.cfg.idle_gap_max, gap_base)
+        gap = gap_base
         ai = 0
         i = 0
         while i * tick <= horizon:
@@ -282,6 +313,9 @@ class Simulator:
             self._step(tau)
             if self._done(ai):
                 break
+            if self._track_flips:
+                gap = (gap_base if self._aging_flips(tau)
+                       else min(gap * 2.0, gap_max))
             t_next = math.inf
             if ai < len(self.trace):
                 t_next = self.trace[ai].arrival

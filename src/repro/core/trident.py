@@ -21,10 +21,13 @@ class TridentScheduler(Scheduler):
     def __init__(self, prof: Profiler, sim_cfg: SimConfig,
                  trace: Sequence[Request], *, enable_switch: bool = True,
                  stage_aware: bool = True, use_ilp: bool = True,
-                 enable_batching: bool = True):
+                 enable_batching: bool = True, aggregate_ilp: bool = False):
         super().__init__(prof, sim_cfg, trace)
         self.orch = Orchestrator(prof, num_chips=sim_cfg.num_chips)
-        self.disp = Dispatcher(prof)
+        # aggregate_ilp: multiplicity-aware solver aggregation (identical
+        # pending requests enter once with a count); default off so the
+        # single-pipeline path keeps its exact pre-aggregation behavior
+        self.disp = Dispatcher(prof, aggregate=aggregate_ilp)
         self.enable_switch = enable_switch      # wo-switch ablation
         self.stage_aware = stage_aware          # wo-stageAware ablation
         self.use_ilp = use_ilp                  # wo-scheduler ablation

@@ -141,6 +141,61 @@ def proprietary_trace(pipeline: str, duration: float, prof: Profiler,
     return out
 
 
+# -- heterogeneous fleet traces (shared-cluster co-serving, core/fleet.py) ----
+
+# Per-pipeline base rates for the 512-chip shared cluster (requests/s),
+# and the canonical traffic-mix flip: image-dominated first half, then
+# demand tilts hard toward the heavy pipelines mid-trace.  Tuned so both
+# phases run the cluster hot (~60-75% busy chips) with very different
+# per-pipeline splits — the regime where the partition, not raw capacity,
+# decides SLOs.  A static partition sized for the first half strands chips
+# on SD3 exactly when Flux/CogVideoX back up.  ``benchmarks/e2e.py
+# --mixed --shared`` passes these explicitly; ``fleet_trace`` itself
+# defaults to a flat single phase.
+FLEET_RATES: Dict[str, float] = {"sd3": 60.0, "flux": 3.0, "cogvideox": 2.0}
+MIX_FLIP: Tuple[Tuple[float, Dict[str, float]], ...] = (
+    (0.5, {"sd3": 2.0, "flux": 1.0 / 3.0, "cogvideox": 0.75}),
+    (1.0, {"sd3": 0.5, "flux": 2.0, "cogvideox": 1.25}),
+)
+
+
+def fleet_trace(pipelines: Sequence[str], duration: float,
+                profs: Dict[str, Profiler], seed: int = 0,
+                rates: Optional[Dict[str, float]] = None,
+                phases: Optional[Sequence[Tuple[float, Dict[str, float]]]] = None,
+                level: str = "medium",
+                slo_scale: float = SLO_SCALE) -> List[Request]:
+    """Merged multi-pipeline trace with piecewise-constant rate multipliers.
+
+    ``phases`` is a sequence of ``(end_fraction, {pipeline: multiplier})``
+    spans; within each span pipeline ``p`` arrives as a Poisson process at
+    ``rates[p] * multiplier`` (missing multipliers default to 1).  Each
+    pipeline draws from its own deterministic stream, so adding a pipeline
+    or reordering the list never perturbs the others' arrivals."""
+    if phases is None:
+        phases = ((1.0, {}),)
+    out: List[Request] = []
+    for pid in pipelines:
+        rng = random.Random(f"fleet:{seed}:{pid}")
+        base = (rates or FLEET_RATES).get(pid, RATES[pid])
+        mix = MIXES[pid][level]
+        start = 0.0
+        for end_frac, mults in phases:
+            end = duration * end_frac
+            r = base * mults.get(pid, 1.0)
+            if r > 0.0:
+                t = start
+                while True:
+                    t += rng.expovariate(r)
+                    if t >= end:
+                        break
+                    out.append(_mk_request(pid, _sample_class(rng, mix), t,
+                                           profs[pid], slo_scale))
+            start = end
+    out.sort(key=lambda r: r.arrival)
+    return out
+
+
 def make_trace(pipeline: str, workload: str, duration: float, prof: Profiler,
                seed: int = 0, rate: Optional[float] = None,
                slo_scale: float = SLO_SCALE) -> List[Request]:

@@ -147,3 +147,108 @@ def test_cross_node_profiler_extends_degrees(profilers):
     assert wide.max_degree_units > base.max_degree_units
     heavy = Request("flux", 4096)
     assert wide.optimal_degree(heavy, "D") >= base.optimal_degree(heavy, "D")
+
+
+# -- Split() invariants across a randomized rate grid -------------------------
+
+def test_split_invariants_randomized_rate_grid():
+    """Counts sum to n_t, nothing negative, the primary keeps at least one
+    unit whenever n_t >= 1, and V3's aux-capacity feasibility loop settles
+    (n_p == 1 or both aux pools cover the primary's service rate)."""
+    rng = random.Random(1234)
+    for case in range(400):
+        n_t = rng.randint(1, 64)
+        # extreme rate ratios included on purpose: the degenerate n_t <= 2
+        # cases used to let the aux buckets swallow the whole budget
+        rates = {"prim": 10 ** rng.uniform(-3, 3),
+                 "auxE": 10 ** rng.uniform(-3, 3),
+                 "auxC": 10 ** rng.uniform(-3, 3)}
+        for vr in range(4):
+            counts = Orchestrator.split(n_t, vr, rates)
+            prim = primary_of_vr(vr)
+            assert sum(counts.values()) == n_t, (case, vr, counts)
+            assert all(c >= 0 for c in counts.values()), (case, vr, counts)
+            assert counts.get(prim, 0) >= 1, (case, vr, counts)
+            if vr in (1, 2) and n_t >= 2:
+                # the aux placement must exist once there is room for it
+                aux = sum(c for t, c in counts.items() if t != prim)
+                assert aux >= 1, (case, vr, counts)
+            if vr == 3:
+                n_p = counts[prim]
+                n_e = counts.get("E", 0)
+                n_c = counts.get("C", 0)
+                v_p, v_e, v_c = rates["prim"], rates["auxE"], rates["auxC"]
+                assert (n_p == 1
+                        or (n_e * v_e >= n_p * v_p and n_c * v_c >= n_p * v_p)
+                        ), (case, counts, rates)
+
+
+# -- PackPerMachine drift correction ------------------------------------------
+
+def test_pack_drift_never_zeroes_the_only_primary(profilers):
+    """Regression: a large negative drift used to be lump-subtracted from
+    the largest bucket — silently zeroing it even when it was the only
+    D-carrying one, leaving a plan that can never run Diffuse."""
+    prof = profilers["sd3"]
+    orch = Orchestrator(prof, num_chips=4 * prof.k_min)
+    plan = orch.pack_per_machine({"EDC": 40, "E": 2, "C": 2})
+    assert plan.num_units == orch.num_units
+    assert any(p in PRIMARY_PLACEMENTS for p in plan.placements), \
+        plan.type_histogram()
+
+
+def test_pack_drift_redistributes_across_buckets(profilers):
+    """Negative drift sheds from the largest buckets one unit at a time
+    instead of lump-zeroing one of them, so every over-provisioned bucket
+    shrinks proportionally and none silently disappears."""
+    prof = profilers["sd3"]
+    orch = Orchestrator(prof, num_chips=16 * prof.k_min)
+    plan = orch.pack_per_machine({"D": 4, "E": 30, "C": 30})
+    hist = plan.type_histogram()
+    assert plan.num_units == 16
+    assert hist.get("D", 0) >= 1
+    # both aux stages must survive the shed (the old lump subtraction could
+    # zero one of them entirely)
+    assert hist.get("E", 0) >= 1 and hist.get("C", 0) >= 1, hist
+
+
+def test_pack_positive_drift_still_fills(profilers):
+    prof = profilers["sd3"]
+    orch = Orchestrator(prof, num_chips=32 * prof.k_min)
+    plan = orch.pack_per_machine({"EDC": 3, "E": 1})
+    assert plan.num_units == 32
+    assert plan.count_of_type("EDC") >= 3
+
+
+# -- multiplicity-aware dispatch aggregation ----------------------------------
+
+def test_dispatcher_aggregate_matches_plain_on_flood(profilers):
+    """A dense same-class flood must dispatch the same work with and
+    without aggregation — while the aggregated solver sees a
+    capacity-bounded instance instead of one row per request."""
+    from repro.core.request import Request as Req
+    prof = profilers["sd3"]
+    orch = Orchestrator(prof, num_chips=128)
+    flood = []
+    for _ in range(300):
+        r = Req("sd3", 512, arrival=0.0)
+        r.deadline = 1e9
+        flood.append(r)
+    plan = orch.generate(flood)
+    idle = set(range(plan.num_units))
+    free_at = {g: 0.0 for g in idle}
+    import collections
+    outcomes = {}
+    for agg in (False, True):
+        disp = Dispatcher(prof, aggregate=agg)
+        decs = disp.dispatch(list(flood), plan, set(idle), dict(free_at), 0.0)
+        outcomes[agg] = (
+            collections.Counter((d.vr_type, d.degree) for d in decs),
+            disp.last_solve_stats)
+    hist_plain, stats_plain = outcomes[False]
+    hist_agg, stats_agg = outcomes[True]
+    assert hist_agg == hist_plain
+    assert abs(stats_agg["reward"] - stats_plain["reward"]) < 1e-6
+    # the flood collapses to one group, capacity-capped
+    assert stats_agg["n_groups"] == 1
+    assert stats_agg["n_solved"] < stats_plain["n_solved"]

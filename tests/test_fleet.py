@@ -1,0 +1,247 @@
+"""Shared-cluster co-serving (core/fleet.py): one placement plan for
+heterogeneous pipelines over one chip pool.
+
+Covers: registry/plan/budget invariants, the 1-pipeline special case
+(bit-identical to Simulator + TridentScheduler), mix-shift detection with
+hysteresis, re-partition weight-swap accounting, and the headline behavior
+— the adaptive fleet beats static sub-clusters under a traffic-mix flip.
+"""
+import pytest
+
+import repro.configs as C
+from repro.core import workloads
+from repro.core.monitor import FleetMonitor
+from repro.core.profiler import Profiler
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.trident import TridentScheduler
+from repro.core.fleet import (FLEET_SCHEDULERS, AdaptiveFleetScheduler,
+                              FleetConfig, FleetOrchestrator, FleetSimulator,
+                              FleetScheduler, PipelineRegistry, run_fleet)
+
+FLIP = ((0.5, {"sd3": 1.5, "flux": 0.3}),
+        (1.0, {"sd3": 0.3, "flux": 2.0}))
+RATES = {"sd3": 10.0, "flux": 1.0}
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return PipelineRegistry(("sd3", "flux"))
+
+
+def small_cfg(**kw):
+    base = dict(num_chips=128, t_win=60.0, cooldown=40.0)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+# -- registry / plan / budgets -----------------------------------------------
+
+def test_registry_holds_one_profiler_per_pipeline(registry):
+    assert registry.pipelines == ("sd3", "flux")
+    assert len(registry) == 2
+    assert "sd3" in registry and "hunyuanvideo" not in registry
+    assert registry.profiler("flux").cfg.name == "flux"
+
+
+def test_budgets_node_quantized_floored_and_exact(registry):
+    orch = FleetOrchestrator(registry, num_chips=128, chips_per_node=8)
+    for weights in ({"sd3": 3.0, "flux": 1.0},
+                    {"sd3": 1.0, "flux": 0.0},      # zero-demand pipeline
+                    {"sd3": 0.0, "flux": 0.0}):     # no demand at all
+        budgets = orch.budgets(weights)
+        assert sum(budgets.values()) == 128
+        for pid, chips in budgets.items():
+            assert chips % 8 == 0
+            assert chips >= 8, f"{pid} lost its floor node: {budgets}"
+
+
+def test_fleet_plan_units_are_pipeline_tagged(registry):
+    orch = FleetOrchestrator(registry, num_chips=128)
+    budgets = orch.budgets({"sd3": 2.0, "flux": 1.0})
+    plan = orch.generate({}, budgets)
+    assert plan is not None
+    assert plan.budget_histogram() == budgets
+    # contiguous, disjoint, exhaustive chip ranges
+    spans = sorted(plan.chip_ranges.values())
+    assert spans[0][0] == 0 and spans[-1][1] == 128
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c
+    for pid, sub in plan.subplans.items():
+        assert sub.pipeline == pid
+        prof = registry.profiler(pid)
+        assert sub.num_units * sub.unit_size == plan.budget_histogram()[pid]
+        assert sub.unit_size == prof.k_min
+        for s in "EDC":
+            assert sub.units_with(s), f"{pid}: no unit hosts stage {s}"
+        assert sub.tagged(0) == (pid, sub.placements[0])
+    tags = plan.tagged_units()
+    assert {t[0] for t in tags} == {"sd3", "flux"}
+
+
+# -- 1-pipeline special case --------------------------------------------------
+
+def test_single_pipeline_fleet_matches_simulator():
+    """A fleet with one registered pipeline must reproduce the plain
+    Simulator + TridentScheduler results exactly — the single-pipeline
+    system is the fleet's 1-pipeline special case."""
+    prof = Profiler(C.get("sd3"))
+    t1 = workloads.make_trace("sd3", "medium", 45.0, prof, seed=3)
+    t2 = workloads.make_trace("sd3", "medium", 45.0, prof, seed=3)
+    cfg = SimConfig(num_chips=128)
+    base = Simulator("sd3", TridentScheduler(prof, cfg, t1), t1, cfg).run()
+    fleet = run_fleet(["sd3"], mode="static",
+                      cfg=FleetConfig(num_chips=128, adaptive_idle_gap=False,
+                                      aggregate_ilp=False),
+                      trace=t2)
+    assert fleet.slo_attainment == base.slo_attainment
+    assert fleet.mean_latency == base.mean_latency
+    assert fleet.p95_latency == base.p95_latency
+    assert fleet.n_finished == base.n_finished
+    assert fleet.sched_wakeups == base.sched_wakeups
+    assert fleet.repartitions[1:] == []          # static never moves
+
+
+# -- mix-shift monitor ---------------------------------------------------------
+
+def test_fleet_monitor_mix_shift_hysteresis_and_cooldown():
+    mon = FleetMonitor(t_win=100.0)
+    mon.last_repartition = 0.0
+    for i in range(40):
+        mon.record_arrival(10.0 + i, "sd3", 3.0)
+        mon.record_arrival(10.0 + i, "flux", 1.0)
+    shares = mon.demand_shares(50.0)
+    assert abs(shares["sd3"] - 0.75) < 1e-9
+    basis = dict(shares)
+    # same mix: below the hysteresis threshold -> no trigger
+    assert not mon.mix_shift(200.0, basis, threshold=0.1, cooldown=60.0)
+    # mix flips hard
+    for i in range(60):
+        mon.record_arrival(150.0 + i, "flux", 10.0)
+    assert mon.mix_shift(210.0, basis, threshold=0.1, cooldown=60.0)
+    # ...but not inside the cooldown window
+    mon.last_repartition = 205.0
+    assert not mon.mix_shift(210.0, basis, threshold=0.1, cooldown=60.0)
+    # nor against an already-updated basis
+    mon.last_repartition = 0.0
+    new_basis = mon.demand_shares(210.0)
+    assert not mon.mix_shift(210.0, new_basis, threshold=0.1, cooldown=60.0)
+
+
+def test_fleet_monitor_windows_slide():
+    mon = FleetMonitor(t_win=50.0)
+    mon.record_arrival(0.0, "sd3", 5.0)
+    mon.record_finish(1.0, "sd3", True)
+    mon.record_finish(2.0, "sd3", False)
+    assert mon.slo_attainment(10.0)["sd3"] == 0.5
+    assert mon.next_window_boundary() == 50.0
+    mon.record_arrival(100.0, "flux", 2.0)   # slides the old samples out
+    assert "sd3" not in mon.demand_shares(100.0)
+    assert mon.slo_attainment(100.0) == {}
+
+
+# -- co-serving behavior -------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def flip_results():
+    out = {}
+    for mode in ("static", "adaptive"):
+        out[mode] = run_fleet(["sd3", "flux"], mode=mode, duration=120.0,
+                              cfg=small_cfg(), rates=RATES, phases=FLIP)
+    return out
+
+
+def test_adaptive_beats_static_on_mix_flip(flip_results):
+    """The tentpole claim at test scale: when the traffic mix flips
+    mid-trace, re-partitioning the shared pool beats static sub-clusters
+    on tail latency and SLO attainment."""
+    st, ad = flip_results["static"], flip_results["adaptive"]
+    assert not st.oom and not ad.oom
+    assert st.n_requests == ad.n_requests   # identical arrivals (same seed)
+    assert len(ad.repartitions) > 1         # it actually moved chips
+    assert len(st.repartitions) == 1        # static never did
+    assert ad.p95_latency < st.p95_latency
+    assert ad.slo_attainment >= st.slo_attainment
+    # the flipped-to pipeline is where the win comes from
+    assert (ad.per_pipeline["flux"]["p95_s"]
+            < st.per_pipeline["flux"]["p95_s"])
+
+
+def test_repartition_charges_weight_swap_cost(flip_results):
+    ad = flip_results["adaptive"]
+    assert ad.units_reloaded > 0
+    assert ad.swap_cost_s > 0.0
+    # engine counters survive the engine swaps: the adaptive run's banked
+    # totals must cover the whole trace, not just the post-swap stretch —
+    # the static run (one engine, never retired) is the reference
+    st = flip_results["static"]
+    ad_disp = sum(s["dispatches"] for s in ad.engine_stats.values())
+    st_disp = sum(s["dispatches"] for s in st.engine_stats.values())
+    assert ad_disp > 0.7 * st_disp
+
+
+def test_aborted_repartition_keeps_trigger_armed(monkeypatch):
+    """If the re-partition's plan generation fails, the mix-shift trigger
+    must stay armed (the demand basis only moves when a swap succeeds) —
+    the fleet retries and eventually moves the chips."""
+    from repro.core import fleet as fleet_mod
+    calls = {"n": 0}
+    orig = fleet_mod.FleetOrchestrator.generate
+
+    def flaky(self, recent, budgets, measured=None):
+        calls["n"] += 1
+        if 2 <= calls["n"] <= 3:   # abort the first re-partition attempts
+            return None
+        return orig(self, recent, budgets, measured)
+
+    monkeypatch.setattr(fleet_mod.FleetOrchestrator, "generate", flaky)
+    res = run_fleet(["sd3", "flux"], mode="adaptive", duration=120.0,
+                    cfg=small_cfg(), rates=RATES, phases=FLIP)
+    assert calls["n"] > 3              # kept retrying past the aborts
+    assert len(res.repartitions) > 1   # and the swap eventually landed
+
+
+def test_adaptive_holds_still_on_steady_mix():
+    """Hysteresis: steady traffic (no flip) must not trigger re-partitions
+    — the weight-swap cost is never paid on noise."""
+    res = run_fleet(["sd3", "flux"], mode="adaptive", duration=120.0,
+                    cfg=small_cfg(), rates=RATES, phases=None)
+    assert len(res.repartitions) == 1
+    assert res.swap_cost_s == 0.0
+
+
+def test_adaptive_reacts_faster_than_window_cadence():
+    """The proportional baseline only re-partitions on window boundaries;
+    the adaptive fleet fires as soon as the monitored shares cross the
+    hysteresis threshold — so after a mid-trace flip it moves chips no
+    later, and both converge toward the flipped demand."""
+    prop = run_fleet(["sd3", "flux"], mode="proportional", duration=120.0,
+                     cfg=small_cfg(), rates=RATES, phases=FLIP)
+    ad = run_fleet(["sd3", "flux"], mode="adaptive", duration=120.0,
+                   cfg=small_cfg(), rates=RATES, phases=FLIP)
+    assert len(prop.repartitions) > 1 and len(ad.repartitions) > 1
+    first_prop = prop.repartitions[1][0]
+    first_ad = ad.repartitions[1][0]
+    assert first_ad <= first_prop
+    # both end with the majority of chips on the flipped-to pipeline
+    assert prop.repartitions[-1][1]["flux"] > prop.repartitions[0][1]["flux"]
+    assert ad.repartitions[-1][1]["flux"] > ad.repartitions[0][1]["flux"]
+
+
+def test_fleet_trace_is_deterministic_and_tagged():
+    profs = {p: Profiler(C.get(p)) for p in ("sd3", "flux")}
+    a = workloads.fleet_trace(["sd3", "flux"], 60.0, profs, seed=5,
+                              rates=RATES, phases=FLIP)
+    b = workloads.fleet_trace(["sd3", "flux"], 60.0, profs, seed=5,
+                              rates=RATES, phases=FLIP)
+    assert [(r.pipeline, r.resolution, r.arrival) for r in a] \
+        == [(r.pipeline, r.resolution, r.arrival) for r in b]
+    assert {r.pipeline for r in a} == {"sd3", "flux"}
+    assert all(a[i].arrival <= a[i + 1].arrival for i in range(len(a) - 1))
+    # adding a pipeline never perturbs the existing streams
+    profs3 = dict(profs, cogvideox=Profiler(C.get("cogvideox")))
+    c = workloads.fleet_trace(["sd3", "flux", "cogvideox"], 60.0, profs3,
+                              seed=5, rates=dict(RATES, cogvideox=0.5),
+                              phases=FLIP)
+    sd3_a = [(r.resolution, r.arrival) for r in a if r.pipeline == "sd3"]
+    sd3_c = [(r.resolution, r.arrival) for r in c if r.pipeline == "sd3"]
+    assert sd3_a == sd3_c

@@ -138,3 +138,62 @@ try:
         assert abs(sol.reward - ilp.brute_force(options, budgets)) < 1e-6
 except ImportError:
     pass
+
+
+# -- multiplicity-aware grouped solve (dense same-class floods) ---------------
+
+def make_grouped_instance(seed: int):
+    """Small grouped instance with modest counts (brute-forceable after
+    expansion)."""
+    rng = random.Random(seed)
+    n_groups = rng.randint(1, 3)
+    dims = rng.randint(1, 2)
+    budgets = [rng.randint(1, 6) for _ in range(dims)]
+    options, counts = [], []
+    for _ in range(n_groups):
+        m = rng.randint(1, 3)
+        options.append([ilp.Option(dim=rng.randrange(dims),
+                                   usage=rng.choice([1, 2, 4]),
+                                   reward=rng.uniform(-2, 20))
+                        for _ in range(m)])
+        counts.append(rng.randint(1, 4))
+    return options, budgets, counts
+
+
+@pytest.mark.parametrize("block", range(3))
+def test_grouped_matches_expanded_brute_force(block):
+    for seed in range(2000 + block * 40, 2000 + block * 40 + 40):
+        options, budgets, counts = make_grouped_instance(seed)
+        gsol = ilp.solve_grouped(options, budgets, counts)
+        assert gsol.optimal
+        expanded = [opts for opts, m in zip(options, counts)
+                    for _ in range(m)]
+        assert abs(gsol.reward - ilp.brute_force(expanded, budgets)) < 1e-6, seed
+        # per-group grants never exceed the multiplicity, and usage fits
+        used = [0] * len(budgets)
+        for g, granted in gsol.alloc.items():
+            assert len(granted) <= counts[g]
+            for o in granted:
+                assert o in options[g]
+                used[o.dim] += o.usage
+        for u, b in zip(used, budgets):
+            assert u <= b
+
+
+def test_grouped_flood_is_capacity_capped():
+    """5000 identical requests against a budget of 8 must build an 8-slot
+    instance, not a 5000-row one — the whole point of the aggregation."""
+    opts = [[ilp.Option(dim=0, usage=1, reward=10.0)]]
+    gsol = ilp.solve_grouped(opts, budgets=[8], counts=[5000])
+    assert gsol.n_slots == 8
+    assert gsol.optimal
+    assert len(gsol.alloc[0]) == 8
+    assert abs(gsol.reward - 80.0) < 1e-9
+
+
+def test_grouped_warm_start_preserves_optimality():
+    options, budgets, counts = make_grouped_instance(2500)
+    base = ilp.solve_grouped(options, budgets, counts)
+    warm = {0: [(options[0][0].dim, options[0][0].usage)] * counts[0]}
+    warmed = ilp.solve_grouped(options, budgets, counts, warm=warm)
+    assert abs(base.reward - warmed.reward) < 1e-9
