@@ -1,0 +1,185 @@
+"""Bench-regression gate: compare fresh benchmark JSON against the
+committed baselines and exit non-zero on regression.
+
+Two comparison regimes per (baseline, current) pair, keyed by the files'
+``bench`` field:
+
+* **same scale** (equal ``duration_s``/scenarios): headline metrics must
+  stay within ``--tolerance`` (default 10%) of the baseline — deterministic
+  metrics (wakeup counts, SLO, improvement ratios) use it directly;
+  wall-clock-derived metrics (speedups) use the looser ``--wall-tolerance``
+  (default 35%) because CI machines are noisy.
+* **different scale** (e.g. the 240 s shared smoke vs the committed 600 s
+  run): exact ratios are not comparable, so the gate falls back to the
+  scenario's acceptance *floors* (the same ones documented in
+  benchmarks/README.md).
+
+Usage (what CI and ``benchmarks.run --smoke`` do):
+
+    python -m benchmarks.check_regression \
+        --pair BENCH_event_sim.json results/BENCH_event_sim.smoke.json \
+        --pair BENCH_shared_cluster.json results/BENCH_shared_smoke.json
+
+Exit status 0 = no regression; 1 = regression (problems printed); 2 = bad
+invocation / unreadable files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+# acceptance floors, per bench kind (benchmarks/README.md)
+EVENT_SPEEDUP_FLOOR = 1.2          # event clock must beat the tick clock
+SHARED_P95_FLOOR = 1.2             # adaptive fleet vs static sub-clusters
+LENDING_WORST_P95_FLOOR = 1.0      # lending must never hurt the worst lane
+
+
+def _ratio_check(problems: List[str], name: str, current: float,
+                 baseline: float, tol: float, floor: float = 0.0) -> None:
+    """Higher-is-better metric: current must stay within ``tol`` of the
+    baseline and above the absolute floor."""
+    if current < floor:
+        problems.append(f"{name}: {current} below acceptance floor {floor}")
+    elif baseline > 0 and current < baseline * (1.0 - tol):
+        problems.append(f"{name}: {current} regressed vs baseline "
+                        f"{baseline} (tolerance {tol:.0%})")
+
+
+def _count_check(problems: List[str], name: str, current: float,
+                 baseline: float, tol: float) -> None:
+    """Lower-is-better deterministic counter (e.g. scheduler wake-ups)."""
+    if baseline > 0 and current > baseline * (1.0 + tol):
+        problems.append(f"{name}: {current} exceeds baseline "
+                        f"{baseline} (tolerance {tol:.0%})")
+
+
+def check_event_sim(base: Dict, cur: Dict, tol: float,
+                    wall_tol: float) -> List[str]:
+    problems: List[str] = []
+    if not cur.get("metrics_match", False):
+        problems.append("metrics_match: event clock diverged from tick clock")
+    if base.get("scenarios") == cur.get("scenarios"):
+        _count_check(problems, "sched_wakeups_event",
+                     cur.get("sched_wakeups_event", 0),
+                     base.get("sched_wakeups_event", 0), tol)
+    _ratio_check(problems, "speedup_event_vs_tick",
+                 cur.get("speedup_event_vs_tick", 0.0),
+                 base.get("speedup_event_vs_tick", 0.0),
+                 wall_tol, floor=EVENT_SPEEDUP_FLOOR)
+    return problems
+
+
+def check_shared_cluster(base: Dict, cur: Dict, tol: float,
+                         wall_tol: float) -> List[str]:
+    problems: List[str] = []
+    same_scale = base.get("duration_s") == cur.get("duration_s")
+    for key in ("p95_improvement_adaptive_vs_static",
+                "worst_pipeline_p95_improvement"):
+        if same_scale:
+            _ratio_check(problems, key, cur.get(key, 0.0),
+                         base.get(key, 0.0), tol, floor=SHARED_P95_FLOOR)
+    if not same_scale:
+        # shorter smoke traces never reach the full run's aggregate ratio;
+        # the scale-free signals are "adaptive not worse than static" on
+        # aggregate P95 and the acceptance floor on the worst pipeline
+        # (where the mix flip bites hardest even at smoke scale)
+        _ratio_check(problems, "p95_improvement_adaptive_vs_static",
+                     cur.get("p95_improvement_adaptive_vs_static", 0.0),
+                     0.0, tol, floor=1.0)
+        _ratio_check(problems, "worst_pipeline_p95_improvement",
+                     cur.get("worst_pipeline_p95_improvement", 0.0),
+                     0.0, tol, floor=SHARED_P95_FLOOR)
+    if same_scale:
+        for mode, m in base.get("modes", {}).items():
+            cur_m = cur.get("modes", {}).get(mode)
+            if cur_m is None:
+                continue
+            _ratio_check(problems, f"modes.{mode}.slo_pct",
+                         cur_m.get("slo_pct", 0.0), m.get("slo_pct", 0.0),
+                         tol)
+    else:
+        # scale-free sanity: adaptive must not do worse than static
+        modes = cur.get("modes", {})
+        if "static" in modes and "adaptive" in modes:
+            if (modes["adaptive"].get("slo_pct", 0.0)
+                    < modes["static"].get("slo_pct", 0.0) - 100 * tol):
+                problems.append("modes.adaptive.slo_pct fell below static")
+    return problems
+
+
+def check_unit_lending(base: Dict, cur: Dict, tol: float,
+                       wall_tol: float) -> List[str]:
+    problems: List[str] = []
+    key = "worst_pipeline_p95_improvement_lending_vs_adaptive"
+    same_scale = base.get("duration_s") == cur.get("duration_s")
+    _ratio_check(problems, key, cur.get(key, 0.0),
+                 base.get(key, 0.0) if same_scale else 0.0, tol,
+                 floor=LENDING_WORST_P95_FLOOR)
+    if cur.get("diffuse_runs_on_borrowed_units", 0) != 0:
+        problems.append("diffuse work landed on borrowed units")
+    return problems
+
+
+CHECKERS = {
+    "event_driven_simulator_smoke": check_event_sim,
+    "shared_cluster_mix_flip": check_shared_cluster,
+    "unit_lending_bursty_ec": check_unit_lending,
+}
+
+
+def check_pair(baseline_path: str, current_path: str, tol: float,
+               wall_tol: float) -> List[str]:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(current_path) as f:
+        cur = json.load(f)
+    kind = base.get("bench")
+    if kind != cur.get("bench"):
+        return [f"bench kind mismatch: {kind} vs {cur.get('bench')}"]
+    checker = CHECKERS.get(kind)
+    if checker is None:
+        return [f"unknown bench kind: {kind}"]
+    return [f"[{kind}] {p}" for p in checker(base, cur, tol, wall_tol)]
+
+
+def run_checks(pairs, tolerance: float = 0.10,
+               wall_tolerance: float = 0.35) -> List[str]:
+    problems: List[str] = []
+    for baseline, current in pairs:
+        problems.extend(check_pair(baseline, current, tolerance,
+                                   wall_tolerance))
+    return problems
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pair", nargs=2, action="append", required=True,
+                    metavar=("BASELINE", "CURRENT"),
+                    help="baseline JSON (committed) and current JSON "
+                         "(fresh run); repeatable")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative tolerance for deterministic metrics "
+                         "(default 0.10)")
+    ap.add_argument("--wall-tolerance", type=float, default=0.35,
+                    help="relative tolerance for wall-clock-derived "
+                         "metrics like speedups (default 0.35)")
+    args = ap.parse_args(argv)
+    try:
+        problems = run_checks(args.pair, args.tolerance, args.wall_tolerance)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_regression: cannot read inputs: {e}")
+        return 2
+    if problems:
+        print(f"REGRESSION: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"check_regression: {len(args.pair)} pair(s) OK "
+          f"(tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

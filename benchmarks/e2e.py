@@ -348,12 +348,135 @@ def run_mixed_shared(quick: bool = True,
     return _shared_summary_rows(rows, results, bench_path, dur)
 
 
-def run_shared_smoke() -> List[Row]:
+# ---------------------------------------------------------------- lending-256
+
+LENDING_PIPELINES = ("sd3", "cogvideox")
+
+
+def run_lending(quick: bool = True,
+                bench_path: Optional[str] = "BENCH_unit_lending.json",
+                duration: Optional[float] = None) -> List[Row]:
+    """Cross-pipeline unit lending on the bursty-E/C trace.
+
+    256 chips, sd3 + cogvideox, calm sizing window then three sub-window
+    decode bursts (``workloads.BURSTY_EC``): too short for the adaptive
+    re-partitioner's hysteresis + cooldown to chase, so without lending the
+    burst pipeline drowns while sd3 units idle.  Compares ``adaptive``
+    against ``adaptive`` + lending on identical arrivals; the headline is
+    the worst-pipeline P95 ratio, with the diffuse path untouched by
+    construction (borrowed units host E/C only — the run asserts it).
+
+    The scenario is tuned at its 600 s scale (burst lengths are the point),
+    so ``--full`` widens across seeds instead of lengthening the trace:
+    the worst-pipeline ratio must hold on every seed, while aggregate
+    metrics legitimately vary with the adaptive re-partition trajectory.
+    """
+    from repro.core import workloads
+    from repro.core.fleet import FleetConfig, PipelineRegistry, run_fleet
+
+    dur = duration if duration is not None else 600.0
+    seeds = (0,) if quick else (0, 1, 2)
+    registry = PipelineRegistry(LENDING_PIPELINES)
+    profs = {pid: registry.profiler(pid) for pid in LENDING_PIPELINES}
+    rows: List[Row] = []
+    results = {}
+    worst_by_seed = {}
+    phases = workloads.bursty_ec_phases(dur)
+    for seed in seeds:
+        per_mode = {}
+        for mode, lending in (("adaptive", False),
+                              ("adaptive+lending", True)):
+            cfg = FleetConfig(num_chips=256, lending=lending)
+            trace = workloads.fleet_trace(LENDING_PIPELINES, dur, profs,
+                                          seed=seed,
+                                          rates=workloads.LENDING_RATES,
+                                          phases=phases)
+            t0 = time.perf_counter()
+            res = run_fleet(LENDING_PIPELINES, mode="adaptive", duration=dur,
+                            cfg=cfg, registry=registry, trace=trace)
+            wall = time.perf_counter() - t0
+            per_mode[mode] = res
+            tag = f"e2e_lending256/{mode}" + (f"/s{seed}" if seed else "")
+            rows.append((f"{tag}/p95_s", round(res.p95_latency, 3),
+                         {"slo_pct": round(res.slo_attainment * 100, 2),
+                          "goodput_rps": round(res.goodput, 3),
+                          "mean_s": round(res.mean_latency, 3),
+                          "loans": res.loans,
+                          "borrowed_unit_s":
+                              round(res.borrowed_unit_seconds, 1),
+                          "lend_swap_cost_s":
+                              round(res.lend_swap_cost_s, 2),
+                          "repartitions": len(res.repartitions) - 1,
+                          "wall_s": round(wall, 2)}))
+            for pid, m in res.per_pipeline.items():
+                rows.append((f"{tag}/{pid}/p95_s", round(m["p95_s"], 3),
+                             {"slo_pct": round(m["slo"] * 100, 2),
+                              "mean_s": round(m["mean_s"], 3)}))
+        ad, lend = per_mode["adaptive"], per_mode["adaptive+lending"]
+        worst_by_seed[seed] = (
+            max(m["p95_s"] for m in ad.per_pipeline.values())
+            / max(1e-9, max(m["p95_s"]
+                            for m in lend.per_pipeline.values())))
+        if seed == seeds[0]:
+            results = per_mode
+    ad, lend = results["adaptive"], results["adaptive+lending"]
+    worst_x = min(worst_by_seed.values())
+    p95_x = ad.p95_latency / max(lend.p95_latency, 1e-9)
+    rows.append(("e2e_lending256/worst_pipeline_p95_improvement",
+                 round(worst_x, 3),
+                 {"p95_x": round(p95_x, 3),
+                  "per_seed": {s: round(v, 3)
+                               for s, v in worst_by_seed.items()},
+                  "slo_pts": round((lend.slo_attainment
+                                    - ad.slo_attainment) * 100, 2)}))
+    if bench_path:
+        bench = {
+            "bench": "unit_lending_bursty_ec",
+            "num_chips": 256,
+            "pipelines": list(LENDING_PIPELINES),
+            "duration_s": dur,
+            "rates_rps": workloads.LENDING_RATES,
+            "phases": [[f, dict(m)] for f, m in phases],
+            "worst_pipeline_p95_improvement_lending_vs_adaptive":
+                round(worst_x, 3),
+            "worst_pipeline_p95_improvement_per_seed":
+                {s: round(v, 3) for s, v in worst_by_seed.items()},
+            "p95_improvement_lending_vs_adaptive": round(p95_x, 3),
+            "slo_improvement_pts": round((lend.slo_attainment
+                                          - ad.slo_attainment) * 100, 2),
+            "loans": lend.loans,
+            "borrowed_unit_seconds": round(lend.borrowed_unit_seconds, 1),
+            "lend_swap_cost_s": round(lend.lend_swap_cost_s, 2),
+            "borrowed_stage_runs": lend.borrowed_stage_runs,
+            "diffuse_runs_on_borrowed_units":
+                lend.borrowed_stage_runs.get("D", 0),
+            "modes": {
+                mode: {
+                    "p95_s": round(r.p95_latency, 3),
+                    "mean_s": round(r.mean_latency, 3),
+                    "slo_pct": round(r.slo_attainment * 100, 2),
+                    "goodput_rps": round(r.goodput, 3),
+                    "repartitions": len(r.repartitions) - 1,
+                    "per_pipeline": {
+                        pid: {k: (round(v, 3) if isinstance(v, float)
+                                  else v) for k, v in m.items()}
+                        for pid, m in r.per_pipeline.items()},
+                } for mode, r in results.items()},
+        }
+        with open(bench_path, "w") as f:
+            json.dump(bench, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+def run_shared_smoke(bench_path: Optional[str] = None) -> List[Row]:
     """CI-sized ``--mixed --shared`` variant: short flip trace, static vs
     adaptive only, fleet windows shrunk to match — exercises the whole fleet
     path (partition, mix-shift detection, re-partition with reload costs)
-    on every smoke run without touching BENCH_shared_cluster.json."""
-    return run_mixed_shared(bench_path=None, duration=240.0,
+    on every smoke run without touching BENCH_shared_cluster.json.
+    ``bench_path`` (used by ``benchmarks.run --smoke``) writes the smoke
+    run's own JSON for the check_regression gate."""
+    return run_mixed_shared(bench_path=bench_path, duration=240.0,
                             modes=("static", "adaptive"),
                             fleet_cfg_kw={"t_win": 90.0, "cooldown": 60.0})
 
@@ -420,6 +543,11 @@ if __name__ == "__main__":
                     help="one shared 512-chip cluster under a mix-flip "
                          "trace; fleet scheduler trio (writes "
                          "BENCH_shared_cluster.json); implies --mixed")
+    ap.add_argument("--lending", action="store_true",
+                    help="cross-pipeline unit lending on the bursty-E/C "
+                         "trace: adaptive vs adaptive+lending (writes "
+                         "BENCH_unit_lending.json); implies --mixed "
+                         "--shared")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--bench-json", default="BENCH_event_sim.json")
     ap.add_argument("--seed-ref", default=None,
@@ -428,9 +556,11 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.smoke:
         emit(run_smoke(bench_path=args.bench_json, seed_ref=args.seed_ref))
-    if args.shared:
+    if args.lending:
+        emit(run_lending(quick=not args.full))
+    elif args.shared:
         emit(run_mixed_shared(quick=not args.full))
     elif args.mixed:
         emit(run_mixed(quick=not args.full))
-    if not args.smoke and not args.mixed and not args.shared:
+    if not (args.smoke or args.mixed or args.shared or args.lending):
         emit(run(quick=not args.full))

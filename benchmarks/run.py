@@ -42,19 +42,27 @@ def main() -> None:
                          "plus a short shared-cluster co-serving run")
     args = ap.parse_args()
     if args.smoke:
+        import os
+        os.makedirs("results", exist_ok=True)
+        smoke_event_json = os.path.join("results",
+                                        "BENCH_event_sim.smoke.json")
+        smoke_shared_json = os.path.join("results",
+                                         "BENCH_shared_smoke.json")
         t0 = time.perf_counter()
         print("# --- e2e (smoke) ---", flush=True)
         from benchmarks import e2e
-        smoke_rows = e2e.run_smoke()
+        # fresh JSONs go under results/ so the committed baselines stay
+        # intact for the regression gate below
+        smoke_rows = e2e.run_smoke(bench_path=smoke_event_json)
         emit(smoke_rows)
         print(f"# e2e smoke took {time.perf_counter() - t0:.1f}s", flush=True)
         t0 = time.perf_counter()
         print("# --- e2e (shared-cluster smoke) ---", flush=True)
-        emit(e2e.run_shared_smoke())
+        emit(e2e.run_shared_smoke(bench_path=smoke_shared_json))
         print(f"# shared smoke took {time.perf_counter() - t0:.1f}s",
               flush=True)
         # event-vs-tick parity is the smoke pass's one hard check: a clock
-        # regression must fail CI, not just land in BENCH_event_sim.json.
+        # regression must fail CI, not just land in the BENCH json.
         # The row must be present — a missing row is a broken check, not a
         # passing one.
         parity = [v for n, v, _ in smoke_rows
@@ -63,7 +71,17 @@ def main() -> None:
         if not parity_ok:
             print("# SMOKE FAILURE: event clock diverged from tick clock",
                   flush=True)
-        sys.exit(0 if parity_ok else 1)
+        # bench-regression gate: fresh smoke metrics vs committed baselines
+        print("# --- check_regression ---", flush=True)
+        from benchmarks import check_regression
+        problems = check_regression.run_checks(
+            [("BENCH_event_sim.json", smoke_event_json),
+             ("BENCH_shared_cluster.json", smoke_shared_json)])
+        for p in problems:
+            print(f"# REGRESSION: {p}", flush=True)
+        if not problems:
+            print("# check_regression: OK", flush=True)
+        sys.exit(0 if parity_ok and not problems else 1)
     mods = [args.only] if args.only else MODULES
     ok = True
     for name in mods:

@@ -18,7 +18,7 @@ from repro.core import ilp
 from repro.core.placement import (AUXILIARY_PLACEMENTS, PRIMARY_PLACEMENTS,
                                   PlacementPlan, primary_of_vr,
                                   vr_of_primary)
-from repro.core.profiler import PARALLEL_DEGREES, Profiler
+from repro.core.profiler import COMM_GROUP_INIT, PARALLEL_DEGREES, Profiler
 from repro.core.request import DispatchPlan, Request
 
 # Appendix C.2 constants
@@ -32,6 +32,11 @@ EFF_THRESHOLD = 0.8                            # E_{r,k} filter
 # mean latency.  A small per-second penalty (<< C_on - C_late) breaks the
 # tie toward faster configs without ever flipping an SLO decision.
 GAMMA_TIME = 2.0
+# Cross-pipeline unit lending: reward discount on options whose auxiliary
+# stage would land on a borrowed foreign unit (kept well below C_LATE so a
+# borrow never outbids a native on-time config, but still biases the solver
+# toward native capacity when both are idle).
+BORROW_PENALTY = 25.0
 
 
 @dataclasses.dataclass
@@ -109,10 +114,22 @@ class Dispatcher:
 
     # -- ILP construction ------------------------------------------------------
 
+    # auxiliary stages each Virtual Replica routes off-primary (Table 3)
+    _VR_AUX = {0: (), 1: ("E",), 2: ("C",), 3: ("E", "C")}
+
     def build_options(self, reqs: Sequence[Request], tau: float,
-                      idle_by_type: Dict[str, int]
+                      idle_by_type: Dict[str, int],
+                      aux_penalty: Optional[Dict[str, float]] = None
                       ) -> Tuple[List[List[ilp.Option]], List[int]]:
         budgets = [idle_by_type.get(primary_of_vr(v), 0) for v in range(4)]
+        vr_pen = [0.0] * 4
+        if aux_penalty:
+            # lending: a VR whose auxiliary stage would land on a borrowed
+            # foreign unit carries the borrow discount (extra columns the
+            # solver may still take when native capacity is the binding
+            # constraint)
+            vr_pen = [sum(aux_penalty.get(s, 0.0) for s in self._VR_AUX[v])
+                      for v in range(4)]
         options: List[List[ilp.Option]] = []
         for req in reqs:
             opts: List[ilp.Option] = []
@@ -140,7 +157,7 @@ class Dispatcher:
             best_finish = min(f for f, _, _ in finishes)
             w = self._w_r(req, tau, best_finish)
             opts = [ilp.Option(dim=vr, usage=k,
-                               reward=w - self._q_ri(req, vr)
+                               reward=w - self._q_ri(req, vr) - vr_pen[vr]
                                - GAMMA_TIME * (f - tau))
                     for f, vr, k in finishes
                     # C3a-guided: drop configs that blow the deadline unless
@@ -214,20 +231,30 @@ class Dispatcher:
         return None
 
     def _aux_units(self, plan: PlacementPlan, stage: str, k: int,
-                   idle_units: set, free_at: Dict[int, float], tau: float
-                   ) -> Tuple[int, ...]:
-        """Idle-or-earliest-free auxiliary units for E/C (Monitor-reported)."""
+                   idle_units: set, free_at: Dict[int, float], tau: float,
+                   borrowed: Optional[set] = None) -> Tuple[int, ...]:
+        """Idle-or-earliest-free auxiliary units for E/C (Monitor-reported).
+
+        With active loans (``borrowed``), native units win ties: a borrowed
+        foreign unit is only taken when it is strictly the better host
+        (idle while every native auxiliary is busy, or earlier-free)."""
         cands = plan.units_of_type(stage)
         if not cands:
             return ()
-        cands = sorted(cands, key=lambda g: (g not in idle_units,
-                                             free_at.get(g, tau)))
+        if borrowed:
+            cands = sorted(cands, key=lambda g: (g not in idle_units,
+                                                 free_at.get(g, tau),
+                                                 g in borrowed))
+        else:
+            cands = sorted(cands, key=lambda g: (g not in idle_units,
+                                                 free_at.get(g, tau)))
         return tuple(cands[:k])
 
     # -- main entry ---------------------------------------------------------------
 
     def dispatch(self, pending: Sequence[Request], plan: PlacementPlan,
-                 idle_units: set, free_at: Dict[int, float], tau: float
+                 idle_units: set, free_at: Dict[int, float], tau: float,
+                 borrowed: Optional[Dict[str, Tuple[int, ...]]] = None
                  ) -> List[DispatchDecision]:
         # candidate set scales with idle capacity: a fixed cap would only
         # ever show the solver the oldest (often already-late) requests
@@ -238,7 +265,24 @@ class Dispatcher:
             return []
         idle_by_type = {t: sum(1 for g in plan.units_of_type(t) if g in idle_units)
                         for t in PRIMARY_PLACEMENTS}
-        options, budgets = self.build_options(reqs, tau, idle_by_type)
+        # cross-pipeline unit lending (core/lending.py): borrowed foreign
+        # units appear as E/C-only candidates.  An option whose auxiliary
+        # stage would land on one (no idle native auxiliary of that type)
+        # carries the borrow discount.
+        borrowed_all: set = set()
+        aux_penalty: Optional[Dict[str, float]] = None
+        if borrowed:
+            borrowed_all = {g for gs in borrowed.values() for g in gs}
+            aux_penalty = {}
+            for s in ("E", "C"):
+                native_idle = any(g in idle_units and g not in borrowed_all
+                                  for g in plan.units_of_type(s))
+                lent_idle = any(free_at.get(g, 0.0) <= tau
+                                for g in borrowed.get(s, ()))
+                if lent_idle and not native_idle:
+                    aux_penalty[s] = BORROW_PENALTY
+        options, budgets = self.build_options(reqs, tau, idle_by_type,
+                                              aux_penalty)
         if self.aggregate:
             choices, stats = self._solve_grouped(reqs, options, budgets)
         else:
@@ -268,17 +312,79 @@ class Dispatcher:
                 e_units = units
             else:
                 ke = self.prof.optimal_degree(req, "E")
-                e_units = self._aux_units(plan, "E", ke, avail, free_at, tau)
+                e_units = self._aux_units(plan, "E", ke, avail, free_at, tau,
+                                          borrowed_all or None)
             # Γ^C: subset of D's units when co-resident, else aux ⟨C⟩
             kc = self.prof.optimal_degree(req, "C")
             if "C" in prim:
                 c_units = units[: max(1, min(kc, len(units)))]
             else:
-                c_units = self._aux_units(plan, "C", kc, avail, free_at, tau)
+                c_units = self._aux_units(plan, "C", kc, avail, free_at, tau,
+                                          borrowed_all or None)
             if not e_units or not c_units:
                 avail |= set(units)
                 continue   # no auxiliary capacity -> undispatched this tick
             decisions.append(DispatchDecision(
                 request=req, vr_type=opt.dim, degree=opt.usage,
                 d_units=units, e_units=tuple(e_units), c_units=tuple(c_units)))
+        if borrowed:
+            self._offload_decode(decisions, pending, borrowed, free_at, tau)
         return decisions
+
+    def _offload_decode(self, decisions: List[DispatchDecision],
+                        pending: Sequence[Request],
+                        borrowed: Dict[str, Tuple[int, ...]],
+                        free_at: Dict[int, float], tau: float) -> None:
+        """Work-conserving decode offload onto borrowed foreign units.
+
+        When requests are still left waiting after this round's grants, a
+        decision whose primary co-hosts C (⟨EDC⟩/⟨DC⟩ — the common all-V0
+        plan) hands its Decode to an idle borrowed ⟨C⟩ unit instead of
+        merging it: the primary frees t_C earlier, which is exactly the
+        stranded capacity lending is meant to recover.  D never moves — the
+        borrower's diffuse placement is untouched by construction."""
+        pool = [g for g in borrowed.get("C", ())
+                if free_at.get(g, 0.0) <= tau]
+        if not pool:
+            return
+        granted = sum(d.batch for d in decisions)
+        if len(pending) <= granted:
+            return   # no backlog: merged execution stays strictly better
+        # offload the heaviest decodes first — they strand the most time
+        order = sorted(
+            (d for d in decisions
+             if "C" in primary_of_vr(d.vr_type)
+             and set(d.c_units) <= set(d.d_units)),
+            key=lambda d: -self.prof.stage_time(
+                d.request, "C", len(d.c_units) * self.prof.k_min))
+        for dec in order:
+            if not pool:
+                return
+            req = dec.request
+            kc = min(self.prof.optimal_degree(req, "C"), len(dec.c_units))
+            take = pool[:max(1, min(kc, len(pool)))]
+            if not self.prof.fits(req, "C", len(take)):
+                continue
+            # degree- and deadline-aware: a thinner pool slows this
+            # request's own decode, and even at the merged degree the
+            # offload pays the inter-node latent push (plus a possible
+            # comm-group init) that merged execution avoids — only degrade
+            # when the request still makes its SLO, or misses it either way
+            k = self.prof.k_min
+            t_merged = self.prof.stage_time(req, "C", kc * k)
+            t_off = self.prof.stage_time(req, "C", len(take) * k)
+            q_dc = self.prof.comm_bytes(req, "DC")
+            t_push = (self.prof.transfer_time(q_dc, intra_node=False)
+                      + self.prof.transfer_time(q_dc, intra_node=True)
+                      + COMM_GROUP_INIT)
+            runtime = self._req_runtime(req, dec.vr_type, dec.degree)
+            # start when the granted primary units actually free up, not
+            # at tau — a queueing-blind estimate would bless offloads that
+            # push the real finish past the deadline
+            start = max([tau] + [free_at.get(g, tau) for g in dec.d_units])
+            fin_merged = start + runtime
+            fin_off = fin_merged - t_merged + t_off + t_push
+            if fin_off > req.deadline and fin_merged <= req.deadline:
+                continue
+            dec.c_units = tuple(take)
+            del pool[:len(take)]

@@ -93,6 +93,26 @@ class PipelineRegistry:
         return pipeline_id in self._profs
 
 
+@dataclasses.dataclass(frozen=True)
+class LendableUnit:
+    """One unit of the fleet plan that may host E/C stage work for another
+    pipeline between re-partitions (cross-pipeline unit lending).
+
+    ``borrow_cost`` maps (borrower pipeline, hosted stage) to the weight-swap
+    latency the borrower pays when the unit changes hands; ``return_cost``
+    is what the lender pays to reload its own weights on return — advisory
+    (a map-build-time estimate): the broker recharges the actual return
+    reload from the lender's live plan at close, since a lane re-placement
+    may retype the unit while it is on loan."""
+    pipeline: str
+    unit: int
+    ptype: str
+    aux_class: bool                    # E/C-class unit (preferred stock)
+    node: int
+    borrow_cost: Dict[Tuple[str, str], float]
+    return_cost: float
+
+
 @dataclasses.dataclass
 class FleetPlacementPlan:
     """One placement plan spanning the whole cluster: contiguous chip
@@ -100,6 +120,7 @@ class FleetPlacementPlan:
     total_chips: int
     chip_ranges: Dict[str, Tuple[int, int]]     # pipeline -> [lo, hi) chips
     subplans: Dict[str, PlacementPlan]
+    chips_per_node: int = 8
 
     def budget_histogram(self) -> Dict[str, int]:
         return {p: hi - lo for p, (lo, hi) in self.chip_ranges.items()}
@@ -122,6 +143,50 @@ class FleetPlacementPlan:
         lo, _ = self.chip_ranges[pipeline]
         k = self.subplans[pipeline].unit_size
         return (lo + unit * k, lo + (unit + 1) * k)
+
+    def node_of_unit(self, pipeline: str, unit: int) -> int:
+        """Cluster-global node id of one scheduling unit."""
+        return self.unit_chips(pipeline, unit)[0] // self.chips_per_node
+
+    def lending_map(self, registry: "PipelineRegistry"
+                    ) -> Dict[int, List[LendableUnit]]:
+        """Per-node map of lendable units (cross-pipeline unit lending).
+
+        A unit is lendable to borrower B iff its chip span can hold one of
+        B's scheduling units (``unit_size`` covers B's) — the hosted stage is
+        always E or C, never D, so B's diffuse placement is untouched.
+        Aux-class (⟨E⟩/⟨C⟩) units are the preferred stock; primary-class
+        units are listed too and the broker only taps them when the lender
+        has idle surplus.  Costs come from ``Profiler.stage_load_time`` via
+        the host path — the same currency re-partition swaps are charged in,
+        so the min-hold policy can be compared against it directly."""
+        out: Dict[int, List[LendableUnit]] = {}
+        for pid, sub in self.subplans.items():
+            lender_prof = registry.profiler(pid)
+            for g, ptype in enumerate(sub.placements):
+                if sub.is_extended(g):
+                    continue   # borrowed overlay slots are not lendable stock
+                costs: Dict[Tuple[str, str], float] = {}
+                for bid in registry.pipelines:
+                    if bid == pid:
+                        continue
+                    bsub = self.subplans.get(bid)
+                    if bsub is not None and bsub.unit_size > sub.unit_size:
+                        continue   # span too small for one borrower unit
+                    bprof = registry.profiler(bid)
+                    for s in ("E", "C"):
+                        costs[(bid, s)] = bprof.stage_load_time(
+                            s, via_host=True)
+                if not costs:
+                    continue
+                ret_cost = sum(lender_prof.stage_load_time(s, via_host=True)
+                               for s in ptype)
+                node = self.node_of_unit(pid, g)
+                out.setdefault(node, []).append(LendableUnit(
+                    pipeline=pid, unit=g, ptype=ptype,
+                    aux_class=ptype in ("E", "C"), node=node,
+                    borrow_cost=costs, return_cost=ret_cost))
+        return out
 
 
 class FleetOrchestrator:
@@ -201,7 +266,8 @@ class FleetOrchestrator:
             ranges[pid] = (lo, lo + chips)
             subplans[pid] = plan
             lo += chips
-        return FleetPlacementPlan(self.num_chips, ranges, subplans)
+        return FleetPlacementPlan(self.num_chips, ranges, subplans,
+                                  chips_per_node=self.chips_per_node)
 
 
 @dataclasses.dataclass
@@ -222,6 +288,25 @@ class FleetConfig:
     t_win: float = 180.0              # fleet demand window (s)
     hysteresis: float = 0.10          # min demand-share move to re-partition
     cooldown: float = 120.0           # min time between re-partitions (s)
+    # Monitor-window wake-ups while fully idle (the stale-window fix): off
+    # by default so existing fleet traces reproduce bit-identically; the
+    # lending clock forces it on (loans must return during idle gaps).
+    idle_window_wakeups: bool = False
+    # -- cross-pipeline unit lending (core/lending.py), default OFF ----------
+    lending: bool = False
+    lend_min_hold: float = 45.0       # a loan is held at least this long (s)
+    lend_win: float = 20.0            # pressure window for borrow/return (s)
+    # pressure is queued chip-seconds of work per owned chip (windowed mean)
+    lend_min_pressure: float = 0.5    # borrow above this; lender reclaims at it
+    lend_low_pressure: float = 0.05   # drained-borrower / busy-lender bound
+    lend_reserve: int = 2             # idle units a lender always keeps
+    lend_util_target: float = 0.4     # a lender keeps busy_mean/target units
+                                      # for itself; only the surplus is stock
+    lend_max_loans: int = 32          # concurrent loans per borrower
+    lend_demand_frac: float = 8.0     # loan target per second of pressure
+    lend_min_stage_s: float = 0.5     # borrow only when the hosted stage is
+                                      # worth at least this long per request
+                                      # (reloads never pay for ms decodes)
 
     def lane_sim_cfg(self, num_chips: int) -> SimConfig:
         return SimConfig(num_chips=num_chips, tick=self.tick,
@@ -256,6 +341,12 @@ class Lane:
         self.throughput: Dict[int, int] = {}
         self.placement_log: List[Tuple[float, Dict[str, int]]] = []
         self._stats_base = EngineStats()   # stats of retired engines
+        # cross-pipeline unit lending (core/lending.py): borrowed foreign
+        # E/C units by hosted stage, and how many stage runs landed on them.
+        # base_units marks the engine's own plan size; loan slots live above.
+        self.borrowed_units: Dict[str, Tuple[int, ...]] = {}
+        self.borrowed_stage_runs: Dict[str, int] = {}
+        self.base_units: int = 0
 
     def fail_request_oom(self, req: Request) -> None:
         self.request_oom.append(req)
@@ -394,16 +485,25 @@ class FleetResult:
     swap_cost_s: float
     units_reloaded: int
     sched_wakeups: int
+    # cross-pipeline unit lending (zeros unless FleetConfig.lending)
+    loans: int = 0
+    borrowed_unit_seconds: float = 0.0
+    lend_swap_cost_s: float = 0.0
+    borrowed_stage_runs: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     def summary(self) -> str:
         if self.oom:
             return f"{self.scheduler:15s} OOM (no feasible fleet plan)"
+        lend = (f"  loans={self.loans} "
+                f"borrowed={self.borrowed_unit_seconds:.0f}unit-s"
+                if self.loans else "")
         return (f"{self.scheduler:15s} SLO={self.slo_attainment * 100:5.1f}%  "
                 f"goodput={self.goodput:6.2f}/s  "
                 f"mean={self.mean_latency:7.2f}s  "
                 f"p95={self.p95_latency:7.2f}s  "
                 f"fin={self.n_finished}/{self.n_requests}  "
-                f"swaps={len(self.repartitions) - 1}")
+                f"swaps={len(self.repartitions) - 1}{lend}")
 
 
 # fleet completion event:
@@ -427,7 +527,8 @@ class FleetSimulator:
         self.cfg = cfg or FleetConfig()
         assert all(r.pipeline in registry for r in self.trace), \
             "trace contains requests for unregistered pipelines"
-        self.fleet_monitor = FleetMonitor(t_win=self.cfg.t_win)
+        self.fleet_monitor = FleetMonitor(t_win=self.cfg.t_win,
+                                          lend_win=self.cfg.lend_win)
         self.lanes: Dict[str, Lane] = {}
         self.plan: Optional[FleetPlacementPlan] = None
         self._events: List[FleetEvent] = []
@@ -441,6 +542,11 @@ class FleetSimulator:
         self._repartition_capable = (
             type(scheduler).maybe_repartition
             is not FleetScheduler.maybe_repartition)
+        self.broker = None
+        if self.cfg.lending:
+            from repro.core.lending import LendingBroker
+            self.broker = LendingBroker(self.cfg, registry)
+        self._tau_last = 0.0
 
     # ---------------------------------------------------------------- helpers
 
@@ -463,6 +569,18 @@ class FleetSimulator:
             self._eseq += 1
         lane.vr_histogram[dec.vr_type] = (lane.vr_histogram.get(dec.vr_type, 0)
                                           + len(members))
+        if self.broker is not None:
+            # lending invariant: Diffuse never lands on a borrowed unit.
+            # D is counted (not just asserted) so the bench JSON's
+            # diffuse_runs_on_borrowed_units is a measurement the
+            # regression gate can actually trip on, even under python -O.
+            for s, units in (("E", dec.e_units), ("D", dec.d_units),
+                             ("C", dec.c_units)):
+                if any(g >= lane.base_units for g in units):
+                    lane.borrowed_stage_runs[s] = \
+                        lane.borrowed_stage_runs.get(s, 0) + 1
+            assert "D" not in lane.borrowed_stage_runs, \
+                "diffuse dispatched to a borrowed foreign unit"
 
     # ---------------------------------------------------------------- main
 
@@ -482,6 +600,7 @@ class FleetSimulator:
                 prof, self.plan.subplans[pid],
                 proactive_push=self.cfg.proactive_push,
                 adjust_on_dispatch=self.cfg.adjust_on_dispatch)
+            lane.base_units = len(lane.engine.units)
             lane.placement_log.append(
                 (0.0, self.plan.subplans[pid].type_histogram()))
             self.lanes[pid] = lane
@@ -525,13 +644,18 @@ class FleetSimulator:
 
     def _step(self, tau: float) -> None:
         self.sched_wakeups += 1
+        self._tau_last = tau
         budgets = self.fleet_sched.maybe_repartition(self, tau)
         if budgets is not None:
             self._repartition(budgets, tau)
+        if self.broker is not None:
+            self.broker.step(self, tau)
         for pid, lane in self.lanes.items():
             new_plan = lane.sched.maybe_replace(lane, tau)
             if new_plan is not None:
                 new_plan.pipeline = pid
+                if self.broker is not None:
+                    self.broker.reattach(lane, new_plan)
                 lane.engine.apply_placement(new_plan, tau)
                 self.plan.subplans[pid] = new_plan
                 lane.placement_log.append((tau, new_plan.type_histogram()))
@@ -541,6 +665,10 @@ class FleetSimulator:
                 lane.pending.remove(dec.request)
                 for co in getattr(dec, "corequests", ()):
                     lane.pending.remove(co)
+        if self.broker is not None:
+            # sample pressure after dispatch: what is still pending now is
+            # genuine backlog, not the arrivals this wake-up just served
+            self.broker.sample(self, tau)
 
     # -- re-partitioning ------------------------------------------------------
 
@@ -549,12 +677,17 @@ class FleetSimulator:
         residency carry over; units whose pipeline or placement type changed
         hands pay the weight-reload latency before becoming dispatchable."""
         old = self.plan
+        if self.broker is not None:
+            # loans cannot outlive the partition they were struck under:
+            # force-return them first (in-flight borrowed work and the
+            # lender's reload land on the lender's chips via free_at below)
+            self.broker.release_all(self, tau)
         chip_free: Dict[int, float] = {}
         chip_owner: Dict[int, Tuple[str, frozenset]] = {}
         for pid, lane in self.lanes.items():
             lo, _ = old.chip_ranges[pid]
             k = old.subplans[pid].unit_size
-            for u in lane.engine.units:
+            for u in lane.engine.units[:lane.base_units]:
                 for c in range(lo + u.uid * k, lo + (u.uid + 1) * k):
                     chip_free[c] = u.free_at
                     chip_owner[c] = (pid, frozenset(u.resident))
@@ -599,9 +732,12 @@ class FleetSimulator:
                     busy[g] = base
             engine.seed_unit_state(busy)
             lane.engine = engine
+            lane.base_units = len(engine.units)
             lane.sched.orch.resize(budgets[pid])
             lane.placement_log.append((tau, sub.type_histogram()))
         self.plan = new_plan
+        if self.broker is not None:
+            self.broker.reset_after_repartition(self)
         self.fleet_monitor.last_repartition = tau
         # the swap happened: only now does the partition's demand basis move
         # (an aborted re-partition must leave the mix-shift trigger armed)
@@ -629,6 +765,10 @@ class FleetSimulator:
         lane_replace = {
             pid: type(lane.sched).maybe_replace is not Scheduler.maybe_replace
             for pid, lane in self.lanes.items()}
+        # stale-window fix: with idle_window_wakeups (forced on by lending —
+        # loans must be able to return during an idle gap), Monitor-window
+        # boundaries stay wake-up sources even while nothing is pending
+        idle_wake = self.cfg.idle_window_wakeups or self.cfg.lending
         ai = 0
         i = 0
         while i * tick <= horizon:
@@ -648,14 +788,20 @@ class FleetSimulator:
             if self._events:
                 t_next = min(t_next, self._events[0][0])
             for pid, lane in self.lanes.items():
-                if lane_replace[pid] and (lane.pending or self._events):
+                if lane_replace[pid] and (lane.pending or self._events
+                                          or idle_wake):
                     boundary = lane.monitor.next_window_boundary()
                     if boundary is not None and boundary > tau:
                         t_next = min(t_next, boundary)
-            if self._repartition_capable and (pending or self._events):
+            if self._repartition_capable and (pending or self._events
+                                              or idle_wake):
                 boundary = self.fleet_monitor.next_window_boundary()
                 if boundary is not None and boundary > tau:
                     t_next = min(t_next, boundary)
+            if self.broker is not None:
+                wake = self.broker.next_wake(tau)
+                if wake is not None:
+                    t_next = min(t_next, wake)
             if pending:
                 t_next = min(t_next, tau + gap)
             if t_next is math.inf:
@@ -711,6 +857,18 @@ class FleetSimulator:
                 self.plan.chip_ranges[pid][0]
             per_pipeline[pid] = m
         agg = self._metrics(self.trace, oom_ids, horizon_lat)
+        lend_kw = {}
+        if self.broker is not None:
+            self.broker.finalize(self._tau_last)
+            runs: Dict[str, int] = {}
+            for lane in self.lanes.values():
+                for s, n in lane.borrowed_stage_runs.items():
+                    runs[s] = runs.get(s, 0) + n
+            lend_kw = dict(loans=self.broker.loans_granted,
+                           borrowed_unit_seconds=round(
+                               self.broker.borrowed_unit_seconds, 3),
+                           lend_swap_cost_s=round(self.broker.swap_cost_s, 3),
+                           borrowed_stage_runs=runs)
         return FleetResult(
             scheduler=self.fleet_sched.name, num_chips=self.cfg.num_chips,
             oom=False, n_requests=len(self.trace),
@@ -723,7 +881,7 @@ class FleetSimulator:
                           for pid, lane in self.lanes.items()},
             repartitions=self.repartition_log,
             swap_cost_s=self.swap_cost_s, units_reloaded=self.units_reloaded,
-            sched_wakeups=self.sched_wakeups)
+            sched_wakeups=self.sched_wakeups, **lend_kw)
 
 
 # ---------------------------------------------------------------- convenience

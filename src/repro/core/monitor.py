@@ -132,7 +132,7 @@ class FleetMonitor:
     like ``Monitor``'s: queries sit on the fleet wake-up path.
     """
 
-    def __init__(self, t_win: float = 180.0):
+    def __init__(self, t_win: float = 180.0, lend_win: float = 30.0):
         self.t_win = t_win
         self._arrivals: Deque[Tuple[float, str, float]] = collections.deque()
         self._demand: Dict[str, float] = collections.defaultdict(float)
@@ -140,6 +140,20 @@ class FleetMonitor:
         self._fin_n: Dict[str, int] = collections.defaultdict(int)
         self._fin_on: Dict[str, int] = collections.defaultdict(int)
         self.last_repartition: float = -1e9
+        # unit-lending pressure windows (core/lending.py): short sliding
+        # window of (backlog-pressure, idle active units) samples per
+        # pipeline — borrow/return decisions react on lend_win, not the
+        # re-partition window.  Pressure is measured in queued chip-seconds
+        # per owned chip (the fleet's unit-time footprint currency), so a
+        # 1 req/s video pipeline minutes behind outranks a 40 req/s image
+        # pipeline with a healthy sub-second queue.  Empty unless the broker
+        # records into them, so the lending-off path is untouched
+        # (next_window_boundary skips empties).
+        self.lend_win = lend_win
+        self._util: Deque[Tuple[float, str, float, int]] = collections.deque()
+        self._util_bl: Dict[str, float] = collections.defaultdict(float)
+        self._util_idle: Dict[str, int] = collections.defaultdict(int)
+        self._util_n: Dict[str, int] = collections.defaultdict(int)
 
     # -- recording -------------------------------------------------------------
 
@@ -154,6 +168,16 @@ class FleetMonitor:
         self._fin_on[pipeline] += int(on_time)
         self._trim(tau)
 
+    def record_util(self, tau: float, pipeline: str, backlog: float,
+                    idle_units: int) -> None:
+        """One lending-pressure sample: queued chip-seconds per owned chip
+        and idle active units of one pipeline's lane at ``tau``."""
+        self._util.append((tau, pipeline, backlog, idle_units))
+        self._util_bl[pipeline] += backlog
+        self._util_idle[pipeline] += idle_units
+        self._util_n[pipeline] += 1
+        self._trim(tau)
+
     def _trim(self, tau: float) -> None:
         cutoff = tau - self.t_win
         q = self._arrivals
@@ -165,6 +189,13 @@ class FleetMonitor:
             _, p, on = f.popleft()
             self._fin_n[p] -= 1
             self._fin_on[p] -= int(on)
+        u = self._util
+        lend_cut = tau - self.lend_win
+        while u and u[0][0] < lend_cut:
+            _, p, bl, idle = u.popleft()
+            self._util_bl[p] -= bl
+            self._util_idle[p] -= idle
+            self._util_n[p] -= 1
 
     # -- queries ---------------------------------------------------------------
 
@@ -187,11 +218,27 @@ class FleetMonitor:
         return {p: self._fin_on[p] / self._fin_n[p]
                 for p in self._fin_n if self._fin_n[p] > 0}
 
+    def backlog_pressure(self, tau: float) -> Dict[str, float]:
+        """Windowed mean backlog pressure per pipeline (lend window):
+        queued chip-seconds of work per owned chip."""
+        self._trim(tau)
+        return {p: self._util_bl[p] / self._util_n[p]
+                for p in self._util_n if self._util_n[p] > 0}
+
+    def idle_supply(self, tau: float) -> Dict[str, float]:
+        """Windowed mean idle active-unit count per pipeline (lend window)."""
+        self._trim(tau)
+        return {p: self._util_idle[p] / self._util_n[p]
+                for p in self._util_n if self._util_n[p] > 0}
+
     def next_window_boundary(self) -> Optional[float]:
-        heads = [q[0][0] for q in (self._arrivals, self._fin) if q]
+        heads = [q[0][0] + self.t_win
+                 for q in (self._arrivals, self._fin) if q]
+        if self._util:
+            heads.append(self._util[0][0] + self.lend_win)
         if not heads:
             return None
-        return min(heads) + self.t_win
+        return min(heads)
 
     def mix_shift(self, tau: float, basis: Optional[Dict[str, float]],
                   threshold: float = 0.10, cooldown: float = 120.0,

@@ -75,20 +75,59 @@ class PlacementPlan:
         return unit // self.units_per_node
 
     def _index(self):
-        """Lazy unit indices (plans are immutable after construction): these
-        lookups run on every scheduler wake-up."""
+        """Lazy unit indices (plans are immutable after construction except
+        for the fleet's unit-lending overlay, which invalidates the cache):
+        these lookups run on every scheduler wake-up."""
         idx = self.__dict__.get("_idx")
         if idx is None:
+            inactive = self.__dict__.get("_inactive") or ()
             by_type: Dict[str, List[int]] = {}
             with_stage: Dict[str, List[int]] = {}
             for g, p in enumerate(self.placements):
+                if g in inactive:
+                    continue
                 by_type.setdefault(p, []).append(g)
                 for s in p:
                     with_stage.setdefault(s, []).append(g)
             primary = frozenset(g for g, p in enumerate(self.placements)
-                                if p in PRIMARY_PLACEMENTS)
+                                if p in PRIMARY_PLACEMENTS and g not in inactive)
             idx = self.__dict__["_idx"] = (by_type, with_stage, primary)
         return idx
+
+    # -- fleet unit-lending overlay (core/lending.py) -------------------------
+
+    def extend(self, ptype: str) -> int:
+        """Append one scheduling unit (a borrowed foreign unit hosting E/C
+        work for this plan's pipeline); returns its unit id.  Only the fleet
+        lending broker calls this — single-tenant plans never grow.
+        Extended units are an *overlay*: dispatch indices see them while
+        active, but ``type_histogram``/``count_of_type`` never count them
+        (they describe the plan's own layout, e.g. for ``maybe_replace``'s
+        no-op comparison against a freshly generated plan)."""
+        assert ptype in PLACEMENT_TYPES
+        self.placements.append(ptype)
+        self.__dict__.setdefault("_extended", set()).add(len(self.placements) - 1)
+        self.__dict__.pop("_idx", None)
+        return len(self.placements) - 1
+
+    def set_active(self, unit: int, active: bool) -> None:
+        """(De)activate one unit in the dispatch indices.  A lender's unit
+        disappears from its own plan while on loan; a borrower's loan slot
+        disappears once the unit is returned.  ``placements[unit]`` stays
+        valid either way, so engine bookkeeping keeps working."""
+        inactive = self.__dict__.setdefault("_inactive", set())
+        if active:
+            inactive.discard(unit)
+        else:
+            inactive.add(unit)
+        self.__dict__.pop("_idx", None)
+
+    def is_active(self, unit: int) -> bool:
+        return unit not in (self.__dict__.get("_inactive") or ())
+
+    def is_extended(self, unit: int) -> bool:
+        """True for loan-slot overlay units (not part of the own layout)."""
+        return unit in (self.__dict__.get("_extended") or ())
 
     def units_with(self, stage: str) -> List[int]:
         return self._index()[1].get(stage, [])
@@ -101,8 +140,20 @@ class PlacementPlan:
         """Units whose placement carries the D stage."""
         return self._index()[2]
 
+    def retype(self, unit: int, ptype: str) -> None:
+        """Change one unit's placement type (loan-slot reuse)."""
+        assert ptype in PLACEMENT_TYPES
+        self.placements[unit] = ptype
+        self.__dict__.pop("_idx", None)
+
     def count_of_type(self, ptype: str) -> int:
-        return sum(1 for p in self.placements if p == ptype)
+        """Count over the plan's *own* layout: loan-slot overlay units are
+        excluded, and a lent-out (inactive) unit still counts — the layout
+        owns it even while its chips are on loan.  Dispatch-time candidate
+        sets use ``units_of_type`` instead, which is the active view."""
+        ext = self.__dict__.get("_extended") or ()
+        return sum(1 for g, p in enumerate(self.placements)
+                   if p == ptype and g not in ext)
 
     def type_histogram(self) -> Dict[str, int]:
         return {t: self.count_of_type(t) for t in PLACEMENT_TYPES

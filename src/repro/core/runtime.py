@@ -100,13 +100,42 @@ class RuntimeEngine:
         """Pre-busy freshly built units (fleet re-partition, core/fleet.py):
         a unit inherits the in-flight work of the chips it now owns plus the
         weight-reload latency charged when its pipeline or placement type
-        changed hands."""
+        changed hands.  The lending broker reuses the same entry point to
+        charge weight-reload latency on borrow and on return."""
         for uid, t in busy_until.items():
             u = self.units[uid]
             if t > u.free_at:
                 u.free_at = t
             if u.free_at > 0.0:
                 self._mark_busy(uid, u.free_at)
+
+    # -- cross-pipeline unit lending (core/lending.py) -------------------------
+
+    def add_loan_unit(self, ptype: str, node: int, busy_until: float) -> int:
+        """Append a borrowed foreign unit hosting ``ptype`` (E/C only) for
+        this engine's pipeline.  ``node`` is a synthetic id disjoint from the
+        plan's own nodes, so transfer/locality modelling treats pushes to the
+        borrowed unit as inter-node traffic.  The unit starts busy until
+        ``busy_until`` (the borrow-time weight reload)."""
+        uid = self.plan.extend(ptype)
+        self.units.append(Unit(uid=uid, node=node, placement=ptype,
+                               resident=set(ptype), free_at=busy_until))
+        self._mark_busy(uid, busy_until)
+        return uid
+
+    def revive_loan_unit(self, uid: int, ptype: str, node: int,
+                         busy_until: float) -> None:
+        """Reuse a returned loan slot for a new loan (keeps unit ids stable
+        across the engine's lifetime — nothing is ever removed)."""
+        u = self.units[uid]
+        u.placement = ptype
+        u.resident = set(ptype)
+        u.node = node
+        u.hb_staged = 0.0
+        u.free_at = max(u.free_at, busy_until)
+        self.plan.retype(uid, ptype)
+        self.plan.set_active(uid, True)
+        self._mark_busy(uid, u.free_at)
 
     # ----------------------------------------------------------- placement plan
 

@@ -54,6 +54,13 @@ class SimConfig:
                                       # its deadline (no aging flips), reset
                                       # to max_idle_gap when one does
     idle_gap_max: float = 16.0        # ceiling for the adaptive gap (s)
+    idle_window_wakeups: bool = False # event mode: keep Monitor-window
+                                      # boundary wake-ups scheduled even
+                                      # while nothing is pending/in-flight,
+                                      # so a pattern change during an idle
+                                      # gap is seen before the window drains
+                                      # below MIN_SAMPLES (stale-window fix;
+                                      # opt-in, used by the fleet clock)
 
 
 @dataclasses.dataclass
@@ -321,7 +328,8 @@ class Simulator:
                 t_next = self.trace[ai].arrival
             if self._events:
                 t_next = min(t_next, self._events[0][0])
-            if self._replace_capable and (self.pending or self._events):
+            if self._replace_capable and (self.pending or self._events
+                                          or self.cfg.idle_window_wakeups):
                 boundary = self.monitor.next_window_boundary()
                 if boundary is not None and boundary > tau:
                     t_next = min(t_next, boundary)

@@ -105,8 +105,11 @@ class TridentScheduler(Scheduler):
                     chunk = pool[i:i + bs0]
                     pending.append(chunk[0])
                     chunk_of[chunk[0].rid] = chunk
+        # fleet unit lending: a Lane carries borrowed foreign E/C units
+        # (core/lending.py); the plain Simulator never sets the attribute
         out = self.disp.dispatch(pending, sim.engine.plan, idle,
-                                 sim.engine.free_at(), tau)
+                                 sim.engine.free_at(), tau,
+                                 borrowed=getattr(sim, "borrowed_units", None))
         if self.enable_batching:
             for dec in out:
                 chunk = chunk_of.get(dec.request.rid, [dec.request])

@@ -158,6 +158,50 @@ MIX_FLIP: Tuple[Tuple[float, Dict[str, float]], ...] = (
     (1.0, {"sd3": 0.5, "flux": 2.0, "cogvideox": 1.25}),
 )
 
+# Bursty-E/C unit-lending scenario (``--mixed --shared --lending``,
+# tests/test_lending.py): a calm sizing phase spanning the first fleet
+# demand window fixes the partition, then three anti-correlated sub-window
+# decode bursts — cogvideox (vae-decode dominated aux work) spikes 3.5x
+# exactly while sd3 sits in its lull.  The bursts are shorter than the
+# adaptive scheduler's hysteresis window + cooldown, so re-partitioning
+# cannot chase them: without lending the capacity is stranded on sd3's
+# range, with lending the decode overflow rides on borrowed sd3 units.
+LENDING_RATES: Dict[str, float] = {"sd3": 40.0, "cogvideox": 1.0}
+BURST_MULTS: Dict[str, float] = {"cogvideox": 3.5, "sd3": 0.3}
+
+
+def bursty_ec_phases(duration: float, head: float = 180.0,
+                     burst: float = 60.0, calm: float = 60.0
+                     ) -> Tuple[Tuple[float, Dict[str, float]], ...]:
+    """Phase spans for the bursty-E/C scenario at any duration: the burst
+    *lengths* are what the scenario is tuned around (sub-window, so the
+    re-partitioner cannot chase them), so they stay absolute — a longer
+    trace gets more bursts, not longer ones.  Durations too short for even
+    one absolute burst cycle fall back to the tuned 600 s *shape* (spans
+    scale down proportionally), so short smoke traces still burst."""
+    if duration < head + burst + calm:
+        scale = duration / 600.0
+        head, burst, calm = head * scale, burst * scale, calm * scale
+    spans: List[Tuple[float, Dict[str, float]]] = [(head / duration, {})]
+    t = head
+    while t + burst + calm <= duration:
+        t += burst
+        spans.append((t / duration, dict(BURST_MULTS)))
+        # an intermediate calm span only when another burst still fits;
+        # otherwise the trailing calm runs to the end as one span (span
+        # boundaries restart the arrival streams, so structure matters)
+        if t + calm + burst + calm <= duration:
+            t += calm
+            spans.append((t / duration, {}))
+        else:
+            break
+    if spans[-1][0] < 1.0:
+        spans.append((1.0, {}))
+    return tuple(spans)
+
+
+BURSTY_EC: Tuple[Tuple[float, Dict[str, float]], ...] = bursty_ec_phases(600.0)
+
 
 def fleet_trace(pipelines: Sequence[str], duration: float,
                 profs: Dict[str, Profiler], seed: int = 0,

@@ -136,6 +136,75 @@ def test_maybe_replace_survives_infeasible_generate(monkeypatch):
     assert sim2.engine.plan is plan               # old plan untouched
 
 
+# -- idle-window wake-ups (stale-window fix) ----------------------------------
+
+class _ProbeScheduler(TridentScheduler):
+    """Records every re-placement check with the Monitor window state seen
+    at that moment."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.checks = []
+
+    def maybe_replace(self, sim, tau):
+        self.checks.append((tau, len(sim.monitor._completions)))
+        return super().maybe_replace(sim, tau)
+
+
+from repro.core import workloads as workloads_mod
+
+
+def _gap_trace(prof):
+    """A burst at t<=5, a long idle gap, one straggler at t=200."""
+    trace = workloads_mod.make_trace("sd3", "light", 5.0, prof, seed=0,
+                                     rate=6.0)
+    late = Request("sd3", 512, arrival=200.0)
+    late.deadline = 200.0 + 2.5 * prof.pipeline_time(late)
+    return trace + [late]
+
+
+@pytest.mark.parametrize("idle_wakeups", [False, True])
+def test_idle_window_wakeups_cover_the_gap(idle_wakeups):
+    """The ROADMAP's known corner: the event clock used to schedule
+    Monitor-window wake-ups only while requests were pending or in flight,
+    so a pattern change during an idle gap went unseen until the next
+    arrival — by which time the window had drained below MIN_SAMPLES.
+    With ``SimConfig.idle_window_wakeups`` the window boundaries stay
+    wake-up sources across the gap, so at least one re-placement check
+    still sees the retained samples before they slide out."""
+    prof = Profiler(C.get("sd3"))
+    trace = _gap_trace(prof)
+    cfg = SimConfig(num_chips=32, idle_window_wakeups=idle_wakeups)
+    sched = _ProbeScheduler(prof, cfg, trace)
+    sim = Simulator("sd3", sched, trace, cfg)
+    res = sim.run()
+    assert res.n_finished == res.n_requests
+    # checks strictly inside the idle gap (after the burst drained, before
+    # the straggler arrives)
+    gap_checks = [(tau, n) for tau, n in sched.checks if 30.0 < tau < 200.0]
+    if not idle_wakeups:
+        # the pre-fix behavior this guards against: the clock sleeps
+        # through the whole gap
+        assert not gap_checks
+    else:
+        assert gap_checks, "window boundaries must wake the clock mid-gap"
+        # and at least one such check still saw the burst's window samples
+        # (the stale-window case: seen before the window drains)
+        assert any(n > 0 for _, n in gap_checks)
+
+
+def test_idle_window_wakeups_do_not_change_results():
+    """The extra wake-ups are no-ops on quiet gaps: metrics must not move."""
+    results = {}
+    for flag in (False, True):
+        cfg = SimConfig(num_chips=32, idle_window_wakeups=flag)
+        results[flag] = run_sim("sd3", TridentScheduler, "light", 30.0,
+                                sim_cfg=cfg)
+    assert results[True].slo_attainment == results[False].slo_attainment
+    assert results[True].mean_latency == results[False].mean_latency
+    assert results[True].n_finished == results[False].n_finished
+
+
 # -- profile-guided max_idle_gap ----------------------------------------------
 
 def test_adaptive_idle_gap_fewer_heartbeats_on_quiet_backlog():

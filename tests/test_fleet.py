@@ -227,6 +227,30 @@ def test_adaptive_reacts_faster_than_window_cadence():
     assert ad.repartitions[-1][1]["flux"] > ad.repartitions[0][1]["flux"]
 
 
+def test_lending_off_path_is_bit_identical():
+    """PR-2 parity: with lending disabled (the default), every lending knob
+    must be inert — results are bit-identical no matter how the lending
+    fields are set, and no lending state is created.  (The committed
+    ``BENCH_shared_cluster.json`` pins the same property at bench scale:
+    re-running ``--mixed --shared`` on this tree reproduces it byte-for-
+    byte.)"""
+    a = run_fleet(["sd3", "flux"], mode="adaptive", duration=120.0,
+                  cfg=small_cfg(), rates=RATES, phases=FLIP)
+    b = run_fleet(["sd3", "flux"], mode="adaptive", duration=120.0,
+                  cfg=small_cfg(lending=False, lend_max_loans=1,
+                                lend_min_hold=1.0, lend_win=5.0,
+                                lend_util_target=0.9,
+                                idle_window_wakeups=False),
+                  rates=RATES, phases=FLIP)
+    assert a.slo_attainment == b.slo_attainment
+    assert a.mean_latency == b.mean_latency
+    assert a.p95_latency == b.p95_latency
+    assert a.sched_wakeups == b.sched_wakeups
+    assert a.repartitions == b.repartitions
+    assert a.per_pipeline == b.per_pipeline
+    assert b.loans == 0 and b.borrowed_unit_seconds == 0.0
+
+
 def test_fleet_trace_is_deterministic_and_tagged():
     profs = {p: Profiler(C.get(p)) for p in ("sd3", "flux")}
     a = workloads.fleet_trace(["sd3", "flux"], 60.0, profs, seed=5,

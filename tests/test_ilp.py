@@ -197,3 +197,90 @@ def test_grouped_warm_start_preserves_optimality():
     warm = {0: [(options[0][0].dim, options[0][0].usage)] * counts[0]}
     warmed = ilp.solve_grouped(options, budgets, counts, warm=warm)
     assert abs(base.reward - warmed.reward) < 1e-9
+
+
+def test_grouped_zero_remaining_capacity():
+    """All-zero budgets: the capacity bound caps every group's expansion at
+    0 slots — nothing is solved, nothing is granted, and the solve is
+    trivially optimal rather than an error."""
+    opts = [[ilp.Option(dim=0, usage=1, reward=10.0)],
+            [ilp.Option(dim=1, usage=2, reward=5.0)]]
+    gsol = ilp.solve_grouped(opts, budgets=[0, 0], counts=[7, 3])
+    assert gsol.n_slots == 0
+    assert gsol.alloc == {}
+    assert gsol.reward == 0.0
+    assert gsol.optimal
+
+
+def test_grouped_single_member_groups_equal_ungrouped_solve():
+    """counts == all-ones must reduce exactly to the plain solver: same
+    reward, same per-dimension usage."""
+    for seed in range(40):
+        options, budgets = make_instance(seed)
+        plain = ilp.solve(options, budgets)
+        gsol = ilp.solve_grouped(options, budgets, [1] * len(options))
+        assert abs(gsol.reward - plain.reward) < 1e-6, seed
+        used_plain = [0] * len(budgets)
+        for o in plain.choices.values():
+            used_plain[o.dim] += o.usage
+        used_grouped = [0] * len(budgets)
+        for granted in gsol.alloc.values():
+            assert len(granted) <= 1
+            for o in granted:
+                used_grouped[o.dim] += o.usage
+        for u, b in zip(used_grouped, budgets):
+            assert u <= b
+
+
+def test_grouped_expansion_cap_binds_on_flood():
+    """A flood of counts far beyond capacity must expand each group only to
+    its capacity bound (total_budget // min_usage), never to the raw count
+    — and the truncation must not cost any reward."""
+    opts = [[ilp.Option(dim=0, usage=2, reward=10.0)],      # cap: 12//2 = 6
+            [ilp.Option(dim=1, usage=1, reward=4.0),
+             ilp.Option(dim=0, usage=4, reward=9.0)]]       # cap: 12//1 = 12
+    budgets = [8, 4]
+    gsol = ilp.solve_grouped(opts, budgets, counts=[10_000, 50_000])
+    assert gsol.n_slots == 6 + 12        # capacity-capped, not 60k rows
+    assert gsol.optimal
+    # optimum: 4x usage-2 on dim0 (40) + 4x usage-1 on dim1 (16)
+    assert abs(gsol.reward - 56.0) < 1e-9
+    used = [0, 0]
+    for g, granted in gsol.alloc.items():
+        for o in granted:
+            used[o.dim] += o.usage
+    assert used[0] <= budgets[0] and used[1] <= budgets[1]
+
+
+def test_aggregate_dispatch_parity_on_randomized_trace():
+    """Dispatcher(aggregate=True) must reach the same solver optimum and
+    grant the same number of requests as the expanded per-request solve on
+    a randomized same-class-heavy trace (the regime aggregation targets)."""
+    import repro.configs as configs
+    from repro.core import workloads
+    from repro.core.dispatcher import Dispatcher
+    from repro.core.orchestrator import Orchestrator
+    from repro.core.profiler import Profiler
+
+    prof = Profiler(configs.get("sd3"))
+    rng = random.Random(7)
+    for seed in range(4):
+        trace = workloads.make_trace("sd3", "medium", 20.0, prof,
+                                     seed=seed, rate=8.0)
+        plan = Orchestrator(prof, num_chips=64).generate(trace[:32])
+        assert plan is not None
+        tau = rng.uniform(5.0, 15.0)
+        pending = [r for r in trace if r.arrival <= tau][-48:]
+        idle = set(range(plan.num_units))
+        free_at = {g: 0.0 for g in idle}
+        grants = {}
+        rewards = {}
+        for aggregate in (False, True):
+            disp = Dispatcher(prof, aggregate=aggregate)
+            decs = disp.dispatch(list(pending), plan, set(idle),
+                                 dict(free_at), tau)
+            grants[aggregate] = len(decs)
+            rewards[aggregate] = disp.last_solve_stats["reward"]
+            assert disp.last_solve_stats["optimal"]
+        assert abs(rewards[True] - rewards[False]) < 1e-6, seed
+        assert grants[True] == grants[False], seed

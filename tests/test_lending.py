@@ -1,0 +1,212 @@
+"""Cross-pipeline unit lending (core/lending.py).
+
+Covers: the fleet plan's lending map, FleetMonitor pressure windows, broker
+grant/return mechanics (min-hold, reload charging, lender budgets), the
+diffuse-path invariant (borrowed units host E/C only), off-path purity
+(lending disabled leaves zero lending side effects), and the headline
+behavior — sub-window decode bursts on one pipeline ride on a neighbour's
+idle units and the backlogged pipeline's tail improves.
+"""
+import pytest
+
+import repro.configs as C
+from repro.core import workloads
+from repro.core.fleet import (FleetConfig, FleetOrchestrator, FleetSimulator,
+                              FLEET_SCHEDULERS, PipelineRegistry, run_fleet)
+from repro.core.monitor import FleetMonitor
+from repro.core.profiler import Profiler
+
+# calm sizing window (the first fleet demand window), then anti-correlated
+# sub-window decode bursts: cogvideox spikes while sd3 is in its lull —
+# exactly the stranded-capacity regime unit lending recovers.  One tuned
+# definition, shared with ``benchmarks/e2e.py --lending``.
+BURSTY = workloads.BURSTY_EC
+RATES = workloads.LENDING_RATES
+
+
+def _run(lending, duration=600.0, seed=0, **cfg_kw):
+    cfg = FleetConfig(num_chips=256, lending=lending, **cfg_kw)
+    registry = PipelineRegistry(("sd3", "cogvideox"))
+    profs = {p: registry.profiler(p) for p in registry.pipelines}
+    trace = workloads.fleet_trace(("sd3", "cogvideox"), duration, profs,
+                                  seed=seed, rates=RATES, phases=BURSTY,
+                                  level="medium")
+    orch = FleetOrchestrator(registry, num_chips=256, chips_per_node=8)
+    sim = FleetSimulator(registry, FLEET_SCHEDULERS["adaptive"](orch, cfg),
+                         trace, cfg)
+    return sim, sim.run()
+
+
+# -- lending map ---------------------------------------------------------------
+
+def test_fleet_plan_lending_map():
+    registry = PipelineRegistry(("sd3", "flux"))
+    orch = FleetOrchestrator(registry, num_chips=128, chips_per_node=8)
+    plan = orch.generate({}, orch.budgets({"sd3": 1.0, "flux": 1.0}))
+    lmap = plan.lending_map(registry)
+    assert lmap, "a 2-pipeline plan must expose lendable units"
+    seen = set()
+    for node, units in lmap.items():
+        for lu in units:
+            seen.add(lu.pipeline)
+            assert lu.node == node
+            lo, hi = plan.chip_ranges[lu.pipeline]
+            assert lo <= node * plan.chips_per_node < hi
+            for (borrower, stage), cost in lu.borrow_cost.items():
+                assert borrower != lu.pipeline
+                assert stage in ("E", "C")
+                assert cost > 0.0
+            assert lu.return_cost > 0.0
+    # sd3 units are lendable to flux and vice versa only where unit sizes
+    # allow: flux units (k_min=2) can host sd3 work (k_min=1), but sd3's
+    # 1-chip units cannot hold a flux scheduling unit
+    sd3_units = [lu for us in lmap.values() for lu in us if lu.pipeline == "sd3"]
+    flux_units = [lu for us in lmap.values() for lu in us if lu.pipeline == "flux"]
+    assert all(("flux", "C") not in lu.borrow_cost for lu in sd3_units)
+    assert all(("sd3", "C") in lu.borrow_cost for lu in flux_units)
+    assert seen == {"flux"} or seen == {"sd3", "flux"}
+
+
+# -- monitor pressure windows --------------------------------------------------
+
+def test_fleet_monitor_lending_windows():
+    mon = FleetMonitor(t_win=100.0, lend_win=10.0)
+    for i in range(5):
+        mon.record_util(float(i), "a", 4.0, 2)
+        mon.record_util(float(i), "b", 0.0, 10)
+    assert abs(mon.backlog_pressure(4.0)["a"] - 4.0) < 1e-9
+    assert abs(mon.idle_supply(4.0)["b"] - 10.0) < 1e-9
+    # lend window slides independently of (and faster than) t_win
+    assert mon.next_window_boundary() == 10.0
+    mon.record_util(30.0, "a", 0.0, 8)
+    assert mon.backlog_pressure(30.0)["a"] == 0.0
+    assert mon.idle_supply(30.0)["a"] == 8.0
+
+
+# -- broker mechanics ----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lending_run():
+    sim, res = _run(lending=True)
+    return sim, res
+
+
+@pytest.fixture(scope="module")
+def plain_run():
+    sim, res = _run(lending=False)
+    return sim, res
+
+
+def test_loans_flow_to_the_backlogged_pipeline(lending_run):
+    sim, res = lending_run
+    assert res.loans > 0, "bursty trace must trigger lending"
+    assert res.borrowed_unit_seconds > 0.0
+    # the decode-heavy bursty pipeline borrows; the image pipeline lends
+    assert all(lender == "sd3" and borrower == "cogvideox"
+               for lender, borrower in sim.broker.loans_by_pair)
+    assert sum(sim.lanes["cogvideox"].borrowed_stage_runs.values()) > 0
+
+
+def test_loans_charge_reloads_and_respect_min_hold(lending_run):
+    sim, res = lending_run
+    assert res.lend_swap_cost_s > 0.0, "weight reloads must be charged"
+    # every borrow and every return is one reload; still-open loans have
+    # only paid the borrow half
+    assert sim.broker.reloads >= res.loans
+    # min-hold: voluntary returns only happen after lend_min_hold seconds
+    # (re-partitions may force-close loans early — those are counted
+    # separately), so the borrowed time must cover at least min_hold per
+    # voluntarily closed loan
+    voluntary = (res.loans - len(sim.broker.active)
+                 - sim.broker.forced_returns)
+    assert voluntary >= 0
+    if voluntary:
+        assert res.borrowed_unit_seconds >= \
+            0.9 * voluntary * sim.cfg.lend_min_hold
+
+
+def test_diffuse_path_never_touches_borrowed_units(lending_run):
+    sim, res = lending_run
+    # borrowed slots host only E/C placements (the _record assert enforces
+    # the per-dispatch invariant during the run; check the slots too)
+    for lane in sim.lanes.values():
+        for uid in range(lane.base_units, len(lane.engine.units)):
+            assert lane.engine.units[uid].placement in ("E", "C")
+    assert set(res.borrowed_stage_runs) <= {"E", "C"}
+
+
+def test_lender_keeps_its_own_tail(lending_run, plain_run):
+    """The utilization-budget gate: lending must not wreck the lender."""
+    _, on = lending_run
+    _, off = plain_run
+    sd3_on = on.per_pipeline["sd3"]
+    sd3_off = off.per_pipeline["sd3"]
+    assert sd3_on["p95_s"] <= 1.5 * sd3_off["p95_s"]
+    assert sd3_on["slo"] >= sd3_off["slo"] - 0.05
+
+
+def test_lending_improves_the_backlogged_tail(lending_run, plain_run):
+    """The tentpole claim at test scale: sub-window decode bursts ride on
+    borrowed units and the worst pipeline's tail improves."""
+    _, on = lending_run
+    _, off = plain_run
+    worst_on = max(m["p95_s"] for m in on.per_pipeline.values())
+    worst_off = max(m["p95_s"] for m in off.per_pipeline.values())
+    assert worst_on < worst_off
+    assert on.slo_attainment >= off.slo_attainment
+
+
+def test_lane_replace_keeps_loans_consistent(lending_run):
+    """A lane-level placement switch during active loans must neither
+    reactivate a lender's lent-out unit (double-booking its chips) nor
+    count borrowed overlay slots in the layout histogram that
+    ``maybe_replace`` compares against freshly generated plans."""
+    sim, _ = lending_run
+    for lane in sim.lanes.values():
+        plan = lane.engine.plan
+        hist_total = sum(plan.type_histogram().values())
+        assert hist_total == lane.base_units, \
+            "loan slots leaked into the layout histogram"
+    for loan in sim.broker.active:
+        lender_plan = sim.lanes[loan.lender].engine.plan
+        assert not lender_plan.is_active(loan.lender_uid), \
+            "lent-out unit active in the lender's plan (double-booked)"
+        assert sim.lanes[loan.borrower].engine.plan.is_active(loan.slot)
+
+
+# -- off-path purity -----------------------------------------------------------
+
+def test_lending_off_leaves_no_side_effects(plain_run):
+    sim, res = plain_run
+    assert sim.broker is None
+    assert res.loans == 0
+    assert res.borrowed_unit_seconds == 0.0
+    assert res.lend_swap_cost_s == 0.0
+    assert res.borrowed_stage_runs == {}
+    for lane in sim.lanes.values():
+        assert len(lane.engine.units) == lane.base_units
+        assert lane.borrowed_units == {}
+        # the lending-pressure windows stay empty: no extra wake-up sources
+        assert not sim.fleet_monitor._util
+
+
+def test_lending_defaults_off():
+    assert FleetConfig().lending is False
+    assert FleetConfig().idle_window_wakeups is False
+
+
+def test_single_pipeline_fleet_ignores_lending():
+    """A 1-pipeline fleet has nobody to borrow from: lending on must be a
+    no-op and reproduce the lending-off run exactly."""
+    prof = Profiler(C.get("sd3"))
+    t1 = workloads.make_trace("sd3", "medium", 45.0, prof, seed=3)
+    t2 = workloads.make_trace("sd3", "medium", 45.0, prof, seed=3)
+    base = run_fleet(["sd3"], mode="adaptive",
+                     cfg=FleetConfig(num_chips=128), trace=t1)
+    lent = run_fleet(["sd3"], mode="adaptive",
+                     cfg=FleetConfig(num_chips=128, lending=True), trace=t2)
+    assert lent.loans == 0
+    assert lent.slo_attainment == base.slo_attainment
+    assert lent.mean_latency == base.mean_latency
+    assert lent.p95_latency == base.p95_latency
+    assert lent.n_finished == base.n_finished
