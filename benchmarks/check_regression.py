@@ -34,6 +34,8 @@ from typing import Dict, List, Optional
 EVENT_SPEEDUP_FLOOR = 1.2          # event clock must beat the tick clock
 SHARED_P95_FLOOR = 1.2             # adaptive fleet vs static sub-clusters
 LENDING_WORST_P95_FLOOR = 1.0      # lending must never hurt the worst lane
+UNIFIED_OVERHEAD_CEIL_PCT = 5.0    # kernel overhead vs the old hand-rolled
+                                   # loops (wall-clock-class measurement)
 
 
 def _ratio_check(problems: List[str], name: str, current: float,
@@ -122,10 +124,36 @@ def check_unit_lending(base: Dict, cur: Dict, tol: float,
     return problems
 
 
+def check_unified_clock(base: Dict, cur: Dict, tol: float,
+                        wall_tol: float) -> List[str]:
+    """The unified event-clock kernel's acceptance record
+    (BENCH_unified_clock.json).  Deterministic signals are tight: the
+    kernel must keep reproducing tick-mode metrics and must not inflate
+    wake-up counts.  Wall-derived signals get the wall-clock-class
+    tolerance: the event-vs-tick speedup must hold vs the baseline, and —
+    when the run measured it against a pre-unification tree — the
+    kernel's per-mode overhead must stay under the 5% acceptance ceiling."""
+    # same contract as the event-sim smoke pair (delegated, so the two
+    # gates can never drift apart) ...
+    problems = check_event_sim(base, cur, tol, wall_tol)
+    # ... plus the tick-mode wakeup count and the overhead ceiling
+    if base.get("scenarios") == cur.get("scenarios"):
+        _count_check(problems, "sched_wakeups_tick",
+                     cur.get("sched_wakeups_tick", 0),
+                     base.get("sched_wakeups_tick", 0), tol)
+    for key in ("kernel_overhead_pct_event", "kernel_overhead_pct_tick"):
+        if key in cur and cur[key] > UNIFIED_OVERHEAD_CEIL_PCT:
+            problems.append(f"{key}: {cur[key]}% exceeds the "
+                            f"{UNIFIED_OVERHEAD_CEIL_PCT}% kernel-overhead "
+                            f"ceiling")
+    return problems
+
+
 CHECKERS = {
     "event_driven_simulator_smoke": check_event_sim,
     "shared_cluster_mix_flip": check_shared_cluster,
     "unit_lending_bursty_ec": check_unit_lending,
+    "unified_clock_kernel": check_unified_clock,
 }
 
 

@@ -149,7 +149,9 @@ from repro.core.profiler import Profiler
 from repro.core.simulator import SimConfig, Simulator
 from repro.core.trident import TridentScheduler
 SCHEDS = {"trident": TridentScheduler, **BASELINES}
-scenarios, repeats = json.load(sys.stdin)
+payload = json.load(sys.stdin)
+scenarios, repeats = payload[0], payload[1]
+mode = payload[2] if len(payload) > 2 else None
 best = None
 for _ in range(repeats):
     wall = 0.0
@@ -158,7 +160,8 @@ for _ in range(repeats):
         prof = Profiler(configs.get(pid),
                         force_k_min=getattr(cls, "FORCE_KMIN", None))
         trace = workloads.make_trace(pid, wl, dur, prof, seed=0, rate=rate)
-        cfg = SimConfig()   # seed SimConfig has no clock mode: fixed-tick loop
+        # no mode given: the seed SimConfig (fixed-tick loop only)
+        cfg = SimConfig() if mode is None else SimConfig(mode=mode)
         sim = Simulator(pid, cls(prof, cfg, trace), trace, cfg)
         t0 = time.perf_counter()
         sim.run()
@@ -168,25 +171,59 @@ print(json.dumps({"wall_s": best}))
 """
 
 
-def time_seed_tree(seed_ref: str) -> Optional[float]:
-    """Run the smoke scenarios against a checked-out seed tree (the original
-    fixed-tick loop, pre hot-path optimizations) and return its sim-core
-    wall-clock.  ``seed_ref`` is the seed repo root (e.g. a git worktree)."""
+def _time_ref_tree(ref_root: str, mode: Optional[str],
+                   label: str) -> Optional[float]:
+    """Run the smoke scenarios against a checked-out reference tree and
+    return its best-of sim-core wall-clock (``mode=None`` for the seed
+    tree, whose SimConfig predates clock modes)."""
     import os
     import subprocess
     import sys as _sys
     env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(seed_ref, "src")
+    env["PYTHONPATH"] = os.path.join(ref_root, "src")
+    payload = [[list(s) for s in SMOKE_SCENARIOS], BENCH_REPEATS]
+    if mode is not None:
+        payload.append(mode)
     try:
         out = subprocess.run([_sys.executable, "-c", _SEED_DRIVER],
-                             input=json.dumps([[list(s) for s in SMOKE_SCENARIOS],
-                                               BENCH_REPEATS]),
+                             input=json.dumps(payload),
                              capture_output=True, text=True, env=env,
                              timeout=1800, check=True)
         return float(json.loads(out.stdout.strip().splitlines()[-1])["wall_s"])
     except Exception as e:  # missing worktree etc. — report, don't fail smoke
-        print(f"# seed-ref timing unavailable: {e}", flush=True)
+        print(f"# {label} timing unavailable: {e}", flush=True)
         return None
+
+
+def time_seed_tree(seed_ref: str) -> Optional[float]:
+    """Seed-tree timing (the original fixed-tick loop, pre hot-path
+    optimizations); ``seed_ref`` is the seed repo root (e.g. a worktree)."""
+    return _time_ref_tree(seed_ref, None, "seed-ref")
+
+
+def kernel_overhead_pct(pre_ref: str, mode: str,
+                        rounds: int = 3) -> Optional[Tuple[float, float,
+                                                           float]]:
+    """Unified-kernel overhead vs a pre-unification tree, one clock mode.
+
+    Machine load drifts on the minutes scale, so timing one tree and then
+    the other lets noise masquerade as overhead; this interleaves the two
+    trees in alternating subprocesses and takes best-of-rounds for each,
+    which is what the <= 5% acceptance ceiling is judged against.
+    Returns (overhead_pct, wall_now_s, wall_pre_s), or None when the
+    reference tree is unusable."""
+    import os
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    now_best = pre_best = None
+    for _ in range(rounds):
+        now = _time_ref_tree(here, mode, f"self({mode})")
+        pre = _time_ref_tree(pre_ref, mode, f"pre-ref({mode})")
+        if now is None or pre is None:
+            return None
+        now_best = now if now_best is None else min(now_best, now)
+        pre_best = pre if pre_best is None else min(pre_best, pre)
+    pct = 100.0 * (now_best - pre_best) / max(pre_best, 1e-9)
+    return pct, now_best, pre_best
 
 
 def _best_of(mode: str) -> Tuple[List[Row], float, int]:
@@ -199,8 +236,17 @@ def _best_of(mode: str) -> Tuple[List[Row], float, int]:
 
 
 def run_smoke(bench_path: Optional[str] = "BENCH_event_sim.json",
-              seed_ref: Optional[str] = None) -> List[Row]:
-    """Event vs tick clock on identical traces; records the speedup."""
+              seed_ref: Optional[str] = None,
+              unified_bench_path: Optional[str] = None,
+              pre_ref: Optional[str] = None) -> List[Row]:
+    """Event vs tick clock on identical traces; records the speedup.
+
+    With ``unified_bench_path`` also writes the unified-kernel BENCH: the
+    same smoke measurements re-badged as the kernel's acceptance record,
+    plus — when ``pre_ref`` points at a checked-out pre-unification tree
+    (the last commit with the two hand-rolled loops) — the kernel's
+    overhead vs those old loops, per clock mode (acceptance: <= 5%).
+    """
     rows, wall_event, wk_event = _best_of("event")
     tick_rows, wall_tick, wk_tick = _best_of("tick")
     speedup = wall_tick / max(wall_event, 1e-9)
@@ -234,6 +280,32 @@ def run_smoke(bench_path: Optional[str] = "BENCH_event_sim.json",
     if bench_path:
         with open(bench_path, "w") as f:
             json.dump(bench, f, indent=2)
+            f.write("\n")
+    if unified_bench_path:
+        unified = {
+            "bench": "unified_clock_kernel",
+            "scenarios": [list(s) for s in SMOKE_SCENARIOS],
+            "wall_event_s": round(wall_event, 4),
+            "wall_tick_s": round(wall_tick, 4),
+            "speedup_event_vs_tick": round(speedup, 2),
+            "sched_wakeups_event": wk_event,
+            "sched_wakeups_tick": wk_tick,
+            "metrics_match": bench["metrics_match"],
+        }
+        if pre_ref:
+            for label in ("event", "tick"):
+                measured = kernel_overhead_pct(pre_ref, label)
+                if measured is None:
+                    continue
+                pct, now, pre = measured
+                unified[f"wall_pre_{label}_s"] = round(pre, 4)
+                unified[f"kernel_overhead_pct_{label}"] = round(pct, 2)
+                rows.append((f"e2e_smoke/unified_kernel_overhead_pct_{label}",
+                             unified[f"kernel_overhead_pct_{label}"],
+                             {"wall_pre_s": round(pre, 4),
+                              "wall_now_s": round(now, 4)}))
+        with open(unified_bench_path, "w") as f:
+            json.dump(unified, f, indent=2)
             f.write("\n")
     return rows
 
@@ -553,13 +625,31 @@ if __name__ == "__main__":
     ap.add_argument("--seed-ref", default=None,
                     help="path to a checked-out seed tree; also times the "
                          "original tick loop for the BENCH record")
+    ap.add_argument("--unified-json", default=None,
+                    help="with --smoke: also write the unified-kernel "
+                         "BENCH (e.g. BENCH_unified_clock.json)")
+    ap.add_argument("--shared-json", default="BENCH_shared_cluster.json",
+                    help="output path for the --shared BENCH (point it "
+                         "away from the committed baseline when the run "
+                         "feeds the regression gate, e.g. in nightly CI)")
+    ap.add_argument("--lending-json", default="BENCH_unit_lending.json",
+                    help="output path for the --lending BENCH (same "
+                         "caveat as --shared-json)")
+    ap.add_argument("--pre-ref", default=None,
+                    help="path to a checked-out pre-unification tree (the "
+                         "last commit with the two hand-rolled loops); "
+                         "records the kernel's overhead vs them in the "
+                         "unified-kernel BENCH")
     args = ap.parse_args()
     if args.smoke:
-        emit(run_smoke(bench_path=args.bench_json, seed_ref=args.seed_ref))
+        emit(run_smoke(bench_path=args.bench_json, seed_ref=args.seed_ref,
+                       unified_bench_path=args.unified_json,
+                       pre_ref=args.pre_ref))
     if args.lending:
-        emit(run_lending(quick=not args.full))
+        emit(run_lending(quick=not args.full, bench_path=args.lending_json))
     elif args.shared:
-        emit(run_mixed_shared(quick=not args.full))
+        emit(run_mixed_shared(quick=not args.full,
+                              bench_path=args.shared_json))
     elif args.mixed:
         emit(run_mixed(quick=not args.full))
     if not (args.smoke or args.mixed or args.shared or args.lending):

@@ -48,12 +48,15 @@ def main() -> None:
                                         "BENCH_event_sim.smoke.json")
         smoke_shared_json = os.path.join("results",
                                          "BENCH_shared_smoke.json")
+        smoke_unified_json = os.path.join("results",
+                                          "BENCH_unified_clock.smoke.json")
         t0 = time.perf_counter()
         print("# --- e2e (smoke) ---", flush=True)
         from benchmarks import e2e
         # fresh JSONs go under results/ so the committed baselines stay
         # intact for the regression gate below
-        smoke_rows = e2e.run_smoke(bench_path=smoke_event_json)
+        smoke_rows = e2e.run_smoke(bench_path=smoke_event_json,
+                                   unified_bench_path=smoke_unified_json)
         emit(smoke_rows)
         print(f"# e2e smoke took {time.perf_counter() - t0:.1f}s", flush=True)
         t0 = time.perf_counter()
@@ -76,7 +79,8 @@ def main() -> None:
         from benchmarks import check_regression
         problems = check_regression.run_checks(
             [("BENCH_event_sim.json", smoke_event_json),
-             ("BENCH_shared_cluster.json", smoke_shared_json)])
+             ("BENCH_shared_cluster.json", smoke_shared_json),
+             ("BENCH_unified_clock.json", smoke_unified_json)])
         for p in problems:
             print(f"# REGRESSION: {p}", flush=True)
         if not problems:

@@ -11,7 +11,12 @@ The paper's contribution, as a composable system:
                      Adjust-on-Dispatch placement switches
 * ``monitor``      — sliding-window throughput + switch trigger (§5.3)
 * ``profiler``     — offline profiler as a calibrated analytic model (§5.1)
+* ``clock``        — the scheduler-agnostic event-clock kernel (event heap,
+                     tick-grid quantization, heartbeat/adaptive idle gap,
+                     wake-source plug-ins) + the ``Lane`` serving stack;
+                     every simulator in the repo drives this one loop
 * ``simulator``    — discrete-event cluster driving the real planner code
+                     (a one-lane driver over the clock kernel)
 * ``trident``      — the full TridentServe scheduler (Algorithm 1)
 * ``baselines``    — B1-B6 (§8.1, Appendix D.2)
 * ``workloads``    — Steady/Dynamic/Proprietary traces (Table 5, Fig. 9)
@@ -19,10 +24,10 @@ The paper's contribution, as a composable system:
                      one placement plan for the whole cluster, chip budgets
                      re-partitioned with the live traffic mix
 """
-from repro.core import (baselines, dispatcher, fleet, ilp, monitor,
+from repro.core import (baselines, clock, dispatcher, fleet, ilp, monitor,
                         orchestrator, placement, profiler, request, runtime,
                         simulator, trident, workloads)
 
-__all__ = ["baselines", "dispatcher", "fleet", "ilp", "monitor",
+__all__ = ["baselines", "clock", "dispatcher", "fleet", "ilp", "monitor",
            "orchestrator", "placement", "profiler", "request", "runtime",
            "simulator", "trident", "workloads"]

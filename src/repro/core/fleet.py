@@ -21,13 +21,17 @@ style demand tracking).
   every window, no hysteresis), ``adaptive`` (re-partition only on a
   ``FleetMonitor.mix_shift``, with hysteresis + cooldown, demand blended
   with queued backlog so a post-shift queue drains fast).
-* ``FleetSimulator``       — one event-driven clock over the shared chip
-  pool.  Each pipeline runs the unmodified single-pipeline TridentServe
-  stack (``TridentScheduler`` + ``RuntimeEngine`` + ``Monitor``) inside a
-  *lane*; on re-partition, chips change hands and the per-unit weight-swap
-  cost (reload latency, charged on pipeline *or* type change) is paid by
-  pre-busying the new units — so an idle Flux unit really can be handed to
-  a backlogged SD3 class, at a price the hysteresis must beat.
+* ``FleetSimulator``       — one clock over the shared chip pool: a
+  multi-lane ``ClockDriver`` over the same ``repro.core.clock.EventClock``
+  kernel the single-pipeline ``Simulator`` drives (tests/test_fleet.py
+  pins event-vs-tick parity on randomized multi-lane traces).  Each
+  pipeline runs the unmodified single-pipeline TridentServe stack
+  (``TridentScheduler`` + ``RuntimeEngine`` + ``Monitor``) inside a
+  ``Lane``; on re-partition, chips change hands and the per-unit
+  weight-swap cost (reload latency, charged on pipeline *or* type change)
+  is paid by pre-busying the new units — so an idle Flux unit really can
+  be handed to a backlogged SD3 class, at a price the hysteresis must
+  beat.
 
 The single-pipeline system is the 1-pipeline special case: a fleet with one
 registered pipeline reproduces ``Simulator`` + ``TridentScheduler`` results
@@ -36,18 +40,19 @@ exactly (tests/test_fleet.py).
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import repro.configs as configs
-from repro.core.monitor import FleetMonitor, Monitor
+from repro.core.clock import (ClockConfig, EventClock, Lane,
+                              monitor_boundary_source, replace_capable)
+from repro.core.monitor import FleetMonitor
 from repro.core.orchestrator import Orchestrator
 from repro.core.placement import PlacementPlan
 from repro.core.profiler import Profiler
 from repro.core.request import Request
-from repro.core.runtime import EngineStats, RuntimeEngine
-from repro.core.simulator import PendingSet, Scheduler, SimConfig
+from repro.core.runtime import RuntimeEngine
+from repro.core.simulator import SimConfig
 from repro.core.trident import TridentScheduler
 from repro.core import workloads
 
@@ -213,6 +218,30 @@ class FleetOrchestrator:
             w[r.pipeline] += request_footprint(self.reg.profiler(r.pipeline), r)
         return w
 
+    # SLO-weighted budget objective: a pipeline missing its deadlines gets
+    # its demand weight grossed up by this gain times its windowed miss
+    # fraction (miss 50% of a window -> 3x weight at the default gain).
+    SLO_PRESSURE_GAIN = 4.0
+
+    def objective_weights(self, weights: Dict[str, float],
+                          slo_attainment: Dict[str, float],
+                          objective: str = "demand") -> Dict[str, float]:
+        """Apply ``FleetConfig.budget_objective`` to raw demand weights.
+
+        ``"demand"`` (the default) returns ``weights`` unchanged — the
+        same object, so the default fleet path stays bit-identical.
+        ``"slo"`` scales each pipeline's weight by its windowed SLO-miss
+        pressure: chips flow toward the pipeline that is actually missing
+        deadlines, not just the one with the largest footprint (a video
+        pipeline can be demand-heavy yet comfortably inside its SLO while
+        an image pipeline starves).  Pipelines with no windowed finishes
+        keep their raw weight (no evidence, no boost)."""
+        if objective != "slo" or not slo_attainment:
+            return weights
+        return {p: w * (1.0 + self.SLO_PRESSURE_GAIN
+                        * (1.0 - slo_attainment.get(p, 1.0)))
+                for p, w in weights.items()}
+
     # -- chip budgets ----------------------------------------------------------
 
     def budgets(self, weights: Dict[str, float]) -> Dict[str, int]:
@@ -279,6 +308,10 @@ class FleetConfig:
     seed: int = 0
     proactive_push: bool = True
     adjust_on_dispatch: bool = True
+    mode: str = "event"               # "event" | "tick" (legacy reference
+                                      # loop; the unified kernel gives the
+                                      # fleet the tick mode for free, used
+                                      # by the multi-lane parity tests)
     max_idle_gap: float = 1.0
     adaptive_idle_gap: bool = True    # profile-guided heartbeat (fleet runs
                                       # are long; quiet lanes should not pin
@@ -288,6 +321,22 @@ class FleetConfig:
     t_win: float = 180.0              # fleet demand window (s)
     hysteresis: float = 0.10          # min demand-share move to re-partition
     cooldown: float = 120.0           # min time between re-partitions (s)
+    budget_objective: str = "demand"  # "demand" (pure footprint shares) |
+                                      # "slo" (demand weighted by windowed
+                                      # SLO-miss pressure; see
+                                      # FleetOrchestrator.objective_weights).
+                                      # Default stays "demand" — bit-
+                                      # identical to the committed traces.
+    scheduler_wake_hooks: bool = False # register the fleet scheduler's
+                                      # ``next_wake`` trigger-crossing hook
+                                      # (window cadence / cooldown expiry)
+                                      # as a kernel wake source.  Opt-in:
+                                      # extra wake-ups shift heartbeat
+                                      # phase, so the default keeps the
+                                      # committed BENCH traces bit-exact;
+                                      # the event/tick parity tests turn it
+                                      # on so threshold crossings are seen
+                                      # at the same grid point both modes.
     # Monitor-window wake-ups while fully idle (the stale-window fix): off
     # by default so existing fleet traces reproduce bit-identically; the
     # lending clock forces it on (loans must return during idle gaps).
@@ -318,55 +367,22 @@ class FleetConfig:
                          adaptive_idle_gap=self.adaptive_idle_gap,
                          idle_gap_max=self.idle_gap_max)
 
+    def clock_cfg(self, horizon: float) -> ClockConfig:
+        return ClockConfig(tick=self.tick, horizon=horizon, mode=self.mode,
+                           max_idle_gap=self.max_idle_gap,
+                           adaptive_idle_gap=self.adaptive_idle_gap,
+                           idle_gap_max=self.idle_gap_max)
 
-class Lane:
+
+def make_lane(pipeline: str, prof: Profiler, sim_cfg: SimConfig,
+              trace: Sequence[Request], aggregate_ilp: bool = False) -> Lane:
     """One pipeline's slice of the fleet: the unmodified single-pipeline
-    TridentServe stack over a chip range.  Exposes the attribute surface
-    ``TridentScheduler`` expects from ``Simulator`` (pending / engine /
-    monitor / new_arrivals / fail_request_oom), so the lane *is* the
-    1-pipeline special case."""
-
-    def __init__(self, pipeline: str, prof: Profiler, sim_cfg: SimConfig,
-                 trace: Sequence[Request], aggregate_ilp: bool = False):
-        self.pipeline = pipeline
-        self.prof = prof
-        self.sched = TridentScheduler(prof, sim_cfg, trace,
-                                      aggregate_ilp=aggregate_ilp)
-        self.monitor = Monitor()
-        self.pending = PendingSet()
-        self.new_arrivals: List[Request] = []
-        self.engine: Optional[RuntimeEngine] = None
-        self.request_oom: List[Request] = []
-        self.vr_histogram: Dict[int, int] = {}
-        self.throughput: Dict[int, int] = {}
-        self.placement_log: List[Tuple[float, Dict[str, int]]] = []
-        self._stats_base = EngineStats()   # stats of retired engines
-        # cross-pipeline unit lending (core/lending.py): borrowed foreign
-        # E/C units by hosted stage, and how many stage runs landed on them.
-        # base_units marks the engine's own plan size; loan slots live above.
-        self.borrowed_units: Dict[str, Tuple[int, ...]] = {}
-        self.borrowed_stage_runs: Dict[str, int] = {}
-        self.base_units: int = 0
-
-    def fail_request_oom(self, req: Request) -> None:
-        self.request_oom.append(req)
-
-    def bank_engine_stats(self) -> None:
-        """Fold the outgoing engine's counters into the lane total before a
-        re-partition replaces it."""
-        if self.engine is None:
-            return
-        for f in dataclasses.fields(EngineStats):
-            setattr(self._stats_base, f.name,
-                    getattr(self._stats_base, f.name)
-                    + getattr(self.engine.stats, f.name))
-
-    def engine_stats(self) -> Dict[str, float]:
-        total = dataclasses.asdict(self._stats_base)
-        if self.engine is not None:
-            for k, v in dataclasses.asdict(self.engine.stats).items():
-                total[k] += v
-        return total
+    TridentServe stack over a chip range, inside the shared ``Lane``
+    container (repro.core.clock) — so the lane *is* the 1-pipeline
+    special case."""
+    return Lane(pipeline, prof,
+                TridentScheduler(prof, sim_cfg, trace,
+                                 aggregate_ilp=aggregate_ilp))
 
 
 # ---------------------------------------------------------------- schedulers
@@ -401,6 +417,21 @@ class FleetScheduler:
                           ) -> Optional[Dict[str, int]]:
         return None
 
+    def next_wake(self, fleet: "FleetSimulator", tau: float
+                  ) -> Optional[float]:
+        """Event-source plug-in (opt-in via
+        ``FleetConfig.scheduler_wake_hooks``): the earliest future time
+        this scheduler's re-partition trigger can *newly* fire — a window
+        cadence or cooldown expiring.  Demand-share drift itself only
+        moves on arrivals, which are already wake-ups."""
+        return None
+
+    def _objective_weights(self, fleet: "FleetSimulator", tau: float,
+                           weights: Dict[str, float]) -> Dict[str, float]:
+        return self.orch.objective_weights(
+            weights, fleet.fleet_monitor.slo_attainment(tau),
+            self.cfg.budget_objective)
+
 
 class ProportionalFleetScheduler(FleetScheduler):
     """Re-partition to the windowed demand shares at every fleet window —
@@ -416,12 +447,17 @@ class ProportionalFleetScheduler(FleetScheduler):
         shares = mon.demand_shares(tau)
         if not shares:
             return None
-        budgets = self.orch.budgets(shares)
+        budgets = self.orch.budgets(self._objective_weights(fleet, tau,
+                                                            shares))
         if budgets == fleet.plan.budget_histogram():
             self.basis_shares = shares
             mon.last_repartition = tau   # window served; check again next win
             return None
         return budgets
+
+    def next_wake(self, fleet, tau):
+        cadence = fleet.fleet_monitor.last_repartition + self.cfg.t_win
+        return cadence if cadence > tau else None
 
 
 class AdaptiveFleetScheduler(FleetScheduler):
@@ -444,7 +480,8 @@ class AdaptiveFleetScheduler(FleetScheduler):
         backlog = fleet.backlog_weights()
         weights = {p: demand.get(p, 0.0) + backlog.get(p, 0.0)
                    for p in self.orch.reg.pipelines}
-        budgets = self.orch.budgets(weights)
+        budgets = self.orch.budgets(self._objective_weights(fleet, tau,
+                                                            weights))
         if budgets == fleet.plan.budget_histogram():
             # partition already matches the shifted demand at node
             # granularity: adopt the shares as the new basis so the trigger
@@ -454,6 +491,10 @@ class AdaptiveFleetScheduler(FleetScheduler):
             self.basis_shares = shares
             return None
         return budgets
+
+    def next_wake(self, fleet, tau):
+        cool = fleet.fleet_monitor.last_repartition + self.cfg.cooldown
+        return cool if cool > tau else None
 
 
 FLEET_SCHEDULERS = {
@@ -506,17 +547,13 @@ class FleetResult:
                 f"swaps={len(self.repartitions) - 1}{lend}")
 
 
-# fleet completion event:
-#   (finish, seq, pipeline, stage, ptype, dur, batch members)
-# — the whole batch rides along so per-pipeline SLO windows count every
-# finished request, not one per dispatch decision
-FleetEvent = Tuple[float, int, str, str, str, float, Tuple[Request, ...]]
-
-
 class FleetSimulator:
-    """Event-driven co-serving simulator: one clock, one chip pool, one
-    fleet placement plan; per-pipeline lanes run the production
-    single-pipeline scheduler code unchanged."""
+    """Co-serving simulator: one clock, one chip pool, one fleet placement
+    plan; per-pipeline lanes run the production single-pipeline scheduler
+    code unchanged.  A multi-lane ``ClockDriver`` over the shared
+    ``repro.core.clock.EventClock`` kernel — the same loop the
+    single-pipeline ``Simulator`` drives, so the 1-pipeline fleet is
+    bit-identical to it by construction."""
 
     def __init__(self, registry: PipelineRegistry, scheduler: FleetScheduler,
                  trace: Sequence[Request], cfg: Optional[FleetConfig] = None):
@@ -531,14 +568,15 @@ class FleetSimulator:
                                           lend_win=self.cfg.lend_win)
         self.lanes: Dict[str, Lane] = {}
         self.plan: Optional[FleetPlacementPlan] = None
-        self._events: List[FleetEvent] = []
-        self._eseq = 0
+        trace_end = self.trace[-1].arrival if self.trace else 0.0
+        self.clock = EventClock(
+            self.cfg.clock_cfg(trace_end + self.cfg.horizon_slack))
+        self._ai = 0                   # arrival cursor into the trace
         self.repartition_log: List[Tuple[float, Dict[str, int]]] = []
-        self.sched_wakeups = 0
         self.swap_cost_s = 0.0
         self.units_reloaded = 0
-        self._track_flips = self.cfg.adaptive_idle_gap
-        self._dl_heap: List[Tuple[float, str, int]] = []
+        self._track_flips = (self.cfg.mode == "event"
+                             and self.cfg.adaptive_idle_gap)
         self._repartition_capable = (
             type(scheduler).maybe_repartition
             is not FleetScheduler.maybe_repartition)
@@ -550,41 +588,59 @@ class FleetSimulator:
 
     # ---------------------------------------------------------------- helpers
 
+    @property
+    def _events(self):
+        """The kernel's completion heap (kept for tests/introspection)."""
+        return self.clock.completions
+
+    @property
+    def sched_wakeups(self) -> int:
+        return self.clock.wakeups
+
     def backlog_weights(self) -> Dict[str, float]:
         """Outstanding unit-time footprint (chip-seconds) per lane queue."""
         return {pid: sum(request_footprint(lane.prof, r)
                          for r in lane.pending)
                 for pid, lane in self.lanes.items()}
 
-    def _record(self, lane: Lane, dec, times: Dict[str, Tuple[float, float]]):
-        members = (dec.request,) + tuple(getattr(dec, "corequests", ()))
-        for s, (start, fin) in times.items():
-            for req in members:
-                req.stage_done[s] = fin
-            ptype = lane.engine.plan.placements[
-                (dec.d_units if s == "D" else
-                 dec.e_units if s == "E" else dec.c_units)[0]]
-            heapq.heappush(self._events, (fin, self._eseq, lane.pipeline, s,
-                                          ptype, fin - start, members))
-            self._eseq += 1
-        lane.vr_histogram[dec.vr_type] = (lane.vr_histogram.get(dec.vr_type, 0)
-                                          + len(members))
+    # -- wake sources (registered once in run(), any lane count) --------------
+
+    def _work_in_flight(self) -> bool:
+        return (any(lane.pending for lane in self.lanes.values())
+                or bool(self.clock.completions))
+
+    def _register_wake_sources(self) -> None:
+        self.clock.add_source(self._next_arrival)
+        # stale-window fix: with idle_window_wakeups (forced on by lending —
+        # loans must be able to return during an idle gap), Monitor-window
+        # boundaries stay wake-up sources even while nothing is pending
+        idle_wake = self.cfg.idle_window_wakeups or self.cfg.lending
+        for lane in self.lanes.values():
+            if replace_capable(lane.sched):
+                self.clock.add_source(monitor_boundary_source(
+                    lane.monitor,
+                    lambda lane=lane: bool(lane.pending
+                                           or self.clock.completions
+                                           or idle_wake)))
+        if self._repartition_capable:
+            self.clock.add_source(monitor_boundary_source(
+                self.fleet_monitor,
+                lambda: self._work_in_flight() or idle_wake))
         if self.broker is not None:
-            # lending invariant: Diffuse never lands on a borrowed unit.
-            # D is counted (not just asserted) so the bench JSON's
-            # diffuse_runs_on_borrowed_units is a measurement the
-            # regression gate can actually trip on, even under python -O.
-            for s, units in (("E", dec.e_units), ("D", dec.d_units),
-                             ("C", dec.c_units)):
-                if any(g >= lane.base_units for g in units):
-                    lane.borrowed_stage_runs[s] = \
-                        lane.borrowed_stage_runs.get(s, 0) + 1
-            assert "D" not in lane.borrowed_stage_runs, \
-                "diffuse dispatched to a borrowed foreign unit"
+            # borrow/return events: min-hold expiries and lend-window
+            # re-checks while any loan is outstanding
+            self.clock.add_source(self.broker.next_wake)
+        if self.cfg.scheduler_wake_hooks:
+            self.clock.add_source(
+                lambda tau: self.fleet_sched.next_wake(self, tau))
 
     # ---------------------------------------------------------------- main
 
     def run(self) -> FleetResult:
+        # single-run objects (see Simulator.run): a second run would admit
+        # nothing and double-register every wake source — fail loudly
+        assert self.clock.wakeups == 0, \
+            "FleetSimulator instances are single-run"
         budgets = self.fleet_sched.initial_budgets(self.trace)
         sub_traces = {pid: [r for r in self.trace if r.pipeline == pid]
                       for pid in self.reg.pipelines}
@@ -594,13 +650,15 @@ class FleetSimulator:
             return self._oom_result()
         for pid in self.reg.pipelines:
             prof = self.reg.profiler(pid)
-            lane = Lane(pid, prof, self.cfg.lane_sim_cfg(budgets[pid]),
-                        sub_traces[pid], aggregate_ilp=self.cfg.aggregate_ilp)
+            lane = make_lane(pid, prof, self.cfg.lane_sim_cfg(budgets[pid]),
+                             sub_traces[pid],
+                             aggregate_ilp=self.cfg.aggregate_ilp)
             lane.engine = RuntimeEngine(
                 prof, self.plan.subplans[pid],
                 proactive_push=self.cfg.proactive_push,
                 adjust_on_dispatch=self.cfg.adjust_on_dispatch)
             lane.base_units = len(lane.engine.units)
+            lane.track_borrowed = self.broker is not None
             lane.placement_log.append(
                 (0.0, self.plan.subplans[pid].type_histogram()))
             self.lanes[pid] = lane
@@ -609,66 +667,84 @@ class FleetSimulator:
         # from deployment, so a seconds-old (near-empty) demand window can't
         # trigger an immediate re-partition
         self.fleet_monitor.last_repartition = 0.0
-        self._run_event()
+        self._register_wake_sources()
+        self.clock.run(self)
         return self._result()
+
+    # -- ClockDriver protocol --------------------------------------------------
+
+    def _next_arrival(self, tau: float) -> Optional[float]:
+        if self._ai < len(self.trace):
+            return self.trace[self._ai].arrival
+        return None
+
+    def advance(self, tau: float) -> None:
+        self._admit(tau)
+        self._drain(tau)
+        self._step(tau)
+
+    def done(self) -> bool:
+        return self._ai >= len(self.trace) and not self._work_in_flight()
+
+    def heartbeat_pending(self) -> bool:
+        return any(lane.pending for lane in self.lanes.values())
+
+    def still_pending(self, lane: str, rid: int) -> bool:
+        return self.lanes[lane].pending.has_rid(rid)
 
     # -- one scheduler step ---------------------------------------------------
 
-    def _admit(self, tau: float, ai: int) -> int:
+    def _admit(self, tau: float) -> None:
         for lane in self.lanes.values():
             lane.new_arrivals = []
         trace = self.trace
-        while ai < len(trace) and trace[ai].arrival <= tau:
+        n = len(trace)
+        ai = self._ai
+        clock = self.clock if self._track_flips else None
+        while ai < n and trace[ai].arrival <= tau:
             r = trace[ai]
             lane = self.lanes[r.pipeline]
-            lane.pending.add(r)
-            lane.new_arrivals.append(r)
+            lane.admit(r, clock)
             self.fleet_monitor.record_arrival(
                 r.arrival, r.pipeline, request_footprint(lane.prof, r))
-            if self._track_flips:
-                heapq.heappush(self._dl_heap, (r.deadline, r.pipeline, r.rid))
             ai += 1
-        return ai
+        self._ai = ai
 
     def _drain(self, tau: float) -> None:
-        while self._events and self._events[0][0] <= tau:
-            t, _, pid, s, ptype, dur, members = heapq.heappop(self._events)
+        for t, _, pid, s, ptype, dur, members in self.clock.pop_due(tau):
             lane = self.lanes[pid]
-            lane.monitor.record_stage(t, s, ptype, dur)
+            lane.on_completion(t, s, ptype, dur)
             if s == "C":
-                lane.throughput[int(t // 60)] = (
-                    lane.throughput.get(int(t // 60), 0) + 1)
                 for req in members:
                     self.fleet_monitor.record_finish(t, pid,
                                                      t <= req.deadline)
 
     def _step(self, tau: float) -> None:
-        self.sched_wakeups += 1
         self._tau_last = tau
         budgets = self.fleet_sched.maybe_repartition(self, tau)
         if budgets is not None:
             self._repartition(budgets, tau)
         if self.broker is not None:
             self.broker.step(self, tau)
-        for pid, lane in self.lanes.items():
-            new_plan = lane.sched.maybe_replace(lane, tau)
-            if new_plan is not None:
-                new_plan.pipeline = pid
-                if self.broker is not None:
-                    self.broker.reattach(lane, new_plan)
-                lane.engine.apply_placement(new_plan, tau)
-                self.plan.subplans[pid] = new_plan
-                lane.placement_log.append((tau, new_plan.type_histogram()))
-            for dec in lane.sched.tick(lane, tau):
-                times = lane.engine.execute(dec, tau)
-                self._record(lane, dec, times)
-                lane.pending.remove(dec.request)
-                for co in getattr(dec, "corequests", ()):
-                    lane.pending.remove(co)
+        for lane in self.lanes.values():
+            lane.step(tau, self.clock,
+                      lambda new_plan, t, lane=lane:
+                          self._apply_lane_plan(lane, new_plan, t))
         if self.broker is not None:
             # sample pressure after dispatch: what is still pending now is
             # genuine backlog, not the arrivals this wake-up just served
             self.broker.sample(self, tau)
+
+    def _apply_lane_plan(self, lane: Lane, new_plan: PlacementPlan,
+                         tau: float) -> None:
+        """A lane-level placement switch: reattach loan slots first (the
+        fresh plan must carry them before the engine sees it), then swap
+        the cluster plan's sub-plan."""
+        new_plan.pipeline = lane.pipeline
+        if self.broker is not None:
+            self.broker.reattach(lane, new_plan)
+        lane.engine.apply_placement(new_plan, tau)
+        self.plan.subplans[lane.pipeline] = new_plan
 
     # -- re-partitioning ------------------------------------------------------
 
@@ -721,9 +797,14 @@ class FleetSimulator:
                     missing = (need if owner is None or owner[0] != pid
                                else need - owner[1])
                     if missing:
+                        # sorted: a 3-term float sum is order-sensitive in
+                        # the last ulp, and set iteration order over str
+                        # keys follows PYTHONHASHSEED — unsorted, the
+                        # reload (and everything downstream of the unit's
+                        # busy time) would differ run-to-run
                         reload = max(reload, sum(
                             prof.stage_load_time(s, via_host=True)
-                            for s in missing))
+                            for s in sorted(missing)))
                 if reload > 0.0:
                     self.swap_cost_s += reload
                     self.units_reloaded += 1
@@ -743,70 +824,6 @@ class FleetSimulator:
         # (an aborted re-partition must leave the mix-shift trigger armed)
         self.fleet_sched.basis_shares = self.fleet_monitor.demand_shares(tau)
         self.repartition_log.append((tau, dict(budgets)))
-
-    # -- event-heap-driven clock (mirrors Simulator._run_event) ----------------
-
-    def _aging_flips(self, tau: float) -> int:
-        flips = 0
-        heap = self._dl_heap
-        while heap and heap[0][0] <= tau:
-            _, pid, rid = heapq.heappop(heap)
-            if self.lanes[pid].pending.has_rid(rid):
-                flips += 1
-        return flips
-
-    def _run_event(self) -> None:
-        tick = self.cfg.tick
-        trace_end = self.trace[-1].arrival if self.trace else 0.0
-        horizon = trace_end + self.cfg.horizon_slack
-        gap_base = max(self.cfg.max_idle_gap, tick)
-        gap_max = max(self.cfg.idle_gap_max, gap_base)
-        gap = gap_base
-        lane_replace = {
-            pid: type(lane.sched).maybe_replace is not Scheduler.maybe_replace
-            for pid, lane in self.lanes.items()}
-        # stale-window fix: with idle_window_wakeups (forced on by lending —
-        # loans must be able to return during an idle gap), Monitor-window
-        # boundaries stay wake-up sources even while nothing is pending
-        idle_wake = self.cfg.idle_window_wakeups or self.cfg.lending
-        ai = 0
-        i = 0
-        while i * tick <= horizon:
-            tau = i * tick
-            ai = self._admit(tau, ai)
-            self._drain(tau)
-            self._step(tau)
-            pending = any(lane.pending for lane in self.lanes.values())
-            if ai >= len(self.trace) and not pending and not self._events:
-                break
-            if self._track_flips:
-                gap = (gap_base if self._aging_flips(tau)
-                       else min(gap * 2.0, gap_max))
-            t_next = math.inf
-            if ai < len(self.trace):
-                t_next = self.trace[ai].arrival
-            if self._events:
-                t_next = min(t_next, self._events[0][0])
-            for pid, lane in self.lanes.items():
-                if lane_replace[pid] and (lane.pending or self._events
-                                          or idle_wake):
-                    boundary = lane.monitor.next_window_boundary()
-                    if boundary is not None and boundary > tau:
-                        t_next = min(t_next, boundary)
-            if self._repartition_capable and (pending or self._events
-                                              or idle_wake):
-                boundary = self.fleet_monitor.next_window_boundary()
-                if boundary is not None and boundary > tau:
-                    t_next = min(t_next, boundary)
-            if self.broker is not None:
-                wake = self.broker.next_wake(tau)
-                if wake is not None:
-                    t_next = min(t_next, wake)
-            if pending:
-                t_next = min(t_next, tau + gap)
-            if t_next is math.inf:
-                break
-            i = max(i + 1, int(math.ceil(t_next / tick - 1e-9)))
 
     # ---------------------------------------------------------------- results
 

@@ -240,7 +240,9 @@ class LendingBroker:
     def next_wake(self, tau: float) -> Optional[float]:
         """Earliest future borrow/return event the clock must visit: the
         next min-hold expiry, else the next lend-window re-check while any
-        loan is outstanding."""
+        loan is outstanding.  Registered by the fleet driver as a wake
+        source on the event-clock kernel (repro.core.clock), so loans are
+        granted/returned for any lane count without loop plumbing."""
         if not self.active:
             return None
         expiries = [ln.start + self.cfg.lend_min_hold for ln in self.active

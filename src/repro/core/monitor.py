@@ -24,6 +24,18 @@ SWITCH_RATIO = 1.5
 MIN_SAMPLES = 8
 
 
+def next_boundary(*windows) -> Optional[float]:
+    """Earliest future time a retained sample exits one of the given
+    sliding windows (``(deque, window_length)`` pairs; empty deques are
+    skipped).  The event-clock kernel (repro.core.clock) wakes at these
+    boundaries so windowed rates — and every trigger derived from them —
+    are re-evaluated exactly when they can change, instead of every tick.
+    Shared by ``Monitor`` and ``FleetMonitor`` so both expose the same
+    wake-source contract."""
+    heads = [q[0][0] + win for q, win in windows if q]
+    return min(heads) if heads else None
+
+
 class Monitor:
     def __init__(self, t_win: float = 180.0):
         self.t_win = t_win
@@ -66,15 +78,10 @@ class Monitor:
     # -- queries ---------------------------------------------------------------
 
     def next_window_boundary(self) -> Optional[float]:
-        """Earliest future time a retained sample exits the sliding window.
-
-        The event-driven simulator wakes at these boundaries so windowed
-        rates (and the placement-switch trigger) are re-evaluated exactly
-        when they can change, instead of every tick."""
-        heads = [q[0][0] for q in (self._completions, self._backlog) if q]
-        if not heads:
-            return None
-        return min(heads) + self.t_win
+        """Earliest future time a retained sample exits the sliding window
+        (the kernel's Monitor-window wake source; see ``next_boundary``)."""
+        return next_boundary((self._completions, self.t_win),
+                             (self._backlog, self.t_win))
 
     def stage_rates(self, tau: float) -> Dict[str, float]:
         self._trim(tau)
@@ -232,13 +239,9 @@ class FleetMonitor:
                 for p in self._util_n if self._util_n[p] > 0}
 
     def next_window_boundary(self) -> Optional[float]:
-        heads = [q[0][0] + self.t_win
-                 for q in (self._arrivals, self._fin) if q]
-        if self._util:
-            heads.append(self._util[0][0] + self.lend_win)
-        if not heads:
-            return None
-        return min(heads)
+        return next_boundary((self._arrivals, self.t_win),
+                             (self._fin, self.t_win),
+                             (self._util, self.lend_win))
 
     def mix_shift(self, tau: float, basis: Optional[Dict[str, float]],
                   threshold: float = 0.10, cooldown: float = 120.0,
@@ -253,7 +256,10 @@ class FleetMonitor:
         shares = self.demand_shares(tau)
         if not shares:
             return False
-        keys = set(shares) | set(basis)
+        # sorted: the total-variation sum is order-sensitive in the last
+        # ulp and str-set iteration follows PYTHONHASHSEED; a threshold
+        # comparison must not flip run-to-run
+        keys = sorted(set(shares) | set(basis))
         dist = 0.5 * sum(abs(shares.get(k, 0.0) - basis.get(k, 0.0))
                          for k in keys)
         return dist >= threshold

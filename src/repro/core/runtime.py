@@ -150,7 +150,9 @@ class RuntimeEngine:
         cost = 0.0
         if downtime_adjust or not self.adjust_on_dispatch:
             for u, new_p in zip(self.units, new_plan.placements):
-                for s in set(new_p) - u.resident:
+                # sorted: str-set iteration order is hash-seed dependent
+                # and float accumulation is order-sensitive
+                for s in sorted(set(new_p) - u.resident):
                     cost += self.prof.stage_load_time(s, via_host=True)
                 u.resident = set(new_p)
             barrier = max([tau] + [u.free_at for u in self.units]) + cost

@@ -1,17 +1,20 @@
 """Discrete-event cluster simulator driving the real planner + engine code.
 
-The simulator owns the clock and the arrival trace; *all* scheduling logic
-(Orchestrator, Dispatcher, Monitor, Adjust-on-Dispatch, the baselines) is
-the production code from this package — only stage execution latencies come
-from the Profiler's cost model instead of wall-clock TPU runs.  This is the
+The simulator owns the arrival trace; *all* scheduling logic (Orchestrator,
+Dispatcher, Monitor, Adjust-on-Dispatch, the baselines) is the production
+code from this package — only stage execution latencies come from the
+Profiler's cost model instead of wall-clock TPU runs.  This is the
 substrate behind every paper figure reproduction (Fig. 10-15, Table 4).
 
-Two clock modes share one per-step body (admit arrivals -> drain completion
-events -> maybe re-place -> dispatch):
+The clock itself lives in ``repro.core.clock``: ``Simulator`` is a thin
+one-lane ``ClockDriver`` over the shared ``EventClock`` kernel (the same
+kernel ``FleetSimulator`` drives with many lanes).  Two clock modes share
+one per-step body (admit arrivals -> drain completion events -> maybe
+re-place -> dispatch):
 
 * ``tick`` — the original fixed-step loop: the scheduler runs every
   ``SimConfig.tick`` seconds across the whole horizon, O(horizon/tick).
-* ``event`` (default) — an event-heap-driven clock: the scheduler only
+* ``event`` (default) — the event-heap-driven clock: the scheduler only
   wakes when state can change — the next arrival, the next stage
   completion (which is also when units cross their ``free_at``), the next
   Monitor-window boundary, or a ``max_idle_gap`` cap that preserves
@@ -23,17 +26,22 @@ events -> maybe re-place -> dispatch):
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import math
-from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import repro.configs as configs
-from repro.core.monitor import Monitor
-from repro.core.placement import PlacementPlan
-from repro.core.profiler import HBM_BYTES, Profiler
+# PendingSet and Scheduler live in the kernel module now; re-exported here
+# because every scheduler and half the test suite imports them from this
+# module's original home.
+from repro.core.clock import (ClockConfig, EventClock, Lane, PendingSet,
+                              Scheduler, monitor_boundary_source,
+                              replace_capable)
+from repro.core.profiler import Profiler
 from repro.core.request import Request
 from repro.core.runtime import RuntimeEngine
 from repro.core.dispatcher import DispatchDecision
+
+__all__ = ["SimConfig", "SimResult", "PendingSet", "Scheduler", "Simulator",
+           "run_sim"]
 
 
 @dataclasses.dataclass
@@ -61,6 +69,19 @@ class SimConfig:
                                       # gap is seen before the window drains
                                       # below MIN_SAMPLES (stale-window fix;
                                       # opt-in, used by the fleet clock)
+    scheduler_wake_hooks: bool = False # event mode: register the scheduler's
+                                      # ``next_wake`` trigger-crossing hook
+                                      # as a kernel wake source.  Opt-in:
+                                      # extra wake-ups (even no-op ones)
+                                      # shift heartbeat phase, so the
+                                      # default keeps committed traces
+                                      # bit-exact.
+
+    def clock_cfg(self, horizon: float) -> ClockConfig:
+        return ClockConfig(tick=self.tick, horizon=horizon, mode=self.mode,
+                           max_idle_gap=self.max_idle_gap,
+                           adaptive_idle_gap=self.adaptive_idle_gap,
+                           idle_gap_max=self.idle_gap_max)
 
 
 @dataclasses.dataclass
@@ -92,121 +113,99 @@ class SimResult:
                 f"fin={self.n_finished}/{self.n_requests}")
 
 
-class PendingSet:
-    """Arrival-ordered, rid-indexed set of pending requests.
+class Simulator(Lane):
+    """One-lane driver over the shared event-clock kernel.
 
-    Backed by an insertion-ordered dict so dispatch bookkeeping is O(1) per
-    removal instead of the O(n) ``list.remove`` scans the tick loop did;
-    iteration yields requests in arrival (admission) order.
+    ``Simulator`` *is* its own Lane (the scheduler sees ``sim.pending`` /
+    ``sim.engine`` / ``sim.monitor`` exactly as before) and implements the
+    ``ClockDriver`` protocol; all loop mechanics — the completion heap,
+    tick-grid quantization, heartbeat and adaptive idle gap — live in
+    ``repro.core.clock.EventClock``.
     """
 
-    __slots__ = ("_by_rid",)
-
-    def __init__(self, reqs: Sequence[Request] = ()):
-        self._by_rid: Dict[int, Request] = {r.rid: r for r in reqs}
-
-    def add(self, req: Request) -> None:
-        self._by_rid[req.rid] = req
-
-    append = add   # drop-in for the old list-based field
-
-    def remove(self, req: Request) -> None:
-        del self._by_rid[req.rid]
-
-    def discard(self, req: Request) -> None:
-        self._by_rid.pop(req.rid, None)
-
-    def has_rid(self, rid: int) -> bool:
-        return rid in self._by_rid
-
-    def __contains__(self, req: Request) -> bool:
-        return req.rid in self._by_rid
-
-    def __iter__(self) -> Iterator[Request]:
-        return iter(self._by_rid.values())
-
-    def __len__(self) -> int:
-        return len(self._by_rid)
-
-    def __bool__(self) -> bool:
-        return bool(self._by_rid)
-
-
-class Scheduler:
-    """Interface implemented by TridentServe and the B1-B6 baselines."""
-
-    name = "base"
-
-    def __init__(self, prof: Profiler, sim_cfg: SimConfig, trace: Sequence[Request]):
-        self.prof = prof
-        self.sim_cfg = sim_cfg
-        self.trace = trace
-
-    def initial_placement(self) -> Optional[PlacementPlan]:
-        raise NotImplementedError
-
-    def tick(self, sim: "Simulator", tau: float) -> List[DispatchDecision]:
-        raise NotImplementedError
-
-    def maybe_replace(self, sim: "Simulator", tau: float) -> Optional[PlacementPlan]:
-        return None
-
-
-# completion event: (finish, seq, stage, placement type, duration, request)
-Event = Tuple[float, int, str, str, float, Request]
-
-
-class Simulator:
     def __init__(self, pipeline_id: str, scheduler: Scheduler,
                  trace: Sequence[Request], sim_cfg: SimConfig):
+        super().__init__(pipeline_id, scheduler.prof, scheduler)
         self.pipeline_id = pipeline_id
-        self.scheduler = scheduler
+        self.scheduler = scheduler     # alias of ``self.sched``
         self.trace = sorted(trace, key=lambda r: r.arrival)
         self.cfg = sim_cfg
-        self.prof = scheduler.prof
-        self.pending = PendingSet()          # arrived, not yet dispatched
-        self.new_arrivals: List[Request] = []  # admitted since the last step
-        self.engine: Optional[RuntimeEngine] = None
-        self.monitor = Monitor()
-        self._events: List[Event] = []       # stage-completion heap
-        self._eseq = 0
-        self.vr_histogram: Dict[int, int] = {}
-        self.placement_log: List[Tuple[float, Dict[str, int]]] = []
-        self.throughput: Dict[int, int] = {}
-        self.request_oom: List[Request] = []
-        self.sched_wakeups = 0
-        # profile-guided heartbeat: deadlines of pending requests, drained
-        # as the clock passes them to observe aging flips (adaptive mode)
+        self.clock = EventClock(sim_cfg.clock_cfg(self._horizon()))
+        self._ai = 0                   # arrival cursor into the trace
         self._track_flips = (sim_cfg.mode == "event"
                              and sim_cfg.adaptive_idle_gap)
-        self._dl_heap: List[Tuple[float, int]] = []
+        self.clock.add_source(self._next_arrival)
         # monitor-window wake-ups only matter to schedulers that re-place
-        self._replace_capable = (type(scheduler).maybe_replace
-                                 is not Scheduler.maybe_replace)
+        if replace_capable(scheduler):
+            self.clock.add_source(monitor_boundary_source(
+                self.monitor,
+                lambda: bool(self.pending or self.clock.completions
+                             or self.cfg.idle_window_wakeups)))
+        if sim_cfg.scheduler_wake_hooks:
+            self.clock.add_source(lambda tau: scheduler.next_wake(self, tau))
 
     # ---------------------------------------------------------------- helpers
 
+    @property
+    def _events(self):
+        """The kernel's completion heap (kept for tests/introspection)."""
+        return self.clock.completions
+
+    @property
+    def sched_wakeups(self) -> int:
+        return self.clock.wakeups
+
     def record_decision(self, dec: DispatchDecision,
                         times: Dict[str, Tuple[float, float]]):
-        members = (dec.request,) + tuple(getattr(dec, "corequests", ()))
-        for s, (start, fin) in times.items():
-            for req in members:
-                req.stage_done[s] = fin
-            ptype = self.engine.plan.placements[
-                (dec.d_units if s == "D" else
-                 dec.e_units if s == "E" else dec.c_units)[0]]
-            heapq.heappush(self._events,
-                           (fin, self._eseq, s, ptype, fin - start, dec.request))
-            self._eseq += 1
-        self.vr_histogram[dec.vr_type] = (self.vr_histogram.get(dec.vr_type, 0)
-                                          + len(members))
+        self.record(dec, times, self.clock)
 
-    def fail_request_oom(self, req: Request):
-        self.request_oom.append(req)
+    def _horizon(self) -> float:
+        trace_end = self.trace[-1].arrival if self.trace else 0.0
+        return trace_end + self.cfg.horizon_slack
 
-    # ---------------------------------------------------------------- main loop
+    def _next_arrival(self, tau: float) -> Optional[float]:
+        if self._ai < len(self.trace):
+            return self.trace[self._ai].arrival
+        return None
+
+    # ---------------------------------------------------------------- driver
+
+    def advance(self, tau: float) -> None:
+        """Admit arrivals, drain completions, run one scheduler step."""
+        self.new_arrivals = []
+        trace = self.trace
+        n = len(trace)
+        ai = self._ai
+        clock = self.clock if self._track_flips else None
+        while ai < n and trace[ai].arrival <= tau:
+            self.admit(trace[ai], clock)
+            ai += 1
+        self._ai = ai
+        for t, _, _, s, ptype, dur, _ in self.clock.pop_due(tau):
+            self.on_completion(t, s, ptype, dur)
+        self.step(tau, self.clock, self._apply_replacement)
+
+    def _apply_replacement(self, new_plan, tau: float) -> None:
+        self.engine.apply_placement(new_plan, tau,
+                                    downtime_adjust=self.cfg.downtime_adjust)
+
+    def done(self) -> bool:
+        return (self._ai >= len(self.trace) and not self.pending
+                and not self.clock.completions)
+
+    def heartbeat_pending(self) -> bool:
+        return bool(self.pending)
+
+    def still_pending(self, lane: str, rid: int) -> bool:
+        return self.pending.has_rid(rid)
+
+    # ---------------------------------------------------------------- main
 
     def run(self) -> SimResult:
+        # single-run objects: the arrival cursor, wake sources, and the
+        # trace's Request objects all carry state a second run would
+        # silently corrupt — fail loudly instead
+        assert self.clock.wakeups == 0, "Simulator instances are single-run"
         plan = self.scheduler.initial_placement()
         if plan is None:   # no feasible placement (e.g. colocated OOM)
             return self._oom_result()
@@ -214,131 +213,8 @@ class Simulator:
             self.prof, plan, proactive_push=self.cfg.proactive_push,
             adjust_on_dispatch=self.cfg.adjust_on_dispatch)
         self.placement_log.append((0.0, plan.type_histogram()))
-        if self.cfg.mode == "tick":
-            self._run_tick()
-        else:
-            self._run_event()
+        self.clock.run(self)
         return self._result()
-
-    # -- one scheduler step (shared by both clock modes) ----------------------
-
-    def _admit(self, tau: float, ai: int) -> int:
-        new: List[Request] = []
-        trace = self.trace
-        while ai < len(trace) and trace[ai].arrival <= tau:
-            self.pending.add(trace[ai])
-            new.append(trace[ai])
-            if self._track_flips:
-                heapq.heappush(self._dl_heap, (trace[ai].deadline,
-                                               trace[ai].rid))
-            ai += 1
-        self.new_arrivals = new
-        return ai
-
-    def _aging_flips(self, tau: float) -> int:
-        """Deadlines crossed up to ``tau`` among still-pending requests —
-        the events that change dispatch rewards while nothing else moves.
-        The observed flip rate steers the heartbeat gap (profile-guided
-        ``max_idle_gap``): no flips -> the gap doubles, a flip -> reset."""
-        flips = 0
-        heap = self._dl_heap
-        while heap and heap[0][0] <= tau:
-            _, rid = heapq.heappop(heap)
-            if self.pending.has_rid(rid):
-                flips += 1
-        return flips
-
-    def _drain_events(self, tau: float) -> None:
-        """Feed completion events up to ``tau`` into the Monitor."""
-        while self._events and self._events[0][0] <= tau:
-            t, _, s, ptype, dur, req = heapq.heappop(self._events)
-            self.monitor.record_stage(t, s, ptype, dur)
-            if s == "C":
-                self.throughput[int(t // 60)] = self.throughput.get(int(t // 60), 0) + 1
-
-    def _step(self, tau: float) -> None:
-        """Placement switch check + dispatch at time ``tau``."""
-        self.sched_wakeups += 1
-        new_plan = self.scheduler.maybe_replace(self, tau)
-        if new_plan is not None:
-            self.engine.apply_placement(new_plan, tau,
-                                        downtime_adjust=self.cfg.downtime_adjust)
-            self.placement_log.append((tau, new_plan.type_histogram()))
-        for dec in self.scheduler.tick(self, tau):
-            times = self.engine.execute(dec, tau)
-            self.record_decision(dec, times)
-            self.pending.remove(dec.request)
-            for co in getattr(dec, "corequests", ()):
-                self.pending.remove(co)
-
-    def _horizon(self) -> float:
-        trace_end = self.trace[-1].arrival if self.trace else 0.0
-        return trace_end + self.cfg.horizon_slack
-
-    def _done(self, ai: int) -> bool:
-        return ai >= len(self.trace) and not self.pending and not self._events
-
-    # -- legacy fixed-tick clock (reference for the equivalence tests) --------
-
-    def _run_tick(self) -> None:
-        tick = self.cfg.tick
-        horizon = self._horizon()
-        ai = 0
-        i = 0
-        while i * tick <= horizon:
-            tau = i * tick
-            ai = self._admit(tau, ai)
-            self._drain_events(tau)
-            self._step(tau)
-            if self._done(ai):
-                break
-            i += 1
-
-    # -- event-heap-driven clock ----------------------------------------------
-
-    def _run_event(self) -> None:
-        """Jump the clock between the times state can actually change.
-
-        Wake-up candidates: next arrival, next stage-completion event (unit
-        ``free_at`` crossings always coincide with one), the next
-        Monitor-window boundary, and — only while requests are pending, since
-        dispatch rewards/aging depend on tau — a ``max_idle_gap`` heartbeat.
-        Each wake-up is quantized up to the tick grid so dispatch timestamps
-        land exactly where the tick clock would have placed them.
-        """
-        tick = self.cfg.tick
-        horizon = self._horizon()
-        gap_base = max(self.cfg.max_idle_gap, tick)
-        gap_max = max(self.cfg.idle_gap_max, gap_base)
-        gap = gap_base
-        ai = 0
-        i = 0
-        while i * tick <= horizon:
-            tau = i * tick
-            ai = self._admit(tau, ai)
-            self._drain_events(tau)
-            self._step(tau)
-            if self._done(ai):
-                break
-            if self._track_flips:
-                gap = (gap_base if self._aging_flips(tau)
-                       else min(gap * 2.0, gap_max))
-            t_next = math.inf
-            if ai < len(self.trace):
-                t_next = self.trace[ai].arrival
-            if self._events:
-                t_next = min(t_next, self._events[0][0])
-            if self._replace_capable and (self.pending or self._events
-                                          or self.cfg.idle_window_wakeups):
-                boundary = self.monitor.next_window_boundary()
-                if boundary is not None and boundary > tau:
-                    t_next = min(t_next, boundary)
-            if self.pending:
-                t_next = min(t_next, tau + gap)
-            if t_next is math.inf:
-                break   # nothing can ever change state again
-            # quantize up to the tick grid; always advance at least one tick
-            i = max(i + 1, int(math.ceil(t_next / tick - 1e-9)))
 
     # ---------------------------------------------------------------- results
 
@@ -382,7 +258,7 @@ class Simulator:
             placement_switches=self.placement_log,
             vr_histogram=dict(self.vr_histogram),
             engine_stats=stats,
-            sched_wakeups=self.sched_wakeups)
+            sched_wakeups=self.clock.wakeups)
 
 
 def run_sim(pipeline_id: str, scheduler_cls, workload: str, duration: float,

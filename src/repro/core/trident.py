@@ -63,6 +63,18 @@ class TridentScheduler(Scheduler):
             return None
         return new_plan
 
+    def next_wake(self, sim: Simulator, tau: float) -> Optional[float]:
+        """Event-source plug-in (opt-in via
+        ``SimConfig.scheduler_wake_hooks``): the pattern-change trigger is
+        gated on a cooldown after the last switch and a warm-up of half a
+        window — the earliest future time it can *newly* fire is the later
+        of those two crossings.  Window contents themselves only change on
+        completions and boundary wake-ups the clock already visits."""
+        if not self.enable_switch:
+            return None
+        gate = max(sim.monitor.last_switch + self.t_win / 2, self.t_win / 2)
+        return gate if gate > tau else None
+
     # -- Algorithm 1, lines 9-10 (dispatch) --------------------------------------
 
     def tick(self, sim: Simulator, tau: float) -> List[DispatchDecision]:

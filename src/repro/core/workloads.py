@@ -203,6 +203,29 @@ def bursty_ec_phases(duration: float, head: float = 180.0,
 BURSTY_EC: Tuple[Tuple[float, Dict[str, float]], ...] = bursty_ec_phases(600.0)
 
 
+def randomized_fleet_scenario(seed: int,
+                              pipelines: Sequence[str] = ("sd3", "flux")
+                              ) -> Tuple[Dict[str, float],
+                                         Tuple[Tuple[float, Dict[str, float]],
+                                               ...]]:
+    """Seeded random (rates, phases) for the multi-lane event/tick parity
+    tests (tests/test_fleet.py): per-pipeline base rates jittered around
+    the 128-chip test point and a mid-trace tilt at a random flip point.
+    One tuned definition here — like ``FLEET_RATES``/``MIX_FLIP`` — so the
+    parity suite and any future bench sweep draw the same scenarios."""
+    rng = random.Random(f"fleet-scenario:{seed}")
+    test_rates = {"sd3": 10.0, "flux": 1.0, "cogvideox": 0.8,
+                  "hunyuanvideo": 0.4}
+    rates = {p: test_rates.get(p, RATES[p] / 2.0) * rng.uniform(0.6, 1.2)
+             for p in pipelines}
+    flip = rng.uniform(0.35, 0.65)
+    tilt = rng.uniform(1.5, 2.5)
+    first, rest = pipelines[0], list(pipelines[1:])
+    phases = ((flip, {first: tilt, **{p: 1.0 / tilt for p in rest}}),
+              (1.0, {first: 1.0 / tilt, **{p: tilt for p in rest}}))
+    return rates, phases
+
+
 def fleet_trace(pipelines: Sequence[str], duration: float,
                 profs: Dict[str, Profiler], seed: int = 0,
                 rates: Optional[Dict[str, float]] = None,

@@ -1,0 +1,168 @@
+"""The event-clock kernel (repro.core.clock) in isolation: loop mechanics,
+tick-grid quantization, heartbeat/adaptive gap, wake-source plug-ins, and
+the completion-heap contract every driver shares."""
+import math
+
+import pytest
+
+import repro.configs as C
+from repro.core.clock import (ClockConfig, ClockDriver, EventClock, Lane,
+                              PendingSet, Scheduler, monitor_boundary_source,
+                              replace_capable)
+from repro.core.monitor import Monitor
+from repro.core.profiler import Profiler
+from repro.core.request import Request
+from repro.core.trident import TridentScheduler
+
+
+class _Recorder(ClockDriver):
+    """Minimal driver: records wake-up times, never pends, finishes when
+    told."""
+
+    def __init__(self, done_at=math.inf, pending_until=-1.0):
+        self.taus = []
+        self.done_at = done_at
+        self.pending_until = pending_until
+
+    def advance(self, tau):
+        self.taus.append(tau)
+
+    def done(self):
+        return self.taus and self.taus[-1] >= self.done_at
+
+    def heartbeat_pending(self):
+        return self.taus and self.taus[-1] <= self.pending_until
+
+    def still_pending(self, lane, rid):
+        return False
+
+
+def test_tick_mode_visits_every_grid_point():
+    clock = EventClock(ClockConfig(tick=0.5, horizon=2.0, mode="tick"))
+    drv = _Recorder()
+    clock.run(drv)
+    assert drv.taus == [0.0, 0.5, 1.0, 1.5, 2.0]
+    assert clock.wakeups == 5
+
+
+def test_tick_mode_stops_when_driver_is_done():
+    clock = EventClock(ClockConfig(tick=0.5, horizon=100.0, mode="tick"))
+    drv = _Recorder(done_at=1.0)
+    clock.run(drv)
+    assert drv.taus[-1] == 1.0 and len(drv.taus) == 3
+
+
+def test_event_mode_quantizes_wake_sources_up_to_the_grid():
+    clock = EventClock(ClockConfig(tick=0.25, horizon=10.0))
+    wakes = iter([0.6, 2.26, None])
+    clock.add_source(lambda tau: next(wakes))
+    drv = _Recorder()
+    clock.run(drv)
+    # 0.6 -> 0.75, 2.26 -> 2.5, then no source answers -> loop ends
+    assert drv.taus == [0.0, 0.75, 2.5]
+
+
+def test_event_mode_always_advances_at_least_one_tick():
+    clock = EventClock(ClockConfig(tick=0.25, horizon=1.0))
+    clock.add_source(lambda tau: tau)   # pathological: "wake now"
+    drv = _Recorder()
+    clock.run(drv)
+    assert drv.taus == [0.0, 0.25, 0.5, 0.75, 1.0]
+
+
+def test_completion_heap_orders_by_finish_then_push_order():
+    clock = EventClock(ClockConfig())
+    r = Request("sd3", 512)
+    clock.push_completion(2.0, "a", "D", "D", 1.0, (r,))
+    clock.push_completion(1.0, "a", "E", "E", 0.5, (r,))
+    clock.push_completion(1.0, "b", "C", "C", 0.1, (r,))
+    due = list(clock.pop_due(1.5))
+    assert [(e[0], e[2]) for e in due] == [(1.0, "a"), (1.0, "b")]
+    assert clock.completions[0][0] == 2.0    # not yet due
+    assert list(clock.pop_due(0.5)) == []
+
+
+def test_heartbeat_fires_only_while_driver_pends():
+    clock = EventClock(ClockConfig(tick=0.25, horizon=50.0, max_idle_gap=1.0))
+    drv = _Recorder(pending_until=2.0)
+    clock.run(drv)
+    # heartbeats every gap while pending, then nothing can change state
+    assert drv.taus == [0.0, 1.0, 2.0, 3.0]
+
+
+def test_adaptive_gap_doubles_without_flips_and_resets_on_one():
+    cfg = ClockConfig(tick=0.25, horizon=200.0, max_idle_gap=1.0,
+                      adaptive_idle_gap=True, idle_gap_max=8.0)
+    clock = EventClock(cfg)
+    clock.track_deadline(20.0, "p", 1)
+
+    class _Pending(_Recorder):
+        def heartbeat_pending(self):
+            return self.taus[-1] < 40.0
+
+        def still_pending(self, lane, rid):
+            return True
+
+    drv = _Pending()
+    clock.run(drv)
+    gaps = [b - a for a, b in zip(drv.taus, drv.taus[1:])]
+    assert max(gaps) == 8.0                      # doubled up to the ceiling
+    reset = drv.taus.index(next(t for t in drv.taus if t >= 20.0))
+    assert gaps[reset] == 1.0                    # the flip reset the gap
+
+
+def test_monitor_boundary_source_respects_arming():
+    mon = Monitor(t_win=10.0)
+    mon.record_stage(5.0, "D", "D", 1.0)
+    armed = {"on": True}
+    src = monitor_boundary_source(mon, lambda: armed["on"])
+    assert src(6.0) == 15.0
+    assert src(20.0) is None          # boundary not in the future
+    armed["on"] = False
+    assert src(6.0) is None           # disarmed
+    assert monitor_boundary_source(Monitor(), lambda: True)(0.0) is None
+
+
+def test_replace_capable_detects_overrides():
+    prof = Profiler(C.get("sd3"))
+    from repro.core.simulator import SimConfig
+    assert replace_capable(TridentScheduler(prof, SimConfig(), []))
+    assert not replace_capable(Scheduler(prof, SimConfig(), []))
+    assert Scheduler(prof, SimConfig(), []).next_wake(None, 0.0) is None
+
+
+def test_lane_admit_and_record_feed_the_kernel():
+    prof = Profiler(C.get("sd3"))
+    from repro.core.simulator import SimConfig
+    lane = Lane("sd3", prof, Scheduler(prof, SimConfig(), []))
+    clock = EventClock(ClockConfig())
+    r = Request("sd3", 512, arrival=1.0)
+    r.deadline = 9.0
+    lane.admit(r, clock)
+    assert r in lane.pending and lane.new_arrivals == [r]
+    assert clock._deadlines == [(9.0, "sd3", r.rid)]
+    assert isinstance(lane.pending, PendingSet)
+
+
+def test_lane_borrowed_stage_accounting_rejects_diffuse():
+    """The lending invariant is enforced in the shared Lane bookkeeping:
+    counting a D run on a loan slot (uid >= base_units) must assert."""
+    prof = Profiler(C.get("sd3"))
+    from repro.core.dispatcher import DispatchDecision
+    from repro.core.orchestrator import Orchestrator
+    from repro.core.simulator import SimConfig
+    lane = Lane("sd3", prof, Scheduler(prof, SimConfig(), []))
+    lane.engine = type("_E", (), {})()
+    lane.engine.plan = Orchestrator(prof, num_chips=8).generate(
+        [Request("sd3", 512)])
+    lane.track_borrowed = True
+    lane.base_units = 99                    # nothing is borrowed
+    clock = EventClock(ClockConfig())
+    r = Request("sd3", 512)
+    dec = DispatchDecision(request=r, vr_type=0, degree=1,
+                           d_units=(0,), e_units=(0,), c_units=(0,))
+    lane.record(dec, {"E": (0.0, 1.0)}, clock)
+    assert lane.borrowed_stage_runs == {}
+    lane.base_units = 0                     # every unit counts as borrowed
+    with pytest.raises(AssertionError):
+        lane.record(dec, {"D": (1.0, 2.0)}, clock)

@@ -75,9 +75,10 @@ def test_pending_set_is_id_indexed():
         ps.remove(a)
 
 
-def test_events_heap_entries_are_six_tuples():
-    """Regression: the declared event type must match what
-    ``record_decision`` pushes (finish, seq, stage, ptype, duration, req)."""
+def test_completion_events_use_the_unified_kernel_format():
+    """Regression: every driver pushes the kernel's one completion format —
+    (finish, seq, lane, stage, ptype, duration, batch members) — and the
+    simulator's ``_events`` view is the kernel heap itself."""
     r = Request("sd3", 512)
     prof = Profiler(C.get("sd3"))
     sched = TridentScheduler(prof, SimConfig(), [r])
@@ -91,10 +92,11 @@ def test_events_heap_entries_are_six_tuples():
     sim.record_decision(dec, {"E": (0.0, 1.0), "D": (1.0, 2.0),
                               "C": (2.0, 3.0)})
     assert len(sim._events) == 3
+    assert sim._events is sim.clock.completions
     for ev in sim._events:
-        assert len(ev) == 6
-        fin, seq, stage, ptype, dur, req = ev
-        assert req is r and dur >= 0.0
+        assert len(ev) == 7
+        fin, seq, lane, stage, ptype, dur, members = ev
+        assert lane == "sd3" and members == (r,) and dur >= 0.0
 
 
 # -- Orchestrator.generate / maybe_replace infeasibility contract -------------
@@ -203,6 +205,45 @@ def test_idle_window_wakeups_do_not_change_results():
     assert results[True].slo_attainment == results[False].slo_attainment
     assert results[True].mean_latency == results[False].mean_latency
     assert results[True].n_finished == results[False].n_finished
+
+
+def test_adaptive_gap_and_idle_window_wakeups_compose():
+    """Regression for the previously-untested flag interaction: with BOTH
+    ``adaptive_idle_gap`` and ``idle_window_wakeups`` on, an idle gap
+    spanning multiple Monitor windows must still be covered by
+    window-boundary wake-ups — the adaptive heartbeat only widens the
+    *pending* heartbeat, which is disarmed during a fully-idle gap, so it
+    must neither suppress nor shift the boundary wake-up sequence."""
+    prof = Profiler(C.get("sd3"))
+    trace = _gap_trace(prof)
+    checks = {}
+    results = {}
+    for adaptive in (False, True):
+        cfg = SimConfig(num_chips=32, idle_window_wakeups=True,
+                        adaptive_idle_gap=adaptive)
+        sched = _ProbeScheduler(prof, cfg, trace)
+        sched.t_win = 40.0   # gap (~30..200 s) spans ~4 Monitor windows
+        sim = Simulator("sd3", sched, trace, cfg)
+        results[adaptive] = sim.run()
+        checks[adaptive] = sched.checks
+    gap = {flag: [(tau, n) for tau, n in checks[flag] if 30.0 < tau < 200.0]
+           for flag in (False, True)}
+    for flag in (False, True):
+        # the stale-window fix holds: the clock wakes inside the gap and at
+        # least one check still sees the burst's retained window samples
+        assert gap[flag], "window boundaries must wake the clock mid-gap"
+        assert any(n > 0 for _, n in gap[flag])
+        # boundary wake-ups exist only while samples are retained: nothing
+        # fires deeper into the gap than one window past the last sample
+        last_sample = max(tau for tau, n in checks[flag] if n > 0)
+        assert all(tau <= last_sample + 40.0 + 0.25 for tau, _ in gap[flag])
+    # the pinned interaction: the adaptive heartbeat is disarmed while idle,
+    # so the wake-up sequence across the gap is window-driven and identical
+    assert gap[True] == gap[False]
+    # and the extra machinery never moves results
+    assert (results[True].slo_attainment, results[True].n_finished) \
+        == (results[False].slo_attainment, results[False].n_finished)
+    assert results[True].mean_latency == results[False].mean_latency
 
 
 # -- profile-guided max_idle_gap ----------------------------------------------
