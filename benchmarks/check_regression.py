@@ -34,6 +34,11 @@ from typing import Dict, List, Optional
 EVENT_SPEEDUP_FLOOR = 1.2          # event clock must beat the tick clock
 SHARED_P95_FLOOR = 1.2             # adaptive fleet vs static sub-clusters
 LENDING_WORST_P95_FLOOR = 1.0      # lending must never hurt the worst lane
+PREDICTIVE_P95_FLOOR = 1.15        # predictive vs adaptive, worst pipeline
+                                   # on the committed diurnal trace
+PREDICTIVE_SMOKE_FLOOR = 1.0       # scale-aware: at smoke scale the
+                                   # predictive scheduler must never be
+                                   # worse than adaptive
 UNIFIED_OVERHEAD_CEIL_PCT = 5.0    # kernel overhead vs the old hand-rolled
                                    # loops (wall-clock-class measurement)
 
@@ -149,11 +154,35 @@ def check_unified_clock(base: Dict, cur: Dict, tol: float,
     return problems
 
 
+def check_predictive(base: Dict, cur: Dict, tol: float,
+                     wall_tol: float) -> List[str]:
+    """Predictive re-partitioning on the diurnal trace
+    (BENCH_predictive.json).  Same scale: the worst-pipeline improvement
+    must hold near the committed baseline and above the 1.15x acceptance
+    floor.  Different scale (the CI smoke variant): scale-aware floor —
+    predictive must never be worse than adaptive (>= 1.0x) and must have
+    actually exercised the pre-warm path (a run that never stages is a
+    broken forecaster, not a passing one)."""
+    problems: List[str] = []
+    key = "worst_pipeline_p95_improvement_predictive_vs_adaptive"
+    same_scale = base.get("duration_s") == cur.get("duration_s")
+    _ratio_check(problems, key, cur.get(key, 0.0),
+                 base.get(key, 0.0) if same_scale else 0.0, tol,
+                 floor=(PREDICTIVE_P95_FLOOR if same_scale
+                        else PREDICTIVE_SMOKE_FLOOR))
+    if cur.get("prewarm_units", 0) <= 0:
+        problems.append("predictive run staged no pre-warm loads")
+    if cur.get("predictive_repartitions", 0) <= 0:
+        problems.append("predictive run never fired a predicted shift")
+    return problems
+
+
 CHECKERS = {
     "event_driven_simulator_smoke": check_event_sim,
     "shared_cluster_mix_flip": check_shared_cluster,
     "unit_lending_bursty_ec": check_unit_lending,
     "unified_clock_kernel": check_unified_clock,
+    "predictive_prewarm_diurnal": check_predictive,
 }
 
 

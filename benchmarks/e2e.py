@@ -541,6 +541,173 @@ def run_lending(quick: bool = True,
     return rows
 
 
+# ---------------------------------------------------------------- predictive
+
+PREDICTIVE_PIPELINES = ("sd3", "cogvideox")
+
+# diurnal mix-flip scenario: 5 anti-phase square-wave periods, windows and
+# forecast knobs scaled to the period so the forecaster sees >= 2 full
+# periods before the trace's second half.  Rates live next to the trace
+# generator (workloads.PREDICTIVE_RATES / diurnal_phases) so there is
+# exactly one tuned scenario definition; these hold the fleet knobs.
+from repro.core.workloads import PREDICTIVE_RATES
+
+PREDICTIVE_PERIODS = 5
+PREDICTIVE_DURATION = 1500.0
+PREDICTIVE_CFG: Dict = dict(
+    num_chips=256, t_win=120.0, cooldown=100.0,
+    forecast_bin=10.0, forecast_history=600.0, forecast_horizon=250.0,
+    prewarm_lead=50.0, prewarm_cooldown=80.0, prewarm_ttl=240.0,
+    forecast_grace=60.0)
+
+# CI-sized variant: same shape, 4 periods of 240 s on 128 chips (the
+# forecaster needs 2 full periods of history, so 3 of the 7 flips land in
+# the forecastable second half)
+PREDICTIVE_SMOKE: Dict = dict(
+    duration=960.0, periods=4,
+    rates={"sd3": 14.0, "cogvideox": 0.42},
+    cfg=dict(num_chips=128, t_win=90.0, cooldown=70.0,
+             forecast_bin=5.0, forecast_history=480.0,
+             forecast_horizon=200.0, prewarm_lead=40.0,
+             prewarm_cooldown=60.0, prewarm_ttl=200.0,
+             forecast_grace=50.0))
+
+
+def run_predictive(quick: bool = True,
+                   bench_path: Optional[str] = "BENCH_predictive.json",
+                   duration: Optional[float] = None,
+                   periods: int = PREDICTIVE_PERIODS,
+                   rates: Optional[Dict[str, float]] = None,
+                   fleet_cfg_kw: Optional[Dict] = None,
+                   seeds: Optional[Tuple[int, ...]] = None) -> List[Row]:
+    """Predictive re-partitioning on the diurnal mix-flip trace.
+
+    Anti-phase square-wave demand between sd3 and cogvideox
+    (``workloads.diurnal_phases``): every half period the mix flips hard,
+    and the adaptive scheduler detects each flip a demand-window late,
+    re-partitions with trailing-window sizing, and pays the weight reloads
+    mid-queue.  The ``predictive`` scheduler (core/forecast.py) fits the
+    period from rate history, pre-warms the target partition's weights on
+    the units that will flip before the shift lands, and fires the swap as
+    soon as the freshest observed rates confirm the predicted mix — the
+    headline is the worst-pipeline P95 ratio on identical arrivals
+    (acceptance: >= 1.15x at the committed scale, >= 1.0x on every
+    ``--full`` seed).
+    """
+    from repro.core import workloads
+    from repro.core.fleet import FleetConfig, PipelineRegistry, run_fleet
+
+    dur = duration if duration is not None else PREDICTIVE_DURATION
+    seeds = seeds if seeds is not None else ((0,) if quick else (0, 1, 2))
+    rates = rates or PREDICTIVE_RATES
+    cfg_kw = dict(PREDICTIVE_CFG)
+    cfg_kw.update(fleet_cfg_kw or {})
+    phases = workloads.diurnal_phases(n_periods=periods)
+    registry = PipelineRegistry(PREDICTIVE_PIPELINES)
+    profs = {pid: registry.profiler(pid) for pid in PREDICTIVE_PIPELINES}
+    rows: List[Row] = []
+    results = {}
+    worst_by_seed = {}
+    for seed in seeds:
+        per_mode = {}
+        for mode in ("adaptive", "predictive"):
+            cfg = FleetConfig(**cfg_kw)
+            trace = workloads.fleet_trace(PREDICTIVE_PIPELINES, dur, profs,
+                                          seed=seed, rates=rates,
+                                          phases=phases)
+            t0 = time.perf_counter()
+            res = run_fleet(PREDICTIVE_PIPELINES, mode=mode, duration=dur,
+                            cfg=cfg, registry=registry, trace=trace)
+            wall = time.perf_counter() - t0
+            per_mode[mode] = res
+            tag = f"e2e_predictive/{mode}" + (f"/s{seed}" if seed else "")
+            rows.append((f"{tag}/p95_s", round(res.p95_latency, 3),
+                         {"slo_pct": round(res.slo_attainment * 100, 2),
+                          "goodput_rps": round(res.goodput, 3),
+                          "mean_s": round(res.mean_latency, 3),
+                          "repartitions": len(res.repartitions) - 1,
+                          "predictive_repartitions":
+                              res.predictive_repartitions,
+                          "prewarm_units": res.prewarm_units,
+                          "prewarm_hits": res.prewarm_hits,
+                          "prewarm_cost_s": round(res.prewarm_cost_s, 2),
+                          "swap_cost_s": round(res.swap_cost_s, 2),
+                          "wall_s": round(wall, 2)}))
+            for pid, m in res.per_pipeline.items():
+                rows.append((f"{tag}/{pid}/p95_s", round(m["p95_s"], 3),
+                             {"slo_pct": round(m["slo"] * 100, 2),
+                              "mean_s": round(m["mean_s"], 3)}))
+        ad, pr = per_mode["adaptive"], per_mode["predictive"]
+        worst_by_seed[seed] = (
+            max(m["p95_s"] for m in ad.per_pipeline.values())
+            / max(1e-9, max(m["p95_s"]
+                            for m in pr.per_pipeline.values())))
+        if seed == seeds[0]:
+            results = per_mode
+    ad, pr = results["adaptive"], results["predictive"]
+    worst_x = min(worst_by_seed.values())
+    p95_x = ad.p95_latency / max(pr.p95_latency, 1e-9)
+    rows.append(("e2e_predictive/worst_pipeline_p95_improvement",
+                 round(worst_x, 3),
+                 {"p95_x": round(p95_x, 3),
+                  "per_seed": {s: round(v, 3)
+                               for s, v in worst_by_seed.items()},
+                  "slo_pts": round((pr.slo_attainment
+                                    - ad.slo_attainment) * 100, 2)}))
+    if bench_path:
+        bench = {
+            "bench": "predictive_prewarm_diurnal",
+            "num_chips": cfg_kw["num_chips"],
+            "pipelines": list(PREDICTIVE_PIPELINES),
+            "duration_s": dur,
+            "periods": periods,
+            "rates_rps": dict(rates),
+            "worst_pipeline_p95_improvement_predictive_vs_adaptive":
+                round(worst_x, 3),
+            "worst_pipeline_p95_improvement_per_seed":
+                {s: round(v, 3) for s, v in worst_by_seed.items()},
+            "p95_improvement_predictive_vs_adaptive": round(p95_x, 3),
+            "slo_improvement_pts": round((pr.slo_attainment
+                                          - ad.slo_attainment) * 100, 2),
+            "predictive_repartitions": pr.predictive_repartitions,
+            "prewarm_units": pr.prewarm_units,
+            "prewarm_hits": pr.prewarm_hits,
+            "prewarm_cost_s": round(pr.prewarm_cost_s, 3),
+            "prewarm_loan_returns": pr.prewarm_loan_returns,
+            "modes": {
+                mode: {
+                    "p95_s": round(r.p95_latency, 3),
+                    "mean_s": round(r.mean_latency, 3),
+                    "slo_pct": round(r.slo_attainment * 100, 2),
+                    "goodput_rps": round(r.goodput, 3),
+                    "repartitions": len(r.repartitions) - 1,
+                    "predictive_repartitions": r.predictive_repartitions,
+                    "prewarm_units": r.prewarm_units,
+                    "swap_cost_s": round(r.swap_cost_s, 3),
+                    "per_pipeline": {
+                        pid: {k: (round(v, 3) if isinstance(v, float)
+                                  else v) for k, v in m.items()}
+                        for pid, m in r.per_pipeline.items()},
+                } for mode, r in results.items()},
+        }
+        with open(bench_path, "w") as f:
+            json.dump(bench, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+def run_predictive_smoke(bench_path: Optional[str] = None) -> List[Row]:
+    """CI-sized ``--predictive`` variant: 4 diurnal periods on 128 chips,
+    seed 0 only — exercises the whole forecast → pre-warm → predictive-fire
+    path on every smoke run without touching BENCH_predictive.json.  The
+    scale-aware acceptance floor is 1.0x (never worse than adaptive);
+    the committed full-scale baseline pins 1.15x."""
+    sm = PREDICTIVE_SMOKE
+    return run_predictive(bench_path=bench_path, duration=sm["duration"],
+                          periods=sm["periods"], rates=sm["rates"],
+                          fleet_cfg_kw=sm["cfg"], seeds=(0,))
+
+
 def run_shared_smoke(bench_path: Optional[str] = None) -> List[Row]:
     """CI-sized ``--mixed --shared`` variant: short flip trace, static vs
     adaptive only, fleet windows shrunk to match — exercises the whole fleet
@@ -620,6 +787,10 @@ if __name__ == "__main__":
                          "trace: adaptive vs adaptive+lending (writes "
                          "BENCH_unit_lending.json); implies --mixed "
                          "--shared")
+    ap.add_argument("--predictive", action="store_true",
+                    help="predictive re-partitioning on the diurnal "
+                         "mix-flip trace: adaptive vs predictive (writes "
+                         "BENCH_predictive.json)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--bench-json", default="BENCH_event_sim.json")
     ap.add_argument("--seed-ref", default=None,
@@ -635,6 +806,9 @@ if __name__ == "__main__":
     ap.add_argument("--lending-json", default="BENCH_unit_lending.json",
                     help="output path for the --lending BENCH (same "
                          "caveat as --shared-json)")
+    ap.add_argument("--predictive-json", default="BENCH_predictive.json",
+                    help="output path for the --predictive BENCH (same "
+                         "caveat as --shared-json)")
     ap.add_argument("--pre-ref", default=None,
                     help="path to a checked-out pre-unification tree (the "
                          "last commit with the two hand-rolled loops); "
@@ -645,6 +819,9 @@ if __name__ == "__main__":
         emit(run_smoke(bench_path=args.bench_json, seed_ref=args.seed_ref,
                        unified_bench_path=args.unified_json,
                        pre_ref=args.pre_ref))
+    if args.predictive:
+        emit(run_predictive(quick=not args.full,
+                            bench_path=args.predictive_json))
     if args.lending:
         emit(run_lending(quick=not args.full, bench_path=args.lending_json))
     elif args.shared:
@@ -652,5 +829,6 @@ if __name__ == "__main__":
                               bench_path=args.shared_json))
     elif args.mixed:
         emit(run_mixed(quick=not args.full))
-    if not (args.smoke or args.mixed or args.shared or args.lending):
+    if not (args.smoke or args.mixed or args.shared or args.lending
+            or args.predictive):
         emit(run(quick=not args.full))

@@ -50,6 +50,8 @@ def main() -> None:
                                          "BENCH_shared_smoke.json")
         smoke_unified_json = os.path.join("results",
                                           "BENCH_unified_clock.smoke.json")
+        smoke_predictive_json = os.path.join("results",
+                                             "BENCH_predictive.smoke.json")
         t0 = time.perf_counter()
         print("# --- e2e (smoke) ---", flush=True)
         from benchmarks import e2e
@@ -63,6 +65,11 @@ def main() -> None:
         print("# --- e2e (shared-cluster smoke) ---", flush=True)
         emit(e2e.run_shared_smoke(bench_path=smoke_shared_json))
         print(f"# shared smoke took {time.perf_counter() - t0:.1f}s",
+              flush=True)
+        t0 = time.perf_counter()
+        print("# --- e2e (predictive smoke) ---", flush=True)
+        emit(e2e.run_predictive_smoke(bench_path=smoke_predictive_json))
+        print(f"# predictive smoke took {time.perf_counter() - t0:.1f}s",
               flush=True)
         # event-vs-tick parity is the smoke pass's one hard check: a clock
         # regression must fail CI, not just land in the BENCH json.
@@ -80,7 +87,8 @@ def main() -> None:
         problems = check_regression.run_checks(
             [("BENCH_event_sim.json", smoke_event_json),
              ("BENCH_shared_cluster.json", smoke_shared_json),
-             ("BENCH_unified_clock.json", smoke_unified_json)])
+             ("BENCH_unified_clock.json", smoke_unified_json),
+             ("BENCH_predictive.json", smoke_predictive_json)])
         for p in problems:
             print(f"# REGRESSION: {p}", flush=True)
         if not problems:

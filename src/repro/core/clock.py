@@ -18,8 +18,10 @@ construction*:
 * ``WakeSource`` — a callable ``tau -> Optional[float]`` returning the
   earliest future time its subsystem can change state.  Arrivals,
   Monitor-window boundaries (including the opt-in idle-window wake-ups),
-  fleet re-partition windows, and lending borrow/return expiries are all
-  registered this way — once, independent of lane count.  Schedulers can
+  fleet re-partition windows, lending borrow/return expiries, and the
+  predictive scheduler's forecast events (rate-history bin boundaries +
+  the armed predicted-shift time, ``forecast_wake``) are all registered
+  this way — once, independent of lane count.  Schedulers can
   export their own trigger-crossing wake-ups via ``next_wake`` hooks
   (see ``Scheduler`` / the fleet schedulers), registered by the drivers
   behind the opt-in ``scheduler_wake_hooks`` config flags.

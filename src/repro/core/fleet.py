@@ -16,11 +16,15 @@ style demand tracking).
   (the unit-time footprint of each pipeline's recent traffic — the
   ``alpha_mode="demand"`` idea lifted one level up), then Algorithm 2 runs
   *per pipeline* inside its budget.
-* ``FleetScheduler`` trio  — ``static`` (sub-clusters fixed at deploy time:
-  today's ``--mixed``), ``proportional`` (re-partition to windowed demand
-  every window, no hysteresis), ``adaptive`` (re-partition only on a
-  ``FleetMonitor.mix_shift``, with hysteresis + cooldown, demand blended
-  with queued backlog so a post-shift queue drains fast).
+* ``FleetScheduler`` quartet — ``static`` (sub-clusters fixed at deploy
+  time: today's ``--mixed``), ``proportional`` (re-partition to windowed
+  demand every window, no hysteresis), ``adaptive`` (re-partition only on
+  a ``FleetMonitor.mix_shift``, with hysteresis + cooldown, demand blended
+  with queued backlog so a post-shift queue drains fast), ``predictive``
+  (adaptive + a demand forecaster, core/forecast.py: predicts the next
+  mix shift from rate history, pre-warms the target partition's weights
+  on the units that will flip before the shift lands, and fires the swap
+  the moment live rates confirm the prediction).
 * ``FleetSimulator``       — one clock over the shared chip pool: a
   multi-lane ``ClockDriver`` over the same ``repro.core.clock.EventClock``
   kernel the single-pipeline ``Simulator`` drives (tests/test_fleet.py
@@ -356,6 +360,32 @@ class FleetConfig:
     lend_min_stage_s: float = 0.5     # borrow only when the hosted stage is
                                       # worth at least this long per request
                                       # (reloads never pay for ms decodes)
+    # -- predictive re-partitioning (core/forecast.py), used only when the
+    # fleet runs mode="predictive"; every other scheduler ignores these and
+    # the off path stays byte-identical to the committed baselines ---------
+    forecast_bin: float = 10.0        # rate-history bin width (s)
+    forecast_history: float = 600.0   # retained rate-history span (s)
+    forecast_horizon: float = 240.0   # how far ahead to scan for a shift (s)
+    forecast_min_conf: float = 0.35   # R² gate: act on a prediction only
+                                      # when the fits explain this much of
+                                      # the demand variance (stationary
+                                      # traffic never crosses it)
+    predictive_confirm: float = 0.4   # fraction of the hysteresis threshold
+                                      # the *live* shares must have moved
+                                      # (toward the prediction) before a
+                                      # predicted shift may fire the swap
+    forecast_grace: float = 60.0      # a predicted shift unconfirmed this
+                                      # long after its time is dropped as a
+                                      # mis-prediction (fall back to plain
+                                      # adaptive behavior)
+    prewarm_lead: float = 45.0        # start staging this long before the
+                                      # predicted shift (must cover the
+                                      # weight-reload latency)
+    prewarm_budget: int = 16          # max units staged per pre-warm — the
+                                      # mis-prediction cost bound
+    prewarm_cooldown: float = 60.0    # min time between pre-warm stagings
+    prewarm_ttl: float = 240.0        # staged weights are evicted (ignored
+                                      # at cutover) after this long
 
     def lane_sim_cfg(self, num_chips: int) -> SimConfig:
         return SimConfig(num_chips=num_chips, tick=self.tick,
@@ -417,6 +447,11 @@ class FleetScheduler:
                           ) -> Optional[Dict[str, int]]:
         return None
 
+    def maybe_prewarm(self, fleet: "FleetSimulator", tau: float) -> None:
+        """Predictive hook (``PredictiveFleetScheduler``): stage the next
+        partition's weight loads ahead of a predicted shift.  Base: no-op."""
+        return None
+
     def next_wake(self, fleet: "FleetSimulator", tau: float
                   ) -> Optional[float]:
         """Event-source plug-in (opt-in via
@@ -425,6 +460,16 @@ class FleetScheduler:
         cadence or cooldown expiring.  Demand-share drift itself only
         moves on arrivals, which are already wake-ups."""
         return None
+
+    def on_repartitioned(self, fleet: "FleetSimulator", tau: float) -> None:
+        """A re-partition just landed: adopt the demand basis the new
+        partition answers to.  Default: the windowed shares at swap time
+        (the trigger must stop firing for the mix it just served).  The
+        predictive scheduler overrides this for its anticipatory swaps —
+        the trailing window still remembers the old phase there, and
+        re-arming against it would chase the swap with redundant
+        corrections."""
+        self.basis_shares = fleet.fleet_monitor.demand_shares(tau)
 
     def _objective_weights(self, fleet: "FleetSimulator", tau: float,
                            weights: Dict[str, float]) -> Dict[str, float]:
@@ -497,10 +542,255 @@ class AdaptiveFleetScheduler(FleetScheduler):
         return cool if cool > tau else None
 
 
+class PredictiveFleetScheduler(AdaptiveFleetScheduler):
+    """Adaptive + a demand forecaster (core/forecast.py): predicts the next
+    traffic-mix shift from per-pipeline windowed-rate history (trend + one
+    harmonic, R²-gated), **pre-warms** the target partition's weights on
+    the units that will flip *before* the shift lands (overlapping the
+    reload with the tail of the old mix, so the swap charges (near-)zero
+    downtime when the prediction is right), and fires the re-partition at
+    the predicted shift once the live shares confirm it — instead of a
+    detection window after it.  Wrong predictions cost at most the
+    pre-warm budget's reloads per pre-warm cooldown; everything else falls
+    back to plain adaptive behavior.
+
+    Determinism contract: fits and staging attempts happen only at
+    forecast-bin boundaries — grid points both clock modes visit (the
+    driver registers ``forecast_wake`` as a kernel wake source, like
+    ``broker.next_wake``) — so the event and tick clocks derive identical
+    predictions and identical pre-warm trajectories."""
+
+    name = "fleet-predictive"
+    uses_forecast = True
+    MIN_BINS = 12                      # bins before the first fit attempt
+
+    def __init__(self, fleet_orch: FleetOrchestrator, fleet_cfg: FleetConfig,
+                 fixed_budgets: Optional[Dict[str, int]] = None):
+        super().__init__(fleet_orch, fleet_cfg, fixed_budgets)
+        from repro.core.forecast import DemandForecaster
+        self.forecast = DemandForecaster(bin_s=fleet_cfg.forecast_bin,
+                                         min_conf=fleet_cfg.forecast_min_conf)
+        self._pred = None
+        self._fit_bin = -1
+        self._last_prewarm = -1e9
+        self._fired_shares = None      # target shares of an in-flight
+                                       # predictive fire (becomes the basis)
+        self._cand = None              # last bin's candidate prediction —
+                                       # a prediction arms only when two
+                                       # consecutive bins agree on it
+        # pre-warm campaign: one per armed prediction, staging incrementally
+        # (idle units only) across the lead window under one unit budget
+        self._campaign_pred = None
+        self._campaign_budgets = None
+        self._campaign_staged = 0
+        self.early_fires = 0           # predictively fired re-partitions
+        self.prewarms = 0              # units staged across the run
+
+    # -- wake source (registered by the driver like broker.next_wake) ---------
+
+    def forecast_wake(self, tau: float) -> Optional[float]:
+        """Earliest future forecast event the clock must visit: the next
+        rate-history bin boundary (fits/staging happen only there), and the
+        predicted shift time while a prediction is armed (the predictive
+        fire condition crosses there)."""
+        nxt = (math.floor(tau / self.cfg.forecast_bin) + 1.0) \
+            * self.cfg.forecast_bin
+        if self._pred is not None and tau < self._pred.t_shift:
+            nxt = min(nxt, self._pred.t_shift)
+        return nxt
+
+    # -- forecasting -----------------------------------------------------------
+
+    def maybe_prewarm(self, fleet: "FleetSimulator", tau: float) -> None:
+        cfg = self.cfg
+        cur_bin = int(tau // cfg.forecast_bin)
+        if cur_bin == self._fit_bin:
+            return                     # fits only move at bin boundaries
+        self._fit_bin = cur_bin
+        pred = self._pred
+        if pred is not None and tau > pred.t_shift + cfg.forecast_grace:
+            pred = self._pred = None   # shift never confirmed: mispredicted
+        if pred is None or tau < pred.t_shift - cfg.prewarm_lead:
+            # (re)predict freely while outside the pre-warm window; once
+            # staging can begin the armed prediction is frozen, so the
+            # refit at the shift itself cannot erase it before the live
+            # shares get their chance to confirm it
+            from repro.core.forecast import tv_distance
+            hist = fleet.fleet_monitor.rate_history(
+                tau, self.orch.reg.pipelines)
+            if len(hist) < self.MIN_BINS:
+                self._pred = self._cand = None
+                return
+            self.forecast.fit(hist)
+            cand = self.forecast.predict_shift(
+                tau, threshold=cfg.hysteresis, horizon=cfg.forecast_horizon)
+            prev, self._cand = self._cand, cand
+            # a single bin's fit can blip (a lost period, a spurious trend)
+            # and point the campaign at a phantom shift: arm only when two
+            # consecutive bins agree on when the shift lands and what mix
+            # it lands on
+            stable = (cand is not None and prev is not None
+                      and abs(cand.t_shift - prev.t_shift)
+                      <= 2.0 * cfg.forecast_bin
+                      and tv_distance(cand.shares, prev.shares)
+                      <= cfg.hysteresis / 2.0)
+            pred = self._pred = cand if stable else None
+        if pred is None:
+            return
+        if tau < pred.t_shift - cfg.prewarm_lead:
+            return                     # too early: weights would sit staged
+        if self._campaign_pred is not pred:
+            # one staging campaign per armed prediction, at most one per
+            # pre-warm cooldown — the mis-prediction frequency bound
+            if tau - self._last_prewarm < cfg.prewarm_cooldown:
+                return
+            self._last_prewarm = tau
+            self._campaign_pred = pred
+            self._campaign_budgets = self._target_budgets(fleet, tau, pred)
+            self._campaign_staged = 0
+        budgets = self._campaign_budgets
+        if budgets is None or budgets == fleet.plan.budget_histogram():
+            return
+        left = cfg.prewarm_budget - self._campaign_staged
+        if left > 0:
+            # idle units only: busy units are deferred to the next bin's
+            # retry, so staging rides the old mix's idle tail instead of
+            # stalling live work
+            n = fleet.stage_prewarm(budgets, tau, limit=left, idle_only=True)
+            self._campaign_staged += n
+            self.prewarms += n
+
+    def _target_budgets(self, fleet: "FleetSimulator", tau: float,
+                        pred) -> Optional[Dict[str, int]]:
+        """Chip budgets for the partition the predicted post-shift mix will
+        need: the settled new-phase demand rates (``pred.demand``), in the
+        fleet's windowed chip-seconds currency."""
+        w = {p: pred.demand.get(p, 0.0) * self.cfg.t_win
+             for p in self.orch.reg.pipelines}
+        if sum(w.values()) <= 0.0:
+            return None
+        return self.orch.budgets(self._objective_weights(fleet, tau, w))
+
+    def _recent_rates(self, fleet: "FleetSimulator", tau: float,
+                      nbins: int = 3) -> Optional[Dict[str, float]]:
+        """Near-instantaneous observed demand rates: the last ``nbins``
+        completed rate-history bins.  The t_win demand window needs half a
+        window to register a flip; these bins see it within seconds —
+        that is what confirms (or refutes) a predicted shift."""
+        hist = fleet.fleet_monitor.rate_history(tau, self.orch.reg.pipelines,
+                                                last=nbins)
+        if len(hist) < nbins:
+            return None
+        rates = {p: 0.0 for p in self.orch.reg.pipelines}
+        for _, d in hist[-nbins:]:
+            for p in self.orch.reg.pipelines:
+                rates[p] += d.get(p, 0.0) / nbins
+        return rates
+
+    # -- re-partitioning -------------------------------------------------------
+
+    def maybe_repartition(self, fleet, tau):
+        cfg = self.cfg
+        mon = fleet.fleet_monitor
+        pred = self._pred
+        if pred is None or tau < pred.t_shift - cfg.prewarm_lead:
+            # no imminent prediction: plain adaptive behavior
+            return super().maybe_repartition(fleet, tau)
+        # an imminent predicted shift owns the cooldown: the reactive
+        # trigger — whose trailing window would fire late and size the
+        # partition for the *old* phase — holds while the live rates are
+        # still consistent with "the shift has not landed yet".  The hold
+        # is only ever safe against that evidence: the moment the live
+        # rates shift AWAY from the prediction, it is wrong *now* and
+        # reactive behavior resumes immediately (and ``forecast_grace``
+        # expires a shift that never shows at all).
+        from repro.core.forecast import tv_distance
+        rates = self._recent_rates(fleet, tau)
+        tot = sum(rates.values()) if rates else 0.0
+        if tot > 0.0 and self.basis_shares:
+            obs = {p: v / tot for p, v in sorted(rates.items())}
+            moved = tv_distance(obs, self.basis_shares)
+            if moved >= cfg.predictive_confirm * cfg.hysteresis:
+                # the live mix has genuinely moved — with or against us?
+                # confirmed: past the halfway point toward the predicted
+                # mix.  contradicted: a full-threshold move that leaves the
+                # observation *farther* from the prediction than the basis
+                # was — i.e. the opposite direction, not merely a
+                # transition still in flight (mid-swing the observation is
+                # a full hysteresis from the basis yet short of halfway;
+                # dropping there would kill every correct prediction).
+                toward = (tv_distance(obs, pred.shares)
+                          < tv_distance(obs, self.basis_shares))
+                away = (tv_distance(obs, pred.shares)
+                        > tv_distance(self.basis_shares, pred.shares)
+                        + cfg.predictive_confirm * cfg.hysteresis)
+                if moved >= cfg.hysteresis and away:
+                    self._pred = self._cand = None
+                    return super().maybe_repartition(fleet, tau)
+                if toward and tau - mon.last_repartition >= cfg.cooldown:
+                    # confirmed: fire now (even a little before the
+                    # predicted instant — the shift is the evidence, the
+                    # timestamp was the estimate), sizing each pipeline by
+                    # the *larger* of its forecast and its live rate, plus
+                    # its queued backlog.  The forecast may add capacity
+                    # ahead of demand, but never cut a pipeline below the
+                    # live evidence — a wrong extrapolation (a local phase
+                    # tail mistaken for a trend) must not defund a lane
+                    # the observed traffic still needs.
+                    backlog = fleet.backlog_weights()
+                    weights = {
+                        p: (max(pred.demand.get(p, 0.0),
+                                rates.get(p, 0.0)) * cfg.t_win
+                            + backlog.get(p, 0.0))
+                        for p in self.orch.reg.pipelines}
+                    budgets = self.orch.budgets(
+                        self._objective_weights(fleet, tau, weights))
+                    self._pred = None  # consumed
+                    # the basis becomes the *settled predicted mix* — what
+                    # the live shares will read once the transition (and
+                    # the backlog transient folded into the sizing weights)
+                    # has passed.  A weights-derived basis would sit midway
+                    # between the phases and read every settled observation
+                    # as a fresh shift.
+                    if budgets == fleet.plan.budget_histogram():
+                        # the partition already fits the shifted mix: adopt
+                        # the target shares so the trailing window cannot
+                        # re-trigger a redundant swap while it catches up
+                        self.basis_shares = dict(pred.shares)
+                        return None
+                    self.early_fires += 1
+                    self._fired_shares = dict(pred.shares)
+                    return budgets
+        return None
+
+    def on_repartitioned(self, fleet, tau):
+        """Predictive fires size the partition for where demand is going;
+        the trailing demand window still remembers the old phase for
+        ~t_win/2 after the shift, so adopting it as the basis (the default)
+        would immediately re-arm the mix-shift trigger against the very mix
+        the swap just provisioned — chasing it with redundant corrections
+        that burn the cooldown exactly when the *next* flip needs it.
+        Predictive fires adopt their target shares; reactive fallback swaps
+        adopt the freshest observed rates (near-instantaneous bins) when
+        available, the trailing window otherwise."""
+        if self._fired_shares is not None:
+            self.basis_shares = self._fired_shares
+            self._fired_shares = None
+            return
+        rates = self._recent_rates(fleet, tau)
+        tot = sum(rates.values()) if rates else 0.0
+        if tot > 0.0:
+            self.basis_shares = {p: v / tot
+                                 for p, v in sorted(rates.items())}
+        else:
+            super().on_repartitioned(fleet, tau)
+
+
 FLEET_SCHEDULERS = {
     "static": FleetScheduler,
     "proportional": ProportionalFleetScheduler,
     "adaptive": AdaptiveFleetScheduler,
+    "predictive": PredictiveFleetScheduler,
 }
 
 
@@ -532,6 +822,13 @@ class FleetResult:
     lend_swap_cost_s: float = 0.0
     borrowed_stage_runs: Dict[str, int] = dataclasses.field(
         default_factory=dict)
+    # predictive re-partitioning (zeros unless mode="predictive")
+    prewarm_units: int = 0             # target units staged ahead of shifts
+    prewarm_cost_s: float = 0.0        # staging reload time charged
+    prewarm_hits: int = 0              # cutover units whose reload was
+                                       # fully averted by staged weights
+    prewarm_loan_returns: int = 0      # loans force-closed by staging
+    predictive_repartitions: int = 0   # swaps fired by the forecaster
 
     def summary(self) -> str:
         if self.oom:
@@ -584,6 +881,19 @@ class FleetSimulator:
         if self.cfg.lending:
             from repro.core.lending import LendingBroker
             self.broker = LendingBroker(self.cfg, registry)
+        # predictive pre-warm (core/forecast.py): chip -> (target pipeline,
+        # staged stages, staging time).  Empty — and the rate history
+        # disabled — unless the scheduler carries a forecaster, so every
+        # other mode's trajectory is byte-identical to the committed runs.
+        self.uses_forecast = getattr(scheduler, "uses_forecast", False)
+        if self.uses_forecast:
+            self.fleet_monitor.enable_rate_history(self.cfg.forecast_bin,
+                                                   self.cfg.forecast_history)
+        self.prewarmed: Dict[int, Tuple[str, frozenset, float]] = {}
+        self.prewarm_cost_s = 0.0
+        self.prewarm_units = 0
+        self.prewarm_hits = 0
+        self.prewarm_loan_returns = 0
         self._tau_last = 0.0
 
     # ---------------------------------------------------------------- helpers
@@ -630,6 +940,10 @@ class FleetSimulator:
             # borrow/return events: min-hold expiries and lend-window
             # re-checks while any loan is outstanding
             self.clock.add_source(self.broker.next_wake)
+        if self.uses_forecast:
+            # predictive pre-warm events: rate-history bin boundaries (fits
+            # and staging only move there) and the armed shift time
+            self.clock.add_source(self.fleet_sched.forecast_wake)
         if self.cfg.scheduler_wake_hooks:
             self.clock.add_source(
                 lambda tau: self.fleet_sched.next_wake(self, tau))
@@ -721,6 +1035,7 @@ class FleetSimulator:
 
     def _step(self, tau: float) -> None:
         self._tau_last = tau
+        self.fleet_sched.maybe_prewarm(self, tau)
         budgets = self.fleet_sched.maybe_repartition(self, tau)
         if budgets is not None:
             self._repartition(budgets, tau)
@@ -748,35 +1063,128 @@ class FleetSimulator:
 
     # -- re-partitioning ------------------------------------------------------
 
-    def _repartition(self, budgets: Dict[str, int], tau: float) -> None:
-        """Move chips between lanes.  Per-chip in-flight work and stage
-        residency carry over; units whose pipeline or placement type changed
-        hands pay the weight-reload latency before becoming dispatchable."""
-        old = self.plan
-        if self.broker is not None:
-            # loans cannot outlive the partition they were struck under:
-            # force-return them first (in-flight borrowed work and the
-            # lender's reload land on the lender's chips via free_at below)
-            self.broker.release_all(self, tau)
+    def _chip_state(self) -> Tuple[Dict[int, float],
+                                   Dict[int, Tuple[str, int, frozenset]]]:
+        """Per-chip (free time, (owner pipeline, owner unit, resident
+        stages)) over the lanes' own (non-loan) units — the inputs both the
+        re-partition reload accounting and the pre-warm staging diff."""
         chip_free: Dict[int, float] = {}
-        chip_owner: Dict[int, Tuple[str, frozenset]] = {}
+        chip_owner: Dict[int, Tuple[str, int, frozenset]] = {}
         for pid, lane in self.lanes.items():
-            lo, _ = old.chip_ranges[pid]
-            k = old.subplans[pid].unit_size
+            lo, _ = self.plan.chip_ranges[pid]
+            k = self.plan.subplans[pid].unit_size
             for u in lane.engine.units[:lane.base_units]:
                 for c in range(lo + u.uid * k, lo + (u.uid + 1) * k):
                     chip_free[c] = u.free_at
-                    chip_owner[c] = (pid, frozenset(u.resident))
+                    chip_owner[c] = (pid, u.uid, frozenset(u.resident))
+        return chip_free, chip_owner
+
+    def _plan_inputs(self, tau: float) -> Tuple[Dict, Dict]:
+        """(recent requests, measured placement rates) per pipeline — what
+        ``FleetOrchestrator.generate`` plans from, shared by re-partitions
+        and pre-warm target planning."""
         recent = {}
         measured = {}
         for pid, lane in self.lanes.items():
             recent[pid] = [r for r in lane.sched._recent
                            if r.arrival > tau - lane.sched.t_win][-512:]
             measured[pid] = lane.monitor.placement_rates(
-                tau, old.subplans[pid].type_histogram())
+                tau, self.plan.subplans[pid].type_histogram())
+        return recent, measured
+
+    def stage_prewarm(self, budgets: Dict[str, int], tau: float,
+                      limit: Optional[int] = None,
+                      idle_only: bool = False) -> int:
+        """Stage the predicted target partition's weight loads on the chips
+        that will flip, *before* the shift lands (predictive
+        re-partitioning, core/forecast.py).  The owning units keep serving
+        their current pipeline — each just hosts the staging DMA as busy
+        time (``RuntimeEngine.stage_prewarm``), overlapping the tail of the
+        old mix — and the staged chips are remembered so the next
+        re-partition skips their reloads.
+
+        With ``idle_only`` a unit is staged only when every owning unit is
+        idle at ``tau`` (the scheduler retries at each forecast bin across
+        the pre-warm lead window, so busy units are deferred to their next
+        idle gap instead of stalling live work).  At most ``limit``
+        (default ``prewarm_budget``) target units are staged per call —
+        the mis-prediction cost bound.  Already-staged chips are skipped,
+        so repeated calls converge instead of re-paying.  Returns the
+        number of units staged."""
+        recent, measured = self._plan_inputs(tau)
+        target = self.orch.generate(recent, budgets, measured)
+        if target is None:
+            return 0
+        chip_free, chip_owner = self._chip_state()
+        ttl = self.cfg.prewarm_ttl
+        cap = self.cfg.prewarm_budget if limit is None else limit
+        staged = 0
+        for pid in self.reg.pipelines:
+            sub = target.subplans[pid]
+            prof = self.reg.profiler(pid)
+            lo, _ = target.chip_ranges[pid]
+            k = sub.unit_size
+            for g, ptype in enumerate(sub.placements):
+                if staged >= cap:
+                    return staged
+                need = set(ptype)
+                chips = range(lo + g * k, lo + (g + 1) * k)
+                per_owner: Dict[Tuple[str, int], set] = {}
+                for c in chips:
+                    owner = chip_owner.get(c)
+                    if owner is None:
+                        continue
+                    missing = need if owner[0] != pid else need - owner[2]
+                    pw = self.prewarmed.get(c)
+                    if pw is not None and pw[0] == pid and tau - pw[2] <= ttl:
+                        missing = missing - pw[1]
+                    if missing:
+                        per_owner.setdefault((owner[0], owner[1]),
+                                             set()).update(missing)
+                if not per_owner:
+                    continue       # nothing (left) to stage for this unit
+                if idle_only and any(
+                        self.lanes[opid].engine.units[ouid].free_at > tau
+                        for opid, ouid in per_owner):
+                    continue       # owner mid-work: defer to a later bin
+                for opid, ouid in sorted(per_owner):
+                    if self.broker is not None and \
+                            self.broker.force_return_unit(self, opid, ouid,
+                                                          tau):
+                        # a lent-out unit scheduled for pre-warm returns its
+                        # loan before anything is staged on its chips — no
+                        # loan may survive the coming cutover
+                        self.prewarm_loan_returns += 1
+                    # sorted: float sum + str-set iteration (see
+                    # _repartition's reload note)
+                    load = sum(prof.stage_load_time(s, via_host=True)
+                               for s in sorted(per_owner[(opid, ouid)]))
+                    self.lanes[opid].engine.stage_prewarm(ouid, tau, load)
+                    self.prewarm_cost_s += load
+                for c in chips:
+                    self.prewarmed[c] = (pid, frozenset(need), tau)
+                self.prewarm_units += 1
+                staged += 1
+        return staged
+
+    def _repartition(self, budgets: Dict[str, int], tau: float) -> None:
+        """Move chips between lanes.  Per-chip in-flight work and stage
+        residency carry over; units whose pipeline or placement type changed
+        hands pay the weight-reload latency before becoming dispatchable —
+        unless the predictive scheduler pre-warmed their chips, in which
+        case the staged stages are already loaded and charge nothing."""
+        if self.broker is not None:
+            # loans cannot outlive the partition they were struck under:
+            # force-return them first (in-flight borrowed work and the
+            # lender's reload land on the lender's chips via free_at below)
+            self.broker.release_all(self, tau)
+        chip_free, chip_owner = self._chip_state()
+        recent, measured = self._plan_inputs(tau)
         new_plan = self.orch.generate(recent, budgets, measured)
         if new_plan is None:   # no feasible re-partition: keep the old plan
             return
+        prewarmed = self.prewarmed
+        ttl = self.cfg.prewarm_ttl
         for pid, lane in self.lanes.items():
             sub = new_plan.subplans[pid]
             prof = lane.prof
@@ -792,10 +1200,17 @@ class FleetSimulator:
                 base = max(chip_free.get(c, 0.0) for c in chips)
                 need = set(ptype)
                 reload = 0.0
+                averted = False
                 for c in chips:
                     owner = chip_owner.get(c)
                     missing = (need if owner is None or owner[0] != pid
-                               else need - owner[1])
+                               else need - owner[2])
+                    if missing and prewarmed:
+                        pw = prewarmed.get(c)
+                        if (pw is not None and pw[0] == pid
+                                and tau - pw[2] <= ttl and missing & pw[1]):
+                            missing = missing - pw[1]
+                            averted = True
                     if missing:
                         # sorted: a 3-term float sum is order-sensitive in
                         # the last ulp, and set iteration order over str
@@ -805,6 +1220,8 @@ class FleetSimulator:
                         reload = max(reload, sum(
                             prof.stage_load_time(s, via_host=True)
                             for s in sorted(missing)))
+                if averted and reload == 0.0:
+                    self.prewarm_hits += 1
                 if reload > 0.0:
                     self.swap_cost_s += reload
                     self.units_reloaded += 1
@@ -817,12 +1234,15 @@ class FleetSimulator:
             lane.sched.orch.resize(budgets[pid])
             lane.placement_log.append((tau, sub.type_histogram()))
         self.plan = new_plan
+        # staged weights were either consumed above or are stale now that
+        # the chips changed hands — either way the marks are spent
+        self.prewarmed.clear()
         if self.broker is not None:
             self.broker.reset_after_repartition(self)
         self.fleet_monitor.last_repartition = tau
         # the swap happened: only now does the partition's demand basis move
         # (an aborted re-partition must leave the mix-shift trigger armed)
-        self.fleet_sched.basis_shares = self.fleet_monitor.demand_shares(tau)
+        self.fleet_sched.on_repartitioned(self, tau)
         self.repartition_log.append((tau, dict(budgets)))
 
     # ---------------------------------------------------------------- results
@@ -898,7 +1318,14 @@ class FleetSimulator:
                           for pid, lane in self.lanes.items()},
             repartitions=self.repartition_log,
             swap_cost_s=self.swap_cost_s, units_reloaded=self.units_reloaded,
-            sched_wakeups=self.sched_wakeups, **lend_kw)
+            sched_wakeups=self.sched_wakeups,
+            prewarm_units=self.prewarm_units,
+            prewarm_cost_s=round(self.prewarm_cost_s, 3),
+            prewarm_hits=self.prewarm_hits,
+            prewarm_loan_returns=self.prewarm_loan_returns,
+            predictive_repartitions=getattr(self.fleet_sched, "early_fires",
+                                            0),
+            **lend_kw)
 
 
 # ---------------------------------------------------------------- convenience

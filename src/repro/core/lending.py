@@ -201,6 +201,22 @@ class LendingBroker:
         for loan in list(self.active):
             self._close(fleet, loan, tau)
 
+    def force_return_unit(self, fleet: "FleetSimulator", lender: str,
+                          uid: int, tau: float) -> bool:
+        """Force-close the loan (if any) riding on one lender unit.  The
+        predictive pre-warm path (core/fleet.py) must reclaim a lent-out
+        unit before staging the next partition's weights on its chips — a
+        loan must never survive a cutover, and staging under a live loan
+        would double-book the chips.  Counted like re-partition forced
+        returns (min-hold does not apply; the usual return reload is
+        charged by ``_close``).  Returns True when a loan was closed."""
+        for loan in list(self.active):
+            if loan.lender == lender and loan.lender_uid == uid:
+                self.forced_returns += 1
+                self._close(fleet, loan, tau)
+                return True
+        return False
+
     def reset_after_repartition(self, fleet: "FleetSimulator") -> None:
         """Engines were rebuilt from a fresh plan: loan slots are gone."""
         assert not self.active, "loans must be released before re-partition"

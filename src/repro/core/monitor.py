@@ -161,12 +161,40 @@ class FleetMonitor:
         self._util_bl: Dict[str, float] = collections.defaultdict(float)
         self._util_idle: Dict[str, int] = collections.defaultdict(int)
         self._util_n: Dict[str, int] = collections.defaultdict(int)
+        # forecast rate history (core/forecast.py): fixed-width bins of
+        # per-pipeline arrival demand, retained far beyond t_win so the
+        # predictive scheduler can fit diurnal structure.  Disabled (and
+        # recording nothing) unless ``enable_rate_history`` is called —
+        # the default fleet path is untouched.
+        self._rh_bin: float = 0.0
+        self._rh_keep: int = 0
+        self._rh: Dict[int, Dict[str, float]] = {}
+        self._rh_lo: int = 0
 
     # -- recording -------------------------------------------------------------
+
+    def enable_rate_history(self, bin_s: float, span_s: float) -> None:
+        """Turn on the forecast rate history: per-pipeline arrival demand
+        accumulated into ``bin_s``-wide bins, the last ``span_s`` seconds
+        retained.  Called once by the predictive fleet scheduler's driver;
+        every other path leaves the history disabled and records nothing."""
+        self._rh_bin = bin_s
+        self._rh_keep = max(2, int(round(span_s / bin_s)))
 
     def record_arrival(self, tau: float, pipeline: str, cost: float) -> None:
         self._arrivals.append((tau, pipeline, cost))
         self._demand[pipeline] += cost
+        if self._rh_bin:
+            b = int(tau // self._rh_bin)
+            d = self._rh.setdefault(b, {})
+            d[pipeline] = d.get(pipeline, 0.0) + cost
+            # rate_history queried from bin b returns bins >= b - keep:
+            # pop strictly older ones only, or the window's oldest returned
+            # bin would read a spurious zero
+            lo = b - self._rh_keep
+            while self._rh_lo < lo:
+                self._rh.pop(self._rh_lo, None)
+                self._rh_lo += 1
         self._trim(tau)
 
     def record_finish(self, tau: float, pipeline: str, on_time: bool) -> None:
@@ -237,6 +265,31 @@ class FleetMonitor:
         self._trim(tau)
         return {p: self._util_idle[p] / self._util_n[p]
                 for p in self._util_n if self._util_n[p] > 0}
+
+    def rate_history(self, tau: float, pipelines,
+                     last: Optional[int] = None) -> List[
+            Tuple[float, Dict[str, float]]]:
+        """Completed forecast bins as ``(bin-center time, {pipeline:
+        demand rate in chip-seconds/s})``, zero-filled for bins with no
+        arrivals (no traffic *is* a rate observation — the forecaster must
+        see the valleys, not just the peaks).  The bin ``tau`` falls in is
+        still filling and is excluded, so the same ``tau`` always yields
+        the same history in both clock modes.  ``last`` restricts the
+        answer to the newest ``last`` completed bins (the predictive
+        scheduler's fresh-rate confirmation needs 3, not the whole
+        window).  Empty unless ``enable_rate_history`` was called."""
+        if not self._rh_bin:
+            return []
+        cur = int(tau // self._rh_bin)
+        first = max(0, cur - self._rh_keep)
+        if last is not None:
+            first = max(first, cur - last)
+        out: List[Tuple[float, Dict[str, float]]] = []
+        for b in range(first, cur):
+            d = self._rh.get(b, {})
+            out.append(((b + 0.5) * self._rh_bin,
+                        {p: d.get(p, 0.0) / self._rh_bin for p in pipelines}))
+        return out
 
     def next_window_boundary(self) -> Optional[float]:
         return next_boundary((self._arrivals, self.t_win),

@@ -58,6 +58,8 @@ class EngineStats:
     transfer_time: float = 0.0
     placement_switches: int = 0
     downtime: float = 0.0
+    prewarm_loads: int = 0
+    prewarm_load_time: float = 0.0
 
 
 class RuntimeEngine:
@@ -108,6 +110,22 @@ class RuntimeEngine:
                 u.free_at = t
             if u.free_at > 0.0:
                 self._mark_busy(uid, u.free_at)
+
+    def stage_prewarm(self, uid: int, tau: float, load_time: float) -> float:
+        """Predictive pre-warm (core/fleet.py): stage a *future* partition's
+        weights on a unit that keeps serving its current pipeline until the
+        cutover.  The staging DMA occupies the unit like a reload (charged
+        through ``seed_unit_state``, the same entry point re-partition
+        swaps and loans pay), but the unit stays in its engine and remains
+        dispatchable afterwards — the load overlaps the tail of the old
+        mix instead of charging downtime at the re-partition.  Returns the
+        time the unit is busy until."""
+        u = self.units[uid]
+        until = max(tau, u.free_at) + load_time
+        self.seed_unit_state({uid: until})
+        self.stats.prewarm_loads += 1
+        self.stats.prewarm_load_time += load_time
+        return until
 
     # -- cross-pipeline unit lending (core/lending.py) -------------------------
 

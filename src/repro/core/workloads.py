@@ -203,8 +203,59 @@ def bursty_ec_phases(duration: float, head: float = 180.0,
 BURSTY_EC: Tuple[Tuple[float, Dict[str, float]], ...] = bursty_ec_phases(600.0)
 
 
+# Diurnal predictive scenario (``--predictive``, tests/test_forecast.py):
+# anti-phase day/night demand between the image and the video pipeline —
+# the periodic structure the demand forecaster (core/forecast.py) exists to
+# exploit.  Each flip is sharp (square waveform) and each half-period is
+# longer than the adaptive scheduler's cooldown, so the adaptive fleet
+# *can* chase every flip — it just always arrives a detection window late
+# and pays the reload downtime mid-queue; the predictive scheduler
+# pre-warms and fires at the flip.  Tuned for ~256 chips: both phases run
+# the cluster hot without saturating the favoured pipeline.
+PREDICTIVE_RATES: Dict[str, float] = {"sd3": 28.0, "cogvideox": 0.84}
+
+
+def diurnal_phases(n_periods: int = 3, spans_per_period: int = 2,
+                   amp: float = 0.8, lead_pipeline: str = "sd3",
+                   anti_pipelines: Sequence[str] = ("cogvideox",),
+                   shape: str = "square"
+                   ) -> Tuple[Tuple[float, Dict[str, float]], ...]:
+    """Piecewise-constant diurnal rate multipliers for ``fleet_trace``:
+    ``lead_pipeline`` runs at ``1 + amp*w(t)`` and every anti-phase
+    pipeline at ``1 - amp*w(t)``, with ``w`` a unit periodic waveform —
+    ``"square"`` (day/night flips every half period, the canonical diurnal
+    mix flip) or ``"sine"`` (smooth tides, sampled at span midpoints).
+    Fractions are of the total trace duration, so the period is
+    ``duration / n_periods``."""
+    spans: List[Tuple[float, Dict[str, float]]] = []
+    total = n_periods * spans_per_period
+    for i in range(total):
+        w = math.sin(2.0 * math.pi * (i + 0.5) / spans_per_period)
+        if shape == "square":
+            w = 1.0 if w >= 0.0 else -1.0
+        mults = {lead_pipeline: 1.0 + amp * w}
+        for p in anti_pipelines:
+            mults[p] = 1.0 - amp * w
+        spans.append(((i + 1) / total, mults))
+    return tuple(spans)
+
+
+def phase_shift_phases(flip_frac: float = 0.5, tilt: float = 2.0,
+                       lead_pipeline: str = "sd3",
+                       anti_pipelines: Sequence[str] = ("cogvideox",)
+                       ) -> Tuple[Tuple[float, Dict[str, float]], ...]:
+    """One hard phase shift at ``flip_frac`` of the trace: the lead
+    pipeline tilts up then down (anti-phase pipelines mirror it) — the
+    single-transition sibling of ``diurnal_phases`` for trend-style
+    forecaster inputs and MIX_FLIP-shaped scenarios at any tilt."""
+    hi = {lead_pipeline: tilt, **{p: 1.0 / tilt for p in anti_pipelines}}
+    lo = {lead_pipeline: 1.0 / tilt, **{p: tilt for p in anti_pipelines}}
+    return ((flip_frac, hi), (1.0, lo))
+
+
 def randomized_fleet_scenario(seed: int,
-                              pipelines: Sequence[str] = ("sd3", "flux")
+                              pipelines: Sequence[str] = ("sd3", "flux"),
+                              periods: int = 1
                               ) -> Tuple[Dict[str, float],
                                          Tuple[Tuple[float, Dict[str, float]],
                                                ...]]:
@@ -212,7 +263,13 @@ def randomized_fleet_scenario(seed: int,
     tests (tests/test_fleet.py): per-pipeline base rates jittered around
     the 128-chip test point and a mid-trace tilt at a random flip point.
     One tuned definition here — like ``FLEET_RATES``/``MIX_FLIP`` — so the
-    parity suite and any future bench sweep draw the same scenarios."""
+    parity suite and any future bench sweep draw the same scenarios.
+
+    ``periods > 1`` swaps the single flip for a periodic tilt (``2 *
+    periods`` equal spans alternating the same random tilt) — the
+    forecastable variant the ``predictive`` scheduler's parity runs use.
+    The rate/tilt draws are identical either way, so a seed's traffic
+    intensity matches across variants."""
     rng = random.Random(f"fleet-scenario:{seed}")
     test_rates = {"sd3": 10.0, "flux": 1.0, "cogvideox": 0.8,
                   "hunyuanvideo": 0.4}
@@ -221,8 +278,14 @@ def randomized_fleet_scenario(seed: int,
     flip = rng.uniform(0.35, 0.65)
     tilt = rng.uniform(1.5, 2.5)
     first, rest = pipelines[0], list(pipelines[1:])
-    phases = ((flip, {first: tilt, **{p: 1.0 / tilt for p in rest}}),
-              (1.0, {first: 1.0 / tilt, **{p: tilt for p in rest}}))
+    hi = {first: tilt, **{p: 1.0 / tilt for p in rest}}
+    lo = {first: 1.0 / tilt, **{p: tilt for p in rest}}
+    if periods <= 1:
+        phases = ((flip, hi), (1.0, lo))
+    else:
+        n = 2 * periods
+        phases = tuple(((i + 1) / n, hi if i % 2 == 0 else lo)
+                       for i in range(n))
     return rates, phases
 
 

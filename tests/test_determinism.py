@@ -1,0 +1,140 @@
+"""Byte-exactness parity under arbitrary PYTHONHASHSEED.
+
+PR 4 made the committed BENCH baselines hash-seed deterministic by sorting
+every float-accumulating str-set iteration; the predictive re-partitioning
+subsystem adds a new wake source (forecast bins), a forecaster, and a
+pre-warm staging path — all of which must preserve both properties:
+
+* **off path**: with predictive off, re-running the ``--mixed --shared``
+  and ``--lending`` scenarios reproduces the committed
+  ``BENCH_shared_cluster.json`` / ``BENCH_unit_lending.json`` byte-for-byte
+  (slow tests, run nightly), under an arbitrary hash seed;
+* **on path**: the predictive scheduler itself is hash-seed deterministic —
+  two subprocesses with different ``PYTHONHASHSEED`` values produce
+  identical trajectories (fast tests).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# two arbitrary, different hash seeds; str hashing (set iteration order)
+# differs between them, which is exactly what must not leak into results
+HASH_SEEDS = ("1", "31337")
+
+_SCENARIO_DRIVER = r"""
+import json, sys
+from repro.core import workloads
+from repro.core.fleet import FleetConfig, run_fleet
+p = json.load(sys.stdin)
+phases = [tuple(x) for x in p["phases"]] if p["phases"] else None
+res = run_fleet(p["pipelines"], mode=p["mode"], duration=p["duration"],
+                cfg=FleetConfig(**p["cfg"]), rates=p["rates"],
+                phases=phases, seed=p["seed"])
+out = {
+    "slo": res.slo_attainment, "mean": res.mean_latency,
+    "p95": res.p95_latency, "fin": res.n_finished,
+    "wakeups": res.sched_wakeups, "swap_cost": res.swap_cost_s,
+    "repartitions": res.repartitions, "per_pipeline": res.per_pipeline,
+    "loans": res.loans, "borrowed_s": res.borrowed_unit_seconds,
+    "prewarm": [res.prewarm_units, res.prewarm_cost_s, res.prewarm_hits,
+                res.prewarm_loan_returns, res.predictive_repartitions],
+}
+print(json.dumps(out, sort_keys=True))
+"""
+
+
+def _run_scenario(payload, hash_seed):
+    env = dict(os.environ, PYTHONHASHSEED=hash_seed,
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", _SCENARIO_DRIVER],
+                         input=json.dumps(payload), capture_output=True,
+                         text=True, cwd=REPO, timeout=1200, check=True,
+                         env=env)
+    return out.stdout.strip().splitlines()[-1]
+
+
+def _payload(mode, **kw):
+    base = dict(pipelines=["sd3", "cogvideox"], mode=mode, duration=240.0,
+                seed=0, rates={"sd3": 10.0, "cogvideox": 0.4}, phases=None,
+                cfg=dict(num_chips=64, t_win=60.0, cooldown=40.0))
+    base.update(kw)
+    return base
+
+
+def test_predictive_run_is_hash_seed_deterministic():
+    """The new wake source + forecaster + pre-warm path: identical results
+    under different PYTHONHASHSEED values (every iteration that feeds a
+    float accumulation or a threshold comparison must be sorted)."""
+    from repro.core import workloads
+    payload = _payload(
+        "predictive",
+        phases=[list(x) for x in workloads.diurnal_phases(n_periods=3)],
+        cfg=dict(num_chips=64, t_win=60.0, cooldown=40.0,
+                 forecast_bin=5.0, forecast_history=160.0,
+                 forecast_horizon=80.0, prewarm_lead=16.0,
+                 prewarm_cooldown=20.0, prewarm_ttl=60.0,
+                 forecast_grace=20.0))
+    a = _run_scenario(payload, HASH_SEEDS[0])
+    b = _run_scenario(payload, HASH_SEEDS[1])
+    assert a == b
+
+
+def test_lending_run_is_hash_seed_deterministic():
+    """The lending path (force-returns now also reachable from pre-warm)
+    stays hash-seed deterministic."""
+    from repro.core import workloads
+    payload = _payload(
+        "adaptive",
+        phases=[list(x) for x in workloads.bursty_ec_phases(240.0)],
+        rates=dict(workloads.LENDING_RATES),
+        cfg=dict(num_chips=64, t_win=60.0, cooldown=40.0, lending=True))
+    a = _run_scenario(payload, HASH_SEEDS[0])
+    b = _run_scenario(payload, HASH_SEEDS[1])
+    assert a == b
+
+
+# -- committed-baseline byte reproduction (nightly: the full scenarios) --------
+
+_BENCH_DRIVER = r"""
+import json, sys
+from benchmarks import e2e
+p = json.load(sys.stdin)
+if p["kind"] == "shared":
+    e2e.run_mixed_shared(quick=True, bench_path=p["out"])
+elif p["kind"] == "lending":
+    e2e.run_lending(quick=True, bench_path=p["out"])
+else:
+    raise SystemExit(2)
+print("done")
+"""
+
+
+def _rerun_bench(kind, out_path, hash_seed):
+    env = dict(os.environ, PYTHONHASHSEED=hash_seed,
+               PYTHONPATH=os.path.join(REPO, "src"))
+    subprocess.run([sys.executable, "-c", _BENCH_DRIVER],
+                   input=json.dumps({"kind": kind, "out": str(out_path)}),
+                   capture_output=True, text=True, cwd=REPO, timeout=3600,
+                   check=True, env=env)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind,baseline", [
+    ("shared", "BENCH_shared_cluster.json"),
+    ("lending", "BENCH_unit_lending.json"),
+])
+def test_committed_bench_reproduces_byte_for_byte(tmp_path, kind, baseline):
+    """With predictive off (it is not part of these scenarios), re-running
+    the committed shared-cluster / unit-lending benches reproduces the
+    committed JSON *byte-for-byte* — under an arbitrary PYTHONHASHSEED.
+    This is the off-path contract the new wake source must not disturb."""
+    out = tmp_path / baseline
+    _rerun_bench(kind, out, HASH_SEEDS[1])
+    with open(os.path.join(REPO, baseline), "rb") as f:
+        committed = f.read()
+    assert out.read_bytes() == committed

@@ -104,7 +104,8 @@ def test_single_pipeline_fleet_matches_simulator():
 # -- multi-lane event/tick parity on the unified kernel ------------------------
 
 @pytest.mark.parametrize("seed", (0, 3))
-@pytest.mark.parametrize("mode", ("static", "proportional", "adaptive"))
+@pytest.mark.parametrize("mode", ("static", "proportional", "adaptive",
+                                  "predictive"))
 def test_fleet_event_clock_matches_tick_clock(mode, seed):
     """The multi-lane extension of the 1-pipeline bit-identical check:
     with both simulators driving the one event-clock kernel
@@ -113,8 +114,20 @@ def test_fleet_event_clock_matches_tick_clock(mode, seed):
     reproduce the tick clock's results exactly while waking far less.
     ``scheduler_wake_hooks`` registers the re-partition trigger crossings
     (window cadence / cooldown expiry) as wake sources, so the event clock
-    sees them at the same grid point the tick clock does."""
-    rates, phases = workloads.randomized_fleet_scenario(seed)
+    sees them at the same grid point the tick clock does.  The
+    ``predictive`` scheduler runs the periodic scenario variant on a
+    longer trace, with the forecast bins grid-aligned — its fits and
+    staging move only at bin boundaries, which both clocks visit exactly
+    (the forecast wake source), so its whole forecast → pre-warm →
+    predictive-fire trajectory must be identical too."""
+    predictive = mode == "predictive"
+    rates, phases = workloads.randomized_fleet_scenario(
+        seed, periods=3 if predictive else 1)
+    duration = 240.0 if predictive else 90.0
+    extra = (dict(forecast_bin=2.0, forecast_history=160.0,
+                  forecast_horizon=80.0, prewarm_lead=16.0,
+                  prewarm_cooldown=20.0, prewarm_ttl=60.0,
+                  forecast_grace=20.0) if predictive else {})
     results = {}
     for clock_mode in ("event", "tick"):
         # heartbeat pinned to the tick grid: while work is pending the two
@@ -122,10 +135,12 @@ def test_fleet_event_clock_matches_tick_clock(mode, seed):
         # are provably no-ops (nothing pending, nothing completing) — the
         # regime where parity is exact by construction, for ANY seed
         cfg = small_cfg(mode=clock_mode, adaptive_idle_gap=False,
-                        max_idle_gap=0.25, scheduler_wake_hooks=True)
+                        max_idle_gap=0.25, scheduler_wake_hooks=True,
+                        **extra)
         results[clock_mode] = run_fleet(["sd3", "flux"], mode=mode,
-                                        duration=90.0, cfg=cfg, seed=seed,
-                                        rates=rates, phases=phases)
+                                        duration=duration, cfg=cfg,
+                                        seed=seed, rates=rates,
+                                        phases=phases)
     ev, tk = results["event"], results["tick"]
     assert ev.slo_attainment == tk.slo_attainment
     assert ev.n_finished == tk.n_finished and ev.n_requests == tk.n_requests
@@ -134,6 +149,11 @@ def test_fleet_event_clock_matches_tick_clock(mode, seed):
         assert abs(a - b) <= 1e-6 * max(1.0, abs(a)), (a, b)
     assert ev.repartitions == tk.repartitions
     assert ev.per_pipeline == tk.per_pipeline
+    if predictive:
+        assert ev.prewarm_units == tk.prewarm_units
+        assert ev.prewarm_cost_s == tk.prewarm_cost_s
+        assert ev.prewarm_hits == tk.prewarm_hits
+        assert ev.predictive_repartitions == tk.predictive_repartitions
     # hot randomized traces keep most grid points busy, so the saving is
     # scenario-dependent — strictly fewer is the invariant worth pinning
     assert ev.sched_wakeups < tk.sched_wakeups

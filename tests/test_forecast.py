@@ -1,0 +1,423 @@
+"""Demand forecasting + predictive re-partitioning (core/forecast.py,
+the ``predictive`` fleet scheduler in core/fleet.py).
+
+Covers: randomized property tests for the forecaster (sinusoid,
+square-wave, and trend+noise traces across seeds — predicted shift time
+within tolerance; the confidence gate never fires on stationary traffic),
+the FleetMonitor rate history, the pre-warm budget (mis-prediction cost
+bound), pre-warm staging/consumption mechanics, the pre-warm × lending
+interaction (no loan survives a cutover), and the system-level behavior —
+predictive mode beats adaptive on a diurnal mix-flip trace and is inert on
+stationary traffic.
+"""
+import math
+import random
+
+import pytest
+
+from repro.core import workloads
+from repro.core.fleet import (FLEET_SCHEDULERS, FleetConfig,
+                              FleetOrchestrator, FleetSimulator,
+                              PipelineRegistry, PredictiveFleetScheduler,
+                              run_fleet)
+from repro.core.forecast import (DemandForecaster, ShiftPrediction,
+                                 fit_series, tv_distance)
+from repro.core.monitor import FleetMonitor
+
+BIN = 10.0
+PERIOD = 300.0
+SPAN = 600.0          # 2 periods of history — the minimum for detection
+
+
+def _history(fn_a, fn_b, t_end, bin_s=BIN, span=SPAN, seed=0, noise=0.25):
+    """Synthetic completed-bin history with multiplicative noise."""
+    rng = random.Random(seed)
+    out = []
+    b = int(max(0.0, t_end - span) // bin_s)
+    while (b + 1) * bin_s <= t_end:
+        tc = (b + 0.5) * bin_s
+        out.append((tc, {"a": max(0.0, fn_a(tc) * (1 + rng.gauss(0, noise))),
+                         "b": max(0.0, fn_b(tc) * (1 + rng.gauss(0, noise)))}))
+        b += 1
+    return out
+
+
+def _square(t, period=PERIOD, hi=3.0, lo=0.5):
+    return hi if (t % period) < period / 2 else lo
+
+
+# -- forecaster property tests -------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_square_wave_shift_predicted_within_tolerance(seed):
+    """Anti-phase square waves: the predicted next flip must land within
+    two bins of the true flip, pointing at the right settled mix."""
+    fa = lambda t: _square(t)
+    fb = lambda t: _square(t + PERIOD / 2)
+    fc = DemandForecaster(bin_s=BIN, min_conf=0.35)
+    for tau in (640.0, 810.0, 1000.0):
+        fc.fit(_history(fa, fb, tau, seed=seed))
+        pred = fc.predict_shift(tau, threshold=0.10, horizon=250.0)
+        true_next = (int(tau // (PERIOD / 2)) + 1) * (PERIOD / 2)
+        assert pred is not None, (seed, tau)
+        assert abs(pred.t_shift - true_next) <= 2 * BIN, (seed, tau, pred)
+        # the settled mix is the *new* phase's
+        a_high_next = (true_next % PERIOD) < PERIOD / 2
+        assert (pred.shares["a"] > 0.6) == a_high_next, (seed, tau, pred)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_sinusoid_shift_predicted_within_tolerance(seed):
+    """Smooth anti-phase tides: the predicted crossing must be within a
+    quarter period of the true threshold crossing (the crossing time of a
+    smooth waveform is noise-sensitive by nature; the phase may not be
+    inverted)."""
+    w = 2 * math.pi / PERIOD
+    fa = lambda t: 2.0 + 1.5 * math.sin(w * t)
+    fb = lambda t: 2.0 - 1.5 * math.sin(w * t)
+    fc = DemandForecaster(bin_s=BIN, min_conf=0.35)
+    tau = 600.0   # sin = 0 and rising: mix is even, about to tilt toward a
+    fc.fit(_history(fa, fb, tau, seed=seed, noise=0.15))
+    pred = fc.predict_shift(tau, threshold=0.10, horizon=250.0)
+    assert pred is not None, seed
+    # true crossing: TV = |1.5 sin(wt)| * 2 / 8 >= 0.10 -> t ~ tau + 13 s
+    true_cross = tau + math.asin(8.0 * 0.10 / 3.0) / w
+    assert abs(pred.t_shift - true_cross) <= PERIOD / 4, (seed, pred)
+    assert pred.shares["a"] > 0.5, (seed, pred)   # tilting toward a
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_trend_with_noise_predicts_drift_crossing(seed):
+    """Linear anti-phase trends + noise: the predicted crossing must be
+    within tolerance of where the extrapolated shares cross the
+    threshold."""
+    fa = lambda t: 1.0 + 0.004 * t
+    fb = lambda t: 5.8 - 0.004 * t
+    fc = DemandForecaster(bin_s=BIN, min_conf=0.35)
+    tau = 600.0
+    fc.fit(_history(fa, fb, tau, seed=seed, noise=0.10))
+    pred = fc.predict_shift(tau, threshold=0.10, horizon=400.0)
+    assert pred is not None, seed
+    # shares_a(t) = (1 + .004 t) / 6.8; TV(t) - TV(600) >= 0.10 at t = 770
+    assert abs(pred.t_shift - 770.0) <= 80.0, (seed, pred)
+    assert pred.shares["a"] > pred.shares["b"] or pred.t_shift < 900.0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_confidence_gate_never_fires_on_stationary_traffic(seed):
+    """Stationary noisy traffic: the gate must hold — no prediction, ever,
+    at any noise seed."""
+    fc = DemandForecaster(bin_s=BIN, min_conf=0.35)
+    fc.fit(_history(lambda t: 2.0, lambda t: 2.0, 800.0, seed=seed,
+                    noise=0.3))
+    assert fc.confidence() < 0.35, seed
+    assert fc.predict_shift(800.0, threshold=0.10, horizon=250.0) is None
+
+
+def test_fit_series_rejects_short_lag_plateau_correlation():
+    """A slowly-varying (but aperiodic) series correlates at every small
+    lag; the dip-gated autocorrelation must not call it periodic."""
+    ts = [(i + 0.5) * BIN for i in range(60)]
+    rng = random.Random(7)
+    level = 2.0
+    ys = []
+    for _ in ts:
+        level += rng.gauss(0, 0.05)       # a slow random walk
+        ys.append(max(0.0, level))
+    fit = fit_series(ts, ys)
+    assert fit.period == 0.0
+
+
+def test_tv_distance_basics():
+    assert tv_distance({"a": 1.0}, {"a": 1.0}) == 0.0
+    assert tv_distance({"a": 1.0}, {"b": 1.0}) == 1.0
+    assert abs(tv_distance({"a": 0.75, "b": 0.25},
+                           {"a": 0.25, "b": 0.75}) - 0.5) < 1e-12
+
+
+# -- FleetMonitor rate history -------------------------------------------------
+
+def test_rate_history_bins_zero_fill_and_trim():
+    mon = FleetMonitor(t_win=100.0)
+    assert mon.rate_history(50.0, ("a",)) == []     # disabled by default
+    mon.enable_rate_history(10.0, 50.0)
+    mon.record_arrival(3.0, "a", 20.0)
+    mon.record_arrival(7.0, "a", 10.0)
+    mon.record_arrival(25.0, "b", 40.0)
+    hist = mon.rate_history(31.0, ("a", "b"))
+    assert [t for t, _ in hist] == [5.0, 15.0, 25.0]
+    assert hist[0][1] == {"a": 3.0, "b": 0.0}       # 30 cost / 10 s bin
+    assert hist[1][1] == {"a": 0.0, "b": 0.0}       # zero-filled gap
+    assert hist[2][1] == {"a": 0.0, "b": 4.0}
+    # the current (still-filling) bin is excluded
+    mon.record_arrival(33.0, "a", 10.0)
+    assert [t for t, _ in mon.rate_history(35.0, ("a",))] == [5.0, 15.0, 25.0]
+    # old bins slide out of the retained span (5 completed bins kept)
+    mon.record_arrival(90.0, "a", 10.0)
+    hist = mon.rate_history(90.0, ("a",))
+    assert hist[0][0] == 45.0 and len(hist) == 5
+    # ``last`` restricts to the newest completed bins
+    assert [t for t, _ in mon.rate_history(90.0, ("a",), last=2)] \
+        == [75.0, 85.0]
+
+
+def test_rate_history_oldest_returned_bin_is_backed():
+    """Trim regression: the oldest bin the query window returns must still
+    hold its recorded demand — trimming it early would show the forecaster
+    a spurious zero valley at the left edge of every full window."""
+    mon = FleetMonitor(t_win=100.0)
+    mon.enable_rate_history(10.0, 50.0)
+    for b in range(10):
+        mon.record_arrival(b * 10.0 + 1.0, "a", 10.0)
+    hist = mon.rate_history(95.0, ("a",))
+    assert [t for t, _ in hist] == [45.0, 55.0, 65.0, 75.0, 85.0]
+    assert all(d["a"] == 1.0 for _, d in hist), hist
+
+
+# -- pre-warm staging mechanics ------------------------------------------------
+
+def _bootstrap_fleet(monkeypatch, lending=False, mode="adaptive",
+                     pipelines=("sd3", "cogvideox"), num_chips=128,
+                     **cfg_kw):
+    """A fully initialised FleetSimulator whose clock never ran: plan,
+    lanes and engines exist, so staging/repartition mechanics can be
+    driven by hand."""
+    from repro.core.clock import EventClock
+    cfg = FleetConfig(num_chips=num_chips, lending=lending, **cfg_kw)
+    registry = PipelineRegistry(pipelines)
+    profs = {p: registry.profiler(p) for p in pipelines}
+    trace = workloads.fleet_trace(pipelines, 60.0, profs, seed=0,
+                                  rates={"sd3": 10.0, "cogvideox": 0.5})
+    orch = FleetOrchestrator(registry, num_chips=num_chips, chips_per_node=8)
+    sched = FLEET_SCHEDULERS[mode](orch, cfg)
+    sim = FleetSimulator(registry, sched, trace, cfg)
+    monkeypatch.setattr(EventClock, "run", lambda self, driver: None)
+    sim.run()
+    assert sim.plan is not None
+    return sim
+
+
+def _flipped_budgets(sim):
+    """Budgets that reverse the current partition (every unit flips)."""
+    hist = sim.plan.budget_histogram()
+    pids = list(sim.reg.pipelines)
+    assert len(pids) == 2
+    return {pids[0]: hist[pids[1]], pids[1]: hist[pids[0]]}
+
+
+def test_stage_prewarm_respects_budget_and_is_idempotent(monkeypatch):
+    """Mis-prediction cost bound: one staging call never stages more than
+    the pre-warm budget, its cost is bounded by budget x full reload, and
+    re-staging the same target is free."""
+    sim = _bootstrap_fleet(monkeypatch, prewarm_budget=6)
+    budgets = _flipped_budgets(sim)
+    staged = sim.stage_prewarm(budgets, tau=0.0)
+    assert 0 < staged <= 6
+    assert sim.prewarm_units == staged
+    max_reload = max(
+        sum(sim.reg.profiler(p).stage_load_time(s, via_host=True)
+            for s in "EDC") for p in sim.reg.pipelines)
+    assert sim.prewarm_cost_s <= staged * max_reload * 2 + 1e-9
+    # staged chips are remembered: a second identical call stages 0 more
+    cost = sim.prewarm_cost_s
+    assert sim.stage_prewarm(budgets, tau=0.0) == 0 or \
+        sim.prewarm_units <= 6 * 2
+    assert sim.prewarm_cost_s <= cost + max_reload * 6 * 2
+
+
+def test_prewarm_averts_cutover_reload(monkeypatch):
+    """The point of the tentpole at mechanism scale: staging the flipped
+    partition's weights, then re-partitioning to it, must charge less
+    swap reload than the same re-partition without staging."""
+    cold = _bootstrap_fleet(monkeypatch)
+    budgets = _flipped_budgets(cold)
+    cold._repartition(budgets, tau=10.0)
+    assert cold.swap_cost_s > 0.0
+    warm = _bootstrap_fleet(monkeypatch, prewarm_budget=10 ** 6)
+    staged = warm.stage_prewarm(dict(budgets), tau=0.0)
+    assert staged > 0
+    warm._repartition(dict(budgets), tau=10.0)
+    assert warm.prewarm_hits > 0
+    assert warm.swap_cost_s < cold.swap_cost_s
+    assert not warm.prewarmed          # marks are spent at the cutover
+
+
+def test_prewarm_ttl_expires_staged_weights(monkeypatch):
+    """Staged weights are evicted after prewarm_ttl: a cutover long after
+    the staging pays the full reload again."""
+    sim = _bootstrap_fleet(monkeypatch, prewarm_budget=10 ** 6,
+                           prewarm_ttl=30.0)
+    budgets = _flipped_budgets(sim)
+    sim.stage_prewarm(dict(budgets), tau=0.0)
+    ref = _bootstrap_fleet(monkeypatch)
+    ref._repartition(dict(budgets), tau=100.0)
+    sim._repartition(dict(budgets), tau=100.0)   # 100 > ttl: all stale
+    assert sim.prewarm_hits == 0
+    assert sim.swap_cost_s == pytest.approx(ref.swap_cost_s)
+
+
+def test_idle_only_staging_defers_busy_units(monkeypatch):
+    """With idle_only, a unit mid-work is skipped (deferred), not stalled."""
+    sim = _bootstrap_fleet(monkeypatch, prewarm_budget=10 ** 6)
+    # make every unit of every lane busy
+    for lane in sim.lanes.values():
+        lane.engine.seed_unit_state(
+            {u.uid: 50.0 for u in lane.engine.units})
+    budgets = _flipped_budgets(sim)
+    assert sim.stage_prewarm(budgets, tau=0.0, idle_only=True) == 0
+    assert sim.prewarm_cost_s == 0.0
+    # without idle_only the same call stages (queued behind the busy work)
+    assert sim.stage_prewarm(budgets, tau=0.0) > 0
+
+
+# -- pre-warm x lending (no loan survives a cutover) ---------------------------
+
+def test_prewarm_forces_loan_return_before_staging(monkeypatch):
+    """A lent-out unit scheduled for pre-warm must return its loan before
+    anything is staged on its chips, and no loan ever survives the
+    cutover."""
+    sim = _bootstrap_fleet(monkeypatch, lending=True,
+                           prewarm_budget=10 ** 6)
+    broker = sim.broker
+    assert broker is not None
+    # hand-grant a loan on every lendable sd3 unit so staging must hit one
+    lend_map = sim.plan.lending_map(sim.reg)
+    grants = 0
+    for units in lend_map.values():
+        for lu in units:
+            if lu.pipeline == "sd3" and ("cogvideox", "C") in lu.borrow_cost:
+                broker._grant(sim, 0.0, "cogvideox", lu, "C")
+                grants += 1
+    assert grants > 0 and broker.active
+    # shrink sd3 to its floor: cogvideox target units land on lent sd3
+    # chips, so those units ARE scheduled for pre-warm
+    budgets = {"sd3": 8, "cogvideox": sim.cfg.num_chips - 8}
+    sim.stage_prewarm(budgets, tau=1.0)
+    assert sim.prewarm_loan_returns > 0
+    assert broker.forced_returns >= sim.prewarm_loan_returns
+    # the remaining loans (if any) are force-closed by the cutover itself
+    sim._repartition(budgets, tau=5.0)
+    assert not broker.active, "a loan survived the cutover"
+    for lane in sim.lanes.values():
+        assert lane.borrowed_units == {}
+
+
+def test_prewarm_loan_return_charges_the_lender_reload(monkeypatch):
+    """The forced return pays the lender's reload through the same
+    seed_unit_state path as every other loan close."""
+    sim = _bootstrap_fleet(monkeypatch, lending=True)
+    broker = sim.broker
+    lend_map = sim.plan.lending_map(sim.reg)
+    lu = next(lu for units in lend_map.values() for lu in units
+              if lu.pipeline == "sd3" and ("cogvideox", "C") in lu.borrow_cost)
+    broker._grant(sim, 0.0, "cogvideox", lu, "C")
+    swap_before = broker.swap_cost_s
+    assert broker.force_return_unit(sim, "sd3", lu.unit, tau=1.0)
+    assert broker.swap_cost_s > swap_before       # return reload charged
+    assert not broker.force_return_unit(sim, "sd3", lu.unit, tau=1.0)
+    lender_unit = sim.lanes["sd3"].engine.units[lu.unit]
+    assert lender_unit.free_at > 1.0              # busy reloading
+
+
+# -- system-level predictive behavior -----------------------------------------
+
+def _diurnal_cfg(**kw):
+    base = dict(num_chips=128, t_win=90.0, cooldown=70.0,
+                forecast_bin=5.0, forecast_history=480.0,
+                forecast_horizon=200.0, prewarm_lead=40.0,
+                prewarm_cooldown=60.0, prewarm_ttl=200.0,
+                forecast_grace=50.0)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+DIURNAL_RATES = {"sd3": 14.0, "cogvideox": 0.42}
+
+
+@pytest.fixture(scope="module")
+def diurnal_results():
+    phases = workloads.diurnal_phases(n_periods=4)
+    out = {}
+    for mode in ("adaptive", "predictive"):
+        out[mode] = run_fleet(["sd3", "cogvideox"], mode=mode,
+                              duration=960.0, cfg=_diurnal_cfg(),
+                              rates=DIURNAL_RATES, phases=phases)
+    return out
+
+
+def test_predictive_beats_adaptive_on_diurnal_trace(diurnal_results):
+    """The tentpole claim at test scale: on a diurnal mix-flip trace the
+    predictive scheduler pre-warms, fires predicted shifts, and the worst
+    pipeline's tail never degrades vs adaptive."""
+    ad, pr = diurnal_results["adaptive"], diurnal_results["predictive"]
+    assert not ad.oom and not pr.oom
+    assert ad.n_requests == pr.n_requests
+    assert pr.predictive_repartitions > 0
+    assert pr.prewarm_units > 0 and pr.prewarm_hits > 0
+    worst_ad = max(m["p95_s"] for m in ad.per_pipeline.values())
+    worst_pr = max(m["p95_s"] for m in pr.per_pipeline.values())
+    assert worst_pr <= worst_ad
+    assert pr.slo_attainment >= ad.slo_attainment
+
+
+def test_predictive_prewarm_cost_is_bounded(diurnal_results):
+    """Mis-prediction cost bound at system scale: total staging cost can
+    never exceed (stagings allowed by the cooldown) x budget x reload."""
+    pr = diurnal_results["predictive"]
+    cfg = _diurnal_cfg()
+    from repro.core.profiler import Profiler
+    import repro.configs as C
+    max_reload = max(
+        sum(Profiler(C.get(p)).stage_load_time(s, via_host=True)
+            for s in "EDC") for p in ("sd3", "cogvideox"))
+    campaigns = 960.0 / cfg.prewarm_cooldown + 1
+    assert pr.prewarm_cost_s <= campaigns * cfg.prewarm_budget * max_reload
+    assert pr.prewarm_units <= campaigns * cfg.prewarm_budget
+
+
+def test_predictive_is_inert_on_stationary_traffic():
+    """The confidence gate end-to-end: stationary traffic must produce no
+    predictions, no pre-warms, and no predictive re-partitions."""
+    res = run_fleet(["sd3", "cogvideox"], mode="predictive", duration=300.0,
+                    cfg=_diurnal_cfg(), rates=DIURNAL_RATES, phases=None)
+    assert res.predictive_repartitions == 0
+    assert res.prewarm_units == 0
+    assert res.prewarm_cost_s == 0.0
+
+
+def test_predictive_defaults_off_and_knobs_inert_elsewhere():
+    """mode="adaptive" with arbitrary predictive knobs must be bit-identical
+    to plain adaptive — the knobs are read only by the predictive
+    scheduler (the off path must reproduce the committed baselines)."""
+    phases = ((0.5, {"sd3": 1.5, "flux": 0.3}),
+              (1.0, {"sd3": 0.3, "flux": 2.0}))
+    rates = {"sd3": 10.0, "flux": 1.0}
+    a = run_fleet(["sd3", "flux"], mode="adaptive", duration=120.0,
+                  cfg=FleetConfig(num_chips=128, t_win=60.0, cooldown=40.0),
+                  rates=rates, phases=phases)
+    b = run_fleet(["sd3", "flux"], mode="adaptive", duration=120.0,
+                  cfg=FleetConfig(num_chips=128, t_win=60.0, cooldown=40.0,
+                                  forecast_bin=1.0, forecast_history=30.0,
+                                  forecast_min_conf=0.0, prewarm_lead=5.0,
+                                  prewarm_budget=999, prewarm_cooldown=1.0),
+                  rates=rates, phases=phases)
+    assert a.slo_attainment == b.slo_attainment
+    assert a.mean_latency == b.mean_latency
+    assert a.p95_latency == b.p95_latency
+    assert a.sched_wakeups == b.sched_wakeups
+    assert a.repartitions == b.repartitions
+    assert b.prewarm_units == 0 and b.predictive_repartitions == 0
+
+
+def test_predictive_scheduler_registered():
+    assert "predictive" in FLEET_SCHEDULERS
+    assert FLEET_SCHEDULERS["predictive"] is PredictiveFleetScheduler
+    assert PredictiveFleetScheduler.uses_forecast
+    # the forecast wake source contract: next bin boundary, plus the armed
+    # shift time
+    orch = FleetOrchestrator(PipelineRegistry(("sd3",)), num_chips=64)
+    sched = PredictiveFleetScheduler(orch, FleetConfig(forecast_bin=10.0))
+    assert sched.forecast_wake(12.0) == 20.0
+    sched._pred = ShiftPrediction(t_shift=15.0, confidence=1.0,
+                                  shares={"sd3": 1.0}, demand={"sd3": 1.0})
+    assert sched.forecast_wake(12.0) == 15.0

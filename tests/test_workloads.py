@@ -58,3 +58,66 @@ def test_alpha_mode_demand_vs_count(prof):
     for plan in (demand, count):
         for s in "EDC":
             assert plan.units_with(s)
+
+
+# -- diurnal / phase-shift generators (predictive re-partitioning) -------------
+
+def test_diurnal_phases_square_alternates_anti_phase():
+    phases = workloads.diurnal_phases(n_periods=3, spans_per_period=2,
+                                      amp=0.8)
+    assert len(phases) == 6
+    assert phases[-1][0] == pytest.approx(1.0)
+    # end fractions strictly increase, equal spans
+    fracs = [f for f, _ in phases]
+    assert fracs == sorted(fracs)
+    for i, (_, mults) in enumerate(phases):
+        lead, anti = mults["sd3"], mults["cogvideox"]
+        # anti-phase: multipliers mirror around 1.0
+        assert lead + anti == pytest.approx(2.0)
+        # square: periods start in the lead pipeline's high phase
+        assert (lead > 1.0) == (i % 2 == 0)
+        assert lead in (pytest.approx(1.8), pytest.approx(0.2))
+
+
+def test_diurnal_phases_sine_is_smooth():
+    phases = workloads.diurnal_phases(n_periods=1, spans_per_period=8,
+                                      amp=0.5, shape="sine")
+    mults = [m["sd3"] for _, m in phases]
+    assert max(mults) <= 1.5 + 1e-9 and min(mults) >= 0.5 - 1e-9
+    assert len(set(round(m, 6) for m in mults)) > 2   # actually varies
+
+
+def test_phase_shift_phases_single_flip():
+    phases = workloads.phase_shift_phases(flip_frac=0.4, tilt=2.0)
+    assert len(phases) == 2
+    assert phases[0][0] == pytest.approx(0.4)
+    assert phases[0][1]["sd3"] == pytest.approx(2.0)
+    assert phases[0][1]["cogvideox"] == pytest.approx(0.5)
+    assert phases[1][1]["sd3"] == pytest.approx(0.5)
+
+
+def test_randomized_fleet_scenario_periods_variant():
+    """periods=1 keeps the historical single-flip output byte-identical;
+    periods>1 produces the periodic variant with the same rate draws."""
+    r1, p1 = workloads.randomized_fleet_scenario(7)
+    r1b, p1b = workloads.randomized_fleet_scenario(7, periods=1)
+    assert r1 == r1b and p1 == p1b
+    assert len(p1) == 2
+    r3, p3 = workloads.randomized_fleet_scenario(7, periods=3)
+    assert r3 == r1                      # same rate draws
+    assert len(p3) == 6
+    assert p3[0][1] == p1[0][1]          # same hi tilt
+    assert p3[1][1] == p1[1][1]          # same lo tilt
+    assert p3[-1][0] == pytest.approx(1.0)
+
+
+def test_diurnal_fleet_trace_has_periodic_mix():
+    profs = {p: Profiler(C.get(p)) for p in ("sd3", "cogvideox")}
+    phases = workloads.diurnal_phases(n_periods=2)
+    tr = workloads.fleet_trace(("sd3", "cogvideox"), 400.0, profs, seed=0,
+                               rates=workloads.PREDICTIVE_RATES,
+                               phases=phases)
+    # sd3 arrivals concentrate in its high phases ([0,100) and [200,300))
+    sd3 = [r.arrival for r in tr if r.pipeline == "sd3"]
+    hi = sum(1 for t in sd3 if (t % 200.0) < 100.0)
+    assert hi / len(sd3) > 0.75
