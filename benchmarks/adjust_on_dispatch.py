@@ -3,7 +3,7 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, duration
+from benchmarks.common import Row
 from repro.core.simulator import SimConfig, run_sim
 from repro.core.trident import TridentScheduler
 

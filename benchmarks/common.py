@@ -5,7 +5,6 @@ CSV and ``derived`` is a dict of extra fields.
 """
 from __future__ import annotations
 
-import sys
 from typing import Any, Dict, List, Tuple
 
 Row = Tuple[str, float, Dict[str, Any]]

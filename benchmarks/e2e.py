@@ -337,7 +337,7 @@ def run_mixed(quick: bool = True) -> List[Row]:
     p95_max = 0.0
     t0 = time.perf_counter()
     wakeups = 0
-    for pid, chips in MIXED_PARTITION.items():
+    for pid, chips in MIXED_PARTITION.items():  # detlint: ignore[DET001] module-literal dict: iteration order is source order
         cfg = SimConfig(num_chips=chips, mode="event")
         res = run_sim(pid, TridentScheduler, "dynamic", dur, sim_cfg=cfg)
         wakeups += res.sched_wakeups
@@ -354,7 +354,7 @@ def run_mixed(quick: bool = True) -> List[Row]:
         p95_max = max(p95_max, res.p95_latency)
     rows.append(("e2e_mixed512/aggregate/slo_pct",
                  round(100.0 * slo_weighted / max(1, tot_reqs), 2),
-                 {"chips": sum(MIXED_PARTITION.values()),
+                 {"chips": sum(MIXED_PARTITION.values()),  # detlint: ignore[DET001] int chip counts: exact
                   "duration_s": dur,
                   "mean_s": round(lat_weighted / max(1, tot_reqs), 3),
                   "p95_max_s": round(p95_max, 3),
@@ -486,13 +486,13 @@ def run_lending(quick: bool = True,
                               "mean_s": round(m["mean_s"], 3)}))
         ad, lend = per_mode["adaptive"], per_mode["adaptive+lending"]
         worst_by_seed[seed] = (
-            max(m["p95_s"] for m in ad.per_pipeline.values())
-            / max(1e-9, max(m["p95_s"]
+            max(m["p95_s"] for m in ad.per_pipeline.values())  # detlint: ignore[DET004] numeric extremum over values: order-free
+            / max(1e-9, max(m["p95_s"]  # detlint: ignore[DET004] numeric extremum over values: order-free
                             for m in lend.per_pipeline.values())))
         if seed == seeds[0]:
             results = per_mode
     ad, lend = results["adaptive"], results["adaptive+lending"]
-    worst_x = min(worst_by_seed.values())
+    worst_x = min(worst_by_seed.values())  # detlint: ignore[DET004] numeric extremum over values: order-free
     p95_x = ad.p95_latency / max(lend.p95_latency, 1e-9)
     rows.append(("e2e_lending256/worst_pipeline_p95_improvement",
                  round(worst_x, 3),
@@ -639,13 +639,13 @@ def run_predictive(quick: bool = True,
                               "mean_s": round(m["mean_s"], 3)}))
         ad, pr = per_mode["adaptive"], per_mode["predictive"]
         worst_by_seed[seed] = (
-            max(m["p95_s"] for m in ad.per_pipeline.values())
-            / max(1e-9, max(m["p95_s"]
+            max(m["p95_s"] for m in ad.per_pipeline.values())  # detlint: ignore[DET004] numeric extremum over values: order-free
+            / max(1e-9, max(m["p95_s"]  # detlint: ignore[DET004] numeric extremum over values: order-free
                             for m in pr.per_pipeline.values())))
         if seed == seeds[0]:
             results = per_mode
     ad, pr = results["adaptive"], results["predictive"]
-    worst_x = min(worst_by_seed.values())
+    worst_x = min(worst_by_seed.values())  # detlint: ignore[DET004] numeric extremum over values: order-free
     p95_x = ad.p95_latency / max(pr.p95_latency, 1e-9)
     rows.append(("e2e_predictive/worst_pipeline_p95_improvement",
                  round(worst_x, 3),
@@ -726,8 +726,8 @@ def _shared_summary_rows(rows: List[Row], results: Dict,
         st, ad = results["static"], results["adaptive"]
         p95_x = st.p95_latency / max(ad.p95_latency, 1e-9)
         goodput_x = ad.goodput / max(st.goodput, 1e-9)
-        worst_x = (max(m["p95_s"] for m in st.per_pipeline.values())
-                   / max(1e-9, max(m["p95_s"]
+        worst_x = (max(m["p95_s"] for m in st.per_pipeline.values())  # detlint: ignore[DET004] numeric extremum over values: order-free
+                   / max(1e-9, max(m["p95_s"]  # detlint: ignore[DET004] numeric extremum over values: order-free
                                    for m in ad.per_pipeline.values())))
         rows.append(("e2e_shared512/p95_improvement_adaptive_vs_static",
                      round(p95_x, 2),

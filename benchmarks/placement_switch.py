@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, duration
+from benchmarks.common import Row
 from repro.core.baselines import BASELINES
 from repro.core.simulator import run_sim
 from repro.core.trident import TridentScheduler

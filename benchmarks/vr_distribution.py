@@ -13,7 +13,7 @@ def run(quick: bool = True) -> List[Row]:
     rows: List[Row] = []
     for pid in ("flux", "hunyuanvideo"):
         res = run_sim(pid, TridentScheduler, "medium", duration(quick))
-        total = sum(res.vr_histogram.values()) or 1
+        total = sum(res.vr_histogram.values()) or 1  # detlint: ignore[DET001] int request counts: exact
         v0_share = res.vr_histogram.get(0, 0) / total
         low2 = (res.vr_histogram.get(0, 0) + res.vr_histogram.get(1, 0)) / total
         rows.append((f"vr_distribution/{pid}/v0_share", round(v0_share, 3),

@@ -4,7 +4,6 @@ three requests stage-by-stage with the real TridentServe planners.
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as C

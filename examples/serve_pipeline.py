@@ -27,7 +27,7 @@ def main():
                   args.duration)
     print(res.summary())
     print(f"  VR distribution: {res.vr_histogram}")
-    print(f"  placement timeline:")
+    print("  placement timeline:")
     for t, hist in res.placement_switches:
         print(f"    t={t:7.1f}s  {hist}")
     print(f"  engine: merged={res.engine_stats.get('merged_runs')} "

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Dict
+from typing import Dict
 
 ARCH_IDS = (
     "gemma2-9b",

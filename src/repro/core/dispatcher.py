@@ -15,9 +15,8 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import ilp
-from repro.core.placement import (AUXILIARY_PLACEMENTS, PRIMARY_PLACEMENTS,
-                                  PlacementPlan, primary_of_vr,
-                                  vr_of_primary)
+from repro.core.placement import (PRIMARY_PLACEMENTS, PlacementPlan,
+                                  primary_of_vr)
 from repro.core.profiler import COMM_GROUP_INIT, PARALLEL_DEGREES, Profiler
 from repro.core.request import DispatchPlan, Request
 
@@ -219,7 +218,11 @@ class Dispatcher:
         for g in plan.units_of_type(ptype):
             if g in idle_units:
                 by_node.setdefault(g // upn, []).append(g)
-        for node, units in sorted(by_node.items(), key=lambda kv: -len(kv[1])):
+        # node id as total tie-break: insertion is already ascending-node
+        # (units_of_type walks unit ids), so this is byte-neutral but makes
+        # the equal-count order explicit rather than stability-dependent
+        for node, units in sorted(by_node.items(),
+                                  key=lambda kv: (-len(kv[1]), kv[0])):
             if len(units) >= k:
                 return tuple(sorted(units)[:k])
         if cross_node:
@@ -299,7 +302,7 @@ class Dispatcher:
 
         decisions: List[DispatchDecision] = []
         avail = set(idle_units)
-        for ri, opt in sorted(choices.items(), key=lambda kv: -kv[1].reward):
+        for ri, opt in sorted(choices.items(), key=lambda kv: -kv[1].reward):  # detlint: ignore[DET004] choices is solver-walk-ordered; equal-reward order is BENCH-byte-frozen
             req = reqs[ri]
             prim = primary_of_vr(opt.dim)
             units = self.select_units(plan, prim, opt.usage, avail,

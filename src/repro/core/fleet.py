@@ -263,10 +263,10 @@ class FleetOrchestrator:
             raw = {p: n_nodes * max(0.0, weights.get(p, 0.0)) / total
                    for p in pids}
         base = {p: max(1, math.floor(raw[p])) for p in pids}
-        while sum(base.values()) > n_nodes:   # floors may overshoot n_nodes
+        while sum(base.values()) > n_nodes:   # floors may overshoot n_nodes  # detlint: ignore[DET001] int node counts: exact
             p = max(pids, key=lambda p: base[p])
             base[p] -= 1
-        rem = n_nodes - sum(base.values())
+        rem = n_nodes - sum(base.values())  # detlint: ignore[DET001] int node counts: exact
         order = sorted(pids, key=lambda p: -(raw[p] - math.floor(raw[p])))
         i = 0
         while rem > 0:
@@ -438,7 +438,7 @@ class FleetScheduler:
         if not prefix:
             prefix = list(trace[:256])
         w = self.orch.demand_weights(prefix)
-        total = sum(w.values())
+        total = sum(w.values())  # detlint: ignore[DET001] demand_weights dict is registry-ordered; BENCH-byte-frozen
         if total > 0:
             self.basis_shares = {p: v / total for p, v in w.items()}
         return self.orch.budgets(w)
@@ -667,7 +667,7 @@ class PredictiveFleetScheduler(AdaptiveFleetScheduler):
         fleet's windowed chip-seconds currency."""
         w = {p: pred.demand.get(p, 0.0) * self.cfg.t_win
              for p in self.orch.reg.pipelines}
-        if sum(w.values()) <= 0.0:
+        if sum(w.values()) <= 0.0:  # detlint: ignore[DET001] dict-comp over registry order: insertion-ordered
             return None
         return self.orch.budgets(self._objective_weights(fleet, tau, w))
 
@@ -706,7 +706,7 @@ class PredictiveFleetScheduler(AdaptiveFleetScheduler):
         # expires a shift that never shows at all).
         from repro.core.forecast import tv_distance
         rates = self._recent_rates(fleet, tau)
-        tot = sum(rates.values()) if rates else 0.0
+        tot = sum(rates.values()) if rates else 0.0  # detlint: ignore[DET001] rate dict is bin-fill-ordered; BENCH-byte-frozen
         if tot > 0.0 and self.basis_shares:
             obs = {p: v / tot for p, v in sorted(rates.items())}
             moved = tv_distance(obs, self.basis_shares)
@@ -778,7 +778,7 @@ class PredictiveFleetScheduler(AdaptiveFleetScheduler):
             self._fired_shares = None
             return
         rates = self._recent_rates(fleet, tau)
-        tot = sum(rates.values()) if rates else 0.0
+        tot = sum(rates.values()) if rates else 0.0  # detlint: ignore[DET001] rate dict is bin-fill-ordered; BENCH-byte-frozen
         if tot > 0.0:
             self.basis_shares = {p: v / tot
                                  for p, v in sorted(rates.items())}
@@ -1185,7 +1185,7 @@ class FleetSimulator:
             return
         prewarmed = self.prewarmed
         ttl = self.cfg.prewarm_ttl
-        for pid, lane in self.lanes.items():
+        for pid, lane in self.lanes.items():  # detlint: ignore[DET001] lanes dict is registry-ordered; reload-sum order is BENCH-byte-frozen
             sub = new_plan.subplans[pid]
             prof = lane.prof
             lane.bank_engine_stats()

@@ -201,7 +201,7 @@ class DemandForecaster:
     def confidence(self) -> float:
         """Demand-weighted mean R² across the per-pipeline fits: the
         pipelines that carry the load must be the ones the model explains."""
-        tot = sum(f.mean for f in self.fits.values())
+        tot = sum(f.mean for f in self.fits.values())  # detlint: ignore[DET001] fits dict is registry-ordered; BENCH-byte-frozen
         if tot <= 0.0:
             return 0.0
         return sum(f.mean * f.r2
@@ -224,7 +224,7 @@ class DemandForecaster:
         if conf < self.min_conf:
             return None
         d0 = self.predict_demand(tau)
-        tot0 = sum(d0.values())
+        tot0 = sum(d0.values())  # detlint: ignore[DET001] predict_demand dict is fits-ordered: insertion-ordered
         if tot0 <= 0.0:
             return None
         base = {p: v / tot0 for p, v in sorted(d0.items())}
@@ -236,7 +236,7 @@ class DemandForecaster:
         while k * step <= horizon + 1e-9:
             t = tau + k * step
             d = self.predict_demand(t)
-            tot = sum(d.values())
+            tot = sum(d.values())  # detlint: ignore[DET001] predict_demand dict is fits-ordered: insertion-ordered
             if tot > 0.0:
                 shares = {p: v / tot for p, v in sorted(d.items())}
                 tv = tv_distance(shares, base)

@@ -130,7 +130,7 @@ def _greedy(options: Sequence[Sequence[Option]], budgets: List[int],
     chosen: Dict[int, Option] = {}
     total = 0.0
     if seed:
-        for r, o in seed.items():
+        for r, o in seed.items():  # detlint: ignore[DET001] warm-start dict is solver-insertion-ordered; admission order is the algorithm
             if o.usage <= rem[o.dim]:
                 chosen[r] = o
                 rem[o.dim] -= o.usage
@@ -282,7 +282,6 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
 
 def brute_force(options: Sequence[Sequence[Option]], budgets: Sequence[int]) -> float:
     """Exhaustive reference for tests (tiny instances only)."""
-    n = len(options)
     best = 0.0
     choice_lists = [list(opts) + [None] for opts in options]
     for combo in itertools.product(*choice_lists):

@@ -339,7 +339,7 @@ class LendingBroker:
         #    just shuttle reload costs back and forth.
         lending_out = {ln.lender for ln in self.active}
         borrowing = {ln.borrower for ln in self.active}
-        borrowers = sorted(
+        borrowers = sorted(  # detlint: ignore[DET004] equal-pressure ties keep lane registry order; BENCH-byte-frozen
             (pid for pid, lane in fleet.lanes.items()
              if pressure.get(pid, 0.0) >= cfg.lend_min_pressure
              and lane.pending and pid not in lending_out),

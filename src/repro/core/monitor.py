@@ -14,11 +14,8 @@ window size — this sits on the scheduler wake-up hot path.
 from __future__ import annotations
 
 import collections
-import dataclasses
 from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.core.placement import PRIMARY_PLACEMENTS
-from repro.core.request import Request
 
 SWITCH_RATIO = 1.5
 MIN_SAMPLES = 8
@@ -242,7 +239,7 @@ class FleetMonitor:
     def demand_shares(self, tau: float) -> Dict[str, float]:
         """Windowed unit-time demand share per pipeline (sums to 1)."""
         self._trim(tau)
-        total = sum(v for v in self._demand.values() if v > 0)
+        total = sum(v for v in self._demand.values() if v > 0)  # detlint: ignore[DET001] _demand dict is record-ordered (lane order): insertion-ordered
         if total <= 0:
             return {}
         return {p: max(0.0, v) / total for p, v in self._demand.items()

@@ -12,7 +12,7 @@ Q_DC > Q_ED, the preference order is V0 ≺ V1 ≺ V2 ≺ V3.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Tuple
 
 # placement types (stage sets, order-normalized)
 EDC, DC, ED, D, E, C = "EDC", "DC", "ED", "D", "E", "C"

@@ -19,15 +19,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.request import Request
 from repro.models import diffusion, pipeline as pipe_lib, transformer
-from repro.models.common import ATTN_KINDS, ModelConfig
 
 # --- TPU v5e hardware constants (per chip) ---------------------------------
 PEAK_FLOPS = 197e12          # bf16

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 STAGES = ("E", "D", "C")
 

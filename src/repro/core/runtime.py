@@ -25,13 +25,12 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Sequence, Set, Tuple
 
 from repro.core.dispatcher import DispatchDecision
 from repro.core.placement import PlacementPlan
-from repro.core.profiler import (COMM_GROUP_INIT, DCN_BW, DISPATCH_OVERHEAD,
-                                 HOST_BW, ICI_BW, Profiler)
-from repro.core.request import DispatchPlan, Request
+from repro.core.profiler import (COMM_GROUP_INIT, DISPATCH_OVERHEAD, HOST_BW,
+                                 Profiler)
 
 CAP_HB = 1 * 2 ** 30          # handoff-buffer capacity per unit (bytes)
 

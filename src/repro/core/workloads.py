@@ -7,7 +7,6 @@ and scaled to the Steady request budget, per Appendix D.1.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 import random
 from typing import Dict, List, Optional, Sequence, Tuple

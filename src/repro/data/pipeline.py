@@ -9,7 +9,7 @@ host-local numpy; the launcher shards them onto the mesh with
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ examples); True routes to the Pallas TPU kernel (validated on CPU with
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

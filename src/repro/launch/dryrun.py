@@ -18,7 +18,7 @@ import json
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -46,7 +46,6 @@ def shardings_for(spec: specs_lib.LoweringSpec, cfg, mesh, multi_pod: bool,
     dsize = 1
     for a in daxes:
         dsize *= mesh.shape[a]
-    model = "model"
     shard = lambda t: partition.named(t, mesh)
 
     def batch_like(tree):

@@ -12,14 +12,13 @@ matching Table 2's l_proc ranges.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import common, diffusion, transformer
-from repro.models.common import ATTN_BIDIR, Array, ModelConfig
+from repro.models.common import Array, ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)

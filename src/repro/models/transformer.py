@@ -13,7 +13,6 @@ Three entry modes share the layer code:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -22,9 +21,8 @@ import jax.numpy as jnp
 from repro.kernels import ops as kops
 from repro.models import common, moe as moe_lib, ssm as ssm_lib
 from repro.models.common import (ATTN, ATTN_BIDIR, ATTN_CHUNKED, ATTN_KINDS,
-                                 ATTN_LOCAL, FFN_DENSE, FFN_MOE, MAMBA2,
-                                 RWKV6, Array, ModelConfig, dense_init,
-                                 embed_init)
+                                 ATTN_LOCAL, FFN_MOE, MAMBA2, RWKV6, Array,
+                                 ModelConfig, dense_init, embed_init)
 
 PyTree = Any
 
@@ -457,7 +455,7 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: Array, caches: list,
                 offset: Array) -> Tuple[Array, list]:
     """serve_step: ONE new token (B, 1) [or (B, K, 1) audio] against the cache."""
     x = embed_tokens(cfg, params, tokens)
-    positions = None  # decode positions derive from offset inside layers
+    # decode positions derive from offset inside the layers
     b = x.shape[0]
     pos = jnp.full((b, 1), offset, jnp.int32)
     x, new_caches, _ = _run_segments(cfg, params, x, pos, caches, "decode", offset)

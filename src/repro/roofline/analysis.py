@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

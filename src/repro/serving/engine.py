@@ -14,8 +14,7 @@ LLM analogue); this module provides the executable stages:
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

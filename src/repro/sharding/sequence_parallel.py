@@ -13,8 +13,7 @@ sequence chunks and chain recurrent states with a ppermute ladder.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

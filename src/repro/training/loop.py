@@ -6,7 +6,6 @@ load-balance auxiliary loss folded in.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any, Dict, Iterator, NamedTuple, Optional, Tuple
 

@@ -1,0 +1,33 @@
+"""DET001 negative: the sanctioned fixes for unordered float accumulation.
+
+`sorted()` pins the walk order off PYTHONHASHSEED (the PR 4 fix); integer
+counters are exact under any order; keyed-slot writes land each term in
+its own slot, so order cannot change the result.
+"""
+
+
+def reload_cost(missing, stage_load_time):
+    reload = 0.0
+    for s in sorted(missing):          # the PR 4 fix: sorted set walk
+        reload += stage_load_time(s)
+    return reload
+
+
+def tv_distance(shares, basis):
+    keys = sorted(set(shares) | set(basis))
+    return 0.5 * sum(abs(shares.get(k, 0.0) - basis.get(k, 0.0))
+                     for k in keys)
+
+
+def count_ready(pending):
+    n = 0
+    for _req in pending:               # int counter: exact, order-free
+        n += 1
+    return n
+
+
+def per_stage_cost(missing, stage_load_time):
+    cost = {}
+    for s in missing:                  # keyed slot: each term its own key
+        cost[s] = stage_load_time(s)
+    return cost

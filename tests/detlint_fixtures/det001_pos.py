@@ -1,0 +1,23 @@
+"""DET001 positive: float accumulation over unordered (set) iteration.
+
+Verbatim reduction of the PR 4 bug class (fleet._repartition reload sum,
+runtime.apply_placement downtime cost, monitor.mix_shift TV-distance):
+a float `sum()` / `+=` fed by string-set iteration follows PYTHONHASHSEED
+order, and float addition is not associative in the last ulp — so a
+threshold comparison downstream can flip run-to-run.
+"""
+
+
+def reload_cost(missing: set, stage_load_time):
+    # the fleet.py reload reduction: `missing` is a set of stage letters
+    reload = 0.0
+    for s in missing:
+        reload += stage_load_time(s)
+    return reload
+
+
+def tv_distance(shares, basis):
+    # the monitor.mix_shift reduction: set-union iteration feeding sum()
+    keys = set(shares) | set(basis)
+    return 0.5 * sum(abs(shares.get(k, 0.0) - basis.get(k, 0.0))
+                     for k in keys)

@@ -1,0 +1,20 @@
+"""DET002 negative: metrics-only wall-clock accumulation.
+
+The sanctioned trident.py pattern — the clock is read to *report* solver
+time, and the tainted value only ever flows into a metrics attribute
+(`self.solver_time += ...`); it never reaches a comparison, loop bound, or
+return, so scheduling decisions cannot depend on machine load.  Outside
+the strict zone this is clean without any suppression.
+"""
+import time
+
+
+class Scheduler:
+    def __init__(self):
+        self.solver_time = 0.0
+
+    def tick(self, solve):
+        t0 = time.perf_counter()
+        plan = solve()
+        self.solver_time += time.perf_counter() - t0   # metrics only
+        return plan

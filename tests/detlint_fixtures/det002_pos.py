@@ -1,0 +1,21 @@
+"""DET002 positive: wall-clock read reaching control flow.
+
+Verbatim reduction of the PR 5 bug: ilp.solve's anytime cap compared
+`time.perf_counter()` against a deadline inside the DFS loop, so capped
+solves stopped at a machine-load-dependent node and the same trace could
+dispatch differently across re-runs (the fix translates the cap into a
+node budget at a fixed calibration rate, NODES_PER_SECOND).
+"""
+import time
+
+
+def solve(stack, expand, time_cap=0.2):
+    t0 = time.perf_counter()
+    best = None
+    while stack:
+        if time.perf_counter() - t0 > time_cap:   # load-dependent stop node
+            break
+        node = stack.pop()
+        best = node if best is None else max(best, node)
+        stack.extend(expand(node))
+    return best

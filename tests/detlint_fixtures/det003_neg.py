@@ -1,0 +1,12 @@
+"""DET003 negative: seeded instance RNG.
+
+A `random.Random(seed)` instance owns its state: the stream is a pure
+function of the seed, untouched by other modules.
+"""
+import random
+
+
+def jitter(xs, seed=0):
+    rng = random.Random(seed)
+    rng.shuffle(xs)
+    return [x + rng.random() * 1e-6 for x in xs]

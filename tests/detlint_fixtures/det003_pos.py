@@ -1,0 +1,12 @@
+"""DET003 positive: module-level (global-state) RNG use.
+
+`random.shuffle` / `random.random` mutate the interpreter-global Mersenne
+state: any other import that touches the module RNG changes this call's
+stream, so results depend on import order and unrelated code.
+"""
+import random
+
+
+def jitter(xs):
+    random.shuffle(xs)
+    return [x + random.random() * 1e-6 for x in xs]

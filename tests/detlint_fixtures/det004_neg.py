@@ -1,0 +1,15 @@
+"""DET004 negative: deterministic selection.
+
+Either pin the walk order with `sorted()` (ties then resolve to the
+smallest element, independent of hash seed) or use a total key — a tuple
+that embeds the element itself breaks every tie deterministically.
+"""
+
+
+def pick_node(candidates: set, load: dict) -> int:
+    return max(sorted(candidates), key=lambda n: load[n])
+
+
+def pick_node_total_key(candidates: list, load: dict) -> int:
+    # ordered iterable + element-embedding tie-break key
+    return max(candidates, key=lambda n: (load[n], n))

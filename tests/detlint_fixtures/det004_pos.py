@@ -1,0 +1,11 @@
+"""DET004 positive: min/max selection over an unordered collection where
+the key can tie.
+
+`max` returns the *first* maximal element in iteration order; over a set
+with a non-injective key, which element wins a tie follows
+PYTHONHASHSEED.
+"""
+
+
+def pick_node(candidates: set, load: dict) -> int:
+    return max(candidates, key=lambda n: load[n])

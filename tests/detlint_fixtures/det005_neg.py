@@ -1,0 +1,10 @@
+"""DET005 negative: sorted set walk before mutating shared state.
+
+With the walk order pinned, the shared list's contents are a pure
+function of the set's contents.
+"""
+
+
+def drain(idle_units: set, out: list) -> None:
+    for u in sorted(idle_units):
+        out.append(u)

@@ -1,0 +1,11 @@
+"""DET005 positive: set iteration mutating shared scheduler state.
+
+Appending to an outer list while walking a set bakes hash order into the
+shared structure — every later consumer of `out` inherits the
+PYTHONHASHSEED-dependent order even if it never touches a set itself.
+"""
+
+
+def drain(idle_units: set, out: list) -> None:
+    for u in idle_units:
+        out.append(u)

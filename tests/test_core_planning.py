@@ -8,8 +8,7 @@ import repro.configs as C
 from repro.core.dispatcher import Dispatcher
 from repro.core.orchestrator import Orchestrator
 from repro.core.placement import (PLACEMENT_TYPES, PRIMARY_PLACEMENTS,
-                                  PlacementPlan, VIRTUAL_REPLICAS,
-                                  primary_of_vr)
+                                  PlacementPlan, primary_of_vr)
 from repro.core.profiler import Profiler
 from repro.core.request import Request
 
@@ -131,7 +130,6 @@ def test_aging_eventually_dispatches_late_request(profilers):
 def test_cross_node_sp_selects_across_nodes(profilers):
     """Beyond-paper: pod-wide SP combines adjacent nodes when one node
     cannot host the degree (EXPERIMENTS.md §Perf pair 4)."""
-    prof = profilers["sd3"]
     plan = PlacementPlan(["EDC"] * 32, unit_size=1, units_per_node=8)
     idle = set(range(32))
     assert Dispatcher.select_units(plan, "EDC", 16, idle) is None

@@ -1,0 +1,174 @@
+"""detlint: golden-findings fixtures, suppressions, baseline, determinism.
+
+The fixture corpus (tests/detlint_fixtures/) carries one positive and one
+negative module per rule; the positives for DET001 and DET002 are verbatim
+reductions of the two determinism bugs this repo actually shipped and fixed
+(PR 4: string-set float accumulation; PR 5: wall-clock ILP anytime cap), so
+re-introducing either class is caught here *and* by the CI gate.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from tools.detlint.engine import (apply_baseline, lint_paths, lint_source,
+                                  load_baseline, write_baseline)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join("tests", "detlint_fixtures")
+
+# (path, line, rule) for every finding in the fixture corpus — frozen with
+# the fixtures themselves
+GOLDEN = [
+    ("tests/detlint_fixtures/det001_pos.py", 14, "DET001"),
+    ("tests/detlint_fixtures/det001_pos.py", 22, "DET001"),
+    ("tests/detlint_fixtures/det002_pos.py", 16, "DET002"),
+    ("tests/detlint_fixtures/det003_pos.py", 11, "DET003"),
+    ("tests/detlint_fixtures/det003_pos.py", 12, "DET003"),
+    ("tests/detlint_fixtures/det004_pos.py", 11, "DET004"),
+    ("tests/detlint_fixtures/det005_pos.py", 10, "DET005"),
+]
+
+
+def _lint_fixture(name):
+    path = os.path.join(REPO, FIXTURES, name)
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    findings, suppressed, err = lint_source(f"{FIXTURES}/{name}", source)
+    assert err is None
+    return findings, suppressed
+
+
+def test_golden_findings_over_fixture_corpus(monkeypatch):
+    monkeypatch.chdir(REPO)
+    result = lint_paths([FIXTURES])
+    assert result.errors == []
+    got = [(f.path, f.line, f.rule) for f in result.findings]
+    assert got == GOLDEN
+
+
+@pytest.mark.parametrize("rule", ["DET001", "DET002", "DET003", "DET004",
+                                  "DET005"])
+def test_each_positive_fires_only_its_rule(rule):
+    findings, _ = _lint_fixture(f"det{rule[-3:]}_pos.py")
+    assert findings, f"{rule} positive fixture produced no findings"
+    assert {f.rule for f in findings} == {rule}
+
+
+@pytest.mark.parametrize("rule", ["DET001", "DET002", "DET003", "DET004",
+                                  "DET005"])
+def test_each_negative_is_silent(rule):
+    findings, _ = _lint_fixture(f"det{rule[-3:]}_neg.py")
+    assert findings == []
+
+
+def test_pr4_reintroduction_is_flagged():
+    """The exact PR 4 bug shape (set walk feeding float accumulation) must
+    keep firing DET001 — both the += loop and the sum() variant."""
+    findings, _ = _lint_fixture("det001_pos.py")
+    assert len(findings) == 2 and all(f.rule == "DET001" for f in findings)
+
+
+def test_pr5_reintroduction_is_flagged():
+    """The exact PR 5 bug shape (wall-clock anytime cap in a solver loop)
+    must keep firing DET002 even outside the strict zone — the taint
+    reaches a comparison that controls a break."""
+    findings, _ = _lint_fixture("det002_pos.py")
+    assert [(f.rule, f.line) for f in findings] == [("DET002", 16)]
+
+
+# ---------------------------------------------------------------------------
+# strict zone
+
+BARE_CLOCK = "import time\n\ndef stamp():\n    t = time.time()\n    log(t)\n"
+
+
+def test_strict_zone_flags_bare_wall_clock_reads():
+    findings, _, err = lint_source("src/repro/core/x.py", BARE_CLOCK,
+                                   strict=True)
+    assert err is None
+    assert [f.rule for f in findings] == ["DET002"]
+
+
+def test_non_strict_allows_bare_wall_clock_reads():
+    findings, _, err = lint_source("benchmarks/x.py", BARE_CLOCK,
+                                   strict=False)
+    assert err is None
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+SUPPRESSED = (
+    "def f(s: set):\n"
+    "    tot = 0.0\n"
+    "    for x in s:  # detlint: ignore[DET001] proven exact: int-valued\n"
+    "        tot += x\n"
+    "    return tot\n"
+)
+
+
+def test_inline_suppression_with_reason_suppresses():
+    findings, suppressed, err = lint_source("x.py", SUPPRESSED)
+    assert err is None
+    assert findings == [] and suppressed == 1
+
+
+def test_bare_suppression_without_reason_is_malformed():
+    src = SUPPRESSED.replace(" proven exact: int-valued", "")
+    findings, suppressed, _ = lint_source("x.py", src)
+    # the ignore is rejected (DET000) and does NOT silence the finding
+    assert {f.rule for f in findings} == {"DET000", "DET001"}
+    assert suppressed == 0
+
+
+def test_wrong_rule_suppression_does_not_silence():
+    src = SUPPRESSED.replace("DET001", "DET004")
+    findings, suppressed, _ = lint_source("x.py", src)
+    assert [f.rule for f in findings] == ["DET001"] and suppressed == 0
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+def test_baseline_roundtrip_grandfathers_findings(tmp_path, monkeypatch):
+    monkeypatch.chdir(REPO)
+    result = lint_paths([FIXTURES])
+    assert len(result.findings) == len(GOLDEN)
+    bl_path = str(tmp_path / "baseline.json")
+    write_baseline(bl_path, result.findings)
+
+    again = lint_paths([FIXTURES])
+    apply_baseline(again, load_baseline(bl_path))
+    assert again.findings == [] and again.baselined == len(GOLDEN)
+
+
+def test_repo_gate_is_clean(monkeypatch):
+    """The CI gate invariant: zero unsuppressed findings over the tree."""
+    monkeypatch.chdir(REPO)
+    result = lint_paths(["src/repro/core", "src/repro/serving",
+                         "benchmarks"])
+    assert result.errors == []
+    assert [(f.path, f.line, f.rule) for f in result.findings] == []
+
+
+# ---------------------------------------------------------------------------
+# self-determinism: the linter's own output must not depend on the hash seed
+
+def _run_detlint(hashseed):
+    env = dict(os.environ, PYTHONHASHSEED=str(hashseed))
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.detlint", FIXTURES, "--no-baseline"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    return proc.returncode, proc.stdout, proc.stderr
+
+
+def test_output_identical_under_arbitrary_hash_seeds():
+    rc_a, out_a, err_a = _run_detlint(0)
+    rc_b, out_b, err_b = _run_detlint(4242)
+    assert rc_a == rc_b == 1          # fixtures carry findings by design
+    assert out_a == out_b
+    assert err_a == err_b
+    assert out_a.count("\n") == len(GOLDEN)

@@ -14,9 +14,8 @@ from repro.core.monitor import FleetMonitor
 from repro.core.profiler import Profiler
 from repro.core.simulator import SimConfig, Simulator
 from repro.core.trident import TridentScheduler
-from repro.core.fleet import (FLEET_SCHEDULERS, AdaptiveFleetScheduler,
-                              FleetConfig, FleetOrchestrator, FleetSimulator,
-                              FleetScheduler, PipelineRegistry, run_fleet)
+from repro.core.fleet import (FleetConfig, FleetOrchestrator, PipelineRegistry,
+                              run_fleet)
 
 FLIP = ((0.5, {"sd3": 1.5, "flux": 0.3}),
         (1.0, {"sd3": 0.3, "flux": 2.0}))

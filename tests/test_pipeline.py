@@ -1,6 +1,5 @@
 """Diffusion pipeline: stage split == end-to-end; serving engine wall-clock."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -4,10 +4,9 @@ import pytest
 import repro.configs as C
 from repro.core.dispatcher import DispatchDecision
 from repro.core.placement import PlacementPlan
-from repro.core.profiler import DISPATCH_OVERHEAD, Profiler
+from repro.core.profiler import Profiler
 from repro.core.request import Request
 from repro.core.runtime import CAP_HB, RuntimeEngine
-from repro.core.simulator import SimConfig
 
 
 @pytest.fixture(scope="module")

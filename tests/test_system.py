@@ -5,7 +5,6 @@ planners — the same Orchestrator/Dispatcher decisions as the simulator, but
 stage execution is actual model computation on CPU.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as C
 from repro.data import pipeline as dp

@@ -1,0 +1,31 @@
+"""detlint — AST determinism-and-contract linter for the sim core.
+
+Encodes the repo's reproducibility invariants (docs/determinism.md) as
+named, machine-checked rules over ``src/repro/core``, ``src/repro/serving``
+and ``benchmarks``:
+
+=======  ==================================================================
+DET001   order-sensitive accumulation fed by unordered (set/dict) iteration
+DET002   wall-clock read reaching control flow, or bare in the strict core
+DET003   module-level (global-state) RNG use
+DET004   min/max/sort selection over unordered collections (hash-order ties)
+DET005   unordered iteration mutating shared scheduler state unsorted
+=======  ==================================================================
+
+Stdlib-only (``ast`` + ``tokenize``): a visitor with lightweight
+intra-function dataflow — collection-kind inference for DET001/4/5 and
+wall-clock taint for DET002.  Findings carry stable rule IDs and
+``file:line:col`` anchors; ``# detlint: ignore[DETnnn] <reason>``
+suppresses on the flagged line; a committed baseline file grandfathers
+accepted findings; ``--format=github`` emits workflow annotations.
+
+The linter's own output is deterministic under any ``PYTHONHASHSEED``
+(tests/test_detlint.py proves it) — a determinism gate that itself
+depended on hash order would be worse than none.
+"""
+from tools.detlint.engine import lint_paths, lint_source
+from tools.detlint.findings import Finding, RULES
+
+__all__ = ["Finding", "RULES", "lint_paths", "lint_source"]
+
+__version__ = "1.0"

@@ -1,0 +1,5 @@
+import sys
+
+from tools.detlint.cli import main
+
+sys.exit(main())

@@ -1,0 +1,92 @@
+"""detlint command line.
+
+    python -m tools.detlint src/repro/core src/repro/serving benchmarks
+
+Exit codes: 0 clean, 1 findings, 2 usage/IO/parse errors.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from tools.detlint.engine import (DEFAULT_STRICT_PREFIXES, apply_baseline,
+                                  lint_paths, load_baseline, write_baseline)
+from tools.detlint.findings import RULES
+
+_DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.detlint",
+        description="AST determinism-and-contract linter for the sim core "
+                    "(rules DET001-DET005, docs/determinism.md).")
+    p.add_argument("paths", nargs="*", help="files or directories to lint")
+    p.add_argument("--format", choices=("text", "github"), default="text",
+                   help="finding output format (github = workflow "
+                        "::error annotations)")
+    p.add_argument("--baseline", default=_DEFAULT_BASELINE,
+                   help="accepted-findings baseline file "
+                        "(default: tools/detlint/baseline.json)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline file")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="write current unsuppressed findings to the "
+                        "baseline file and exit 0")
+    p.add_argument("--strict-prefix", action="append", default=None,
+                   metavar="PREFIX",
+                   help="path prefix treated as the strict zone for DET002 "
+                        "(repeatable; default: src/repro/core, "
+                        "src/repro/serving)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule table and exit")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(RULES):
+            title, contract = RULES[rule]
+            print(f"{rule}  {title}")
+            print(f"        {contract}")
+        return 0
+
+    if not args.paths:
+        print("detlint: no paths given (try: python -m tools.detlint "
+              "src/repro/core src/repro/serving benchmarks)", file=sys.stderr)
+        return 2
+
+    strict = tuple(args.strict_prefix) if args.strict_prefix else \
+        DEFAULT_STRICT_PREFIXES
+    result = lint_paths(args.paths, strict_prefixes=strict)
+
+    for err in result.errors:
+        print(f"detlint: error: {err}", file=sys.stderr)
+
+    if args.update_baseline:
+        write_baseline(args.baseline, result.findings)
+        print(f"detlint: baseline written to {args.baseline} "
+              f"({len(result.findings)} findings)")
+        return 0 if not result.errors else 2
+
+    if not args.no_baseline:
+        apply_baseline(result, load_baseline(args.baseline))
+
+    for f in result.findings:
+        print(f.format_github() if args.format == "github"
+              else f.format_text())
+
+    tail = (f"detlint: {result.files} files, "
+            f"{len(result.findings)} finding"
+            f"{'' if len(result.findings) == 1 else 's'} "
+            f"({result.suppressed} suppressed inline, "
+            f"{result.baselined} baselined)")
+    print(tail, file=sys.stderr)
+
+    if result.errors:
+        return 2
+    return 1 if result.findings else 0

@@ -1,0 +1,298 @@
+"""Lightweight intra-function dataflow for detlint.
+
+Two analyses, both deliberately shallow (statement-order walk, last
+writer wins at joins — a lint, not a verifier):
+
+* **collection kinds** — classifies expressions as SET / DICT / ORDERED /
+  UNKNOWN so the iteration rules (DET001/4/5) know which loops follow
+  hash order.  Sources of truth: literals and comprehensions, builtin
+  constructor calls, set-algebra operators, ``.keys()``-family views,
+  annotations (``x: Set[int]``), and per-class ``self.attr`` assignment
+  joins collected in a pre-pass.
+* **wall-clock taint** — marks names derived from ``time.*`` /
+  ``datetime.now`` reads so DET002 can flag the control-flow sinks they
+  reach (comparisons, branch tests, loop bounds, returns) while leaving
+  metrics-only accumulation alone.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional
+
+# ---------------------------------------------------------------------------
+# collection kinds
+
+SET = "set"
+DICT = "dict"
+ORDERED = "ordered"
+UNKNOWN = "unknown"
+
+UNORDERED = (SET, DICT)
+
+# annotation / constructor name -> kind
+_ANNOTATION_KINDS = {
+    "set": SET, "Set": SET, "frozenset": SET, "FrozenSet": SET,
+    "AbstractSet": SET, "MutableSet": SET,
+    "dict": DICT, "Dict": DICT, "Mapping": DICT, "MutableMapping": DICT,
+    "DefaultDict": DICT, "defaultdict": DICT, "Counter": DICT,
+    "OrderedDict": DICT, "ChainMap": DICT,
+    "list": ORDERED, "List": ORDERED, "tuple": ORDERED, "Tuple": ORDERED,
+    "Sequence": ORDERED, "MutableSequence": ORDERED, "Deque": ORDERED,
+    "deque": ORDERED, "str": ORDERED,
+}
+
+_CONSTRUCTOR_KINDS = {
+    "set": SET, "frozenset": SET,
+    "dict": DICT, "defaultdict": DICT, "Counter": DICT, "OrderedDict": DICT,
+    "sorted": ORDERED, "range": ORDERED, "str": ORDERED, "repr": ORDERED,
+}
+
+# builtins that materialize / re-wrap their input's iteration order
+_ORDER_PRESERVING = {"list", "tuple", "iter", "reversed", "enumerate"}
+
+_DICT_VIEW_METHODS = {"keys", "values", "items"}
+
+# set methods that return a new set
+_SET_ALGEBRA_METHODS = {"union", "intersection", "difference",
+                        "symmetric_difference", "copy"}
+
+
+def join(a: str, b: str) -> str:
+    """Kind join for merge points: agree -> that kind; any unordered wins
+    over UNKNOWN/ORDERED (conservative for a determinism lint)."""
+    if a == b:
+        return a
+    for k in (SET, DICT):
+        if k in (a, b):
+            return k
+    return UNKNOWN
+
+
+def annotation_kind(node: Optional[ast.expr]) -> str:
+    """Kind implied by a type annotation expression, if recognizable."""
+    if node is None:
+        return UNKNOWN
+    if isinstance(node, ast.Subscript):            # Set[int], Dict[str, float]
+        base = node.value
+    else:
+        base = node
+    if isinstance(base, ast.Attribute):            # typing.Set, t.Dict
+        name = base.attr
+    elif isinstance(base, ast.Name):
+        name = base.id
+    elif isinstance(base, ast.Constant) and isinstance(base.value, str):
+        try:                                       # string annotation
+            return annotation_kind(ast.parse(base.value, mode="eval").body)
+        except SyntaxError:
+            return UNKNOWN
+    else:
+        return UNKNOWN
+    if isinstance(node, ast.Subscript) and name == "Optional":
+        if isinstance(node.slice, ast.expr):
+            return annotation_kind(node.slice)
+    return _ANNOTATION_KINDS.get(name, UNKNOWN)
+
+
+class KindEnv:
+    """Name -> kind map for one function scope (plus the class-attribute
+    env for ``self.attr`` loads, shared across the class's methods)."""
+
+    def __init__(self, attrs: Optional[Dict[str, str]] = None,
+                 self_name: Optional[str] = None,
+                 fallback_returns: Optional[Dict[str, str]] = None):
+        self.names: Dict[str, str] = {}
+        self.attrs = attrs or {}
+        self.self_name = self_name
+        # project-wide {function name -> annotated return kind} fallback so
+        # `for u in engine.idle_units(t)` classifies across module boundaries
+        self.fallback_returns = fallback_returns or {}
+
+    def copy_names(self) -> Dict[str, str]:
+        return dict(self.names)
+
+    # -- classification ------------------------------------------------------
+
+    def kind_of(self, node: ast.expr) -> str:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return SET
+        if isinstance(node, (ast.Dict, ast.DictComp)):
+            return DICT
+        if isinstance(node, (ast.List, ast.Tuple, ast.JoinedStr, ast.Constant)):
+            return ORDERED
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+            # a list built by iterating a set inherits the hash order
+            return self.kind_of(node.generators[0].iter)
+        if isinstance(node, ast.Name):
+            return self.names.get(node.id, UNKNOWN)
+        if isinstance(node, ast.Attribute):
+            if (self.self_name is not None
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == self.self_name):
+                return self.attrs.get(node.attr, UNKNOWN)
+            return UNKNOWN
+        if isinstance(node, ast.BinOp):
+            if isinstance(node.op, (ast.BitOr, ast.BitAnd, ast.BitXor, ast.Sub)):
+                left, right = self.kind_of(node.left), self.kind_of(node.right)
+                if SET in (left, right):
+                    return SET
+                if isinstance(node.op, ast.BitOr) and DICT in (left, right):
+                    return DICT        # PEP 584 dict merge
+            return UNKNOWN
+        if isinstance(node, ast.IfExp):
+            return join(self.kind_of(node.body), self.kind_of(node.orelse))
+        if isinstance(node, ast.Call):
+            return self._call_kind(node)
+        if isinstance(node, ast.Starred):
+            return self.kind_of(node.value)
+        if isinstance(node, ast.Await):
+            return self.kind_of(node.value)
+        return UNKNOWN
+
+    def _call_kind(self, node: ast.Call) -> str:
+        func = node.func
+        if isinstance(func, ast.Name):
+            name = func.id
+            if name in _CONSTRUCTOR_KINDS:
+                # set(xs) is a set no matter what xs was; sorted(s) launders
+                return _CONSTRUCTOR_KINDS[name]
+            if name in _ORDER_PRESERVING:
+                if not node.args:
+                    return ORDERED
+                return self.kind_of(node.args[0])
+            if name in ("map", "filter", "zip"):
+                kinds = [self.kind_of(a) for a in node.args]
+                out = ORDERED
+                for k in kinds:
+                    out = join(out, k) if k in UNORDERED else out
+                return out
+            return self.fallback_returns.get(name, UNKNOWN)
+        if isinstance(func, ast.Attribute):
+            recv_kind = self.kind_of(func.value)
+            if func.attr in _DICT_VIEW_METHODS:
+                # contract: dict views are unordered unless the dict's
+                # insertion order is itself proven — sorted() to be safe
+                return DICT
+            if func.attr in _SET_ALGEBRA_METHODS and recv_kind == SET:
+                return SET
+            if func.attr == "copy":
+                return recv_kind
+            if func.attr in ("most_common",):      # Counter.most_common sorts
+                return ORDERED
+            if func.attr == "chain":               # itertools.chain
+                out = ORDERED
+                for a in node.args:
+                    k = self.kind_of(a)
+                    out = join(out, k) if k in UNORDERED else out
+                return out
+            return self.fallback_returns.get(func.attr, UNKNOWN)
+        return UNKNOWN
+
+    # -- updates -------------------------------------------------------------
+
+    def assign(self, target: ast.expr, kind: str) -> None:
+        if isinstance(target, ast.Name):
+            self.names[target.id] = kind
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self.assign(elt, UNKNOWN)
+        # attribute / subscript stores don't update the flow-insensitive
+        # class env (that comes from the class pre-pass)
+
+
+class ClassAttrCollector(ast.NodeVisitor):
+    """Pre-pass over a ClassDef: join every ``self.attr = <expr>`` (and
+    class-level annotation) into an attr -> kind map for the methods."""
+
+    def __init__(self) -> None:
+        self.attrs: Dict[str, str] = {}
+        self._env = KindEnv()   # empty name env: literals/constructors only
+
+    def collect(self, node: ast.ClassDef) -> Dict[str, str]:
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+                self._note(stmt.target.id, annotation_kind(stmt.annotation))
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self_name = stmt.args.args[0].arg if stmt.args.args else None
+                if self_name:
+                    for sub in ast.walk(stmt):
+                        self._visit_store(sub, self_name)
+        return self.attrs
+
+    def _visit_store(self, node: ast.AST, self_name: str) -> None:
+        if isinstance(node, ast.Assign):
+            kind = self._env.kind_of(node.value)
+            for tgt in node.targets:
+                self._note_self_attr(tgt, self_name, kind)
+        elif isinstance(node, ast.AnnAssign):
+            self._note_self_attr(node.target, self_name,
+                                 annotation_kind(node.annotation))
+
+    def _note_self_attr(self, tgt: ast.expr, self_name: str, kind: str) -> None:
+        if (isinstance(tgt, ast.Attribute) and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == self_name):
+            self._note(tgt.attr, kind)
+
+    def _note(self, attr: str, kind: str) -> None:
+        if attr in self.attrs:
+            self.attrs[attr] = join(self.attrs[attr], kind)
+        else:
+            self.attrs[attr] = kind
+
+
+# ---------------------------------------------------------------------------
+# wall-clock taint
+
+# time-module functions whose return value is wall/CPU clock state
+WALL_CLOCK_TIME_FUNCS = {
+    "time", "time_ns", "perf_counter", "perf_counter_ns", "monotonic",
+    "monotonic_ns", "process_time", "process_time_ns", "thread_time",
+    "thread_time_ns", "clock_gettime", "clock_gettime_ns",
+}
+# datetime constructors reading the clock
+WALL_CLOCK_DT_FUNCS = {"now", "utcnow", "today"}
+
+
+class TaintEnv:
+    """Set of local names holding wall-clock-derived values."""
+
+    def __init__(self, is_wall_call) -> None:
+        self.tainted: set = set()
+        self._is_wall_call = is_wall_call   # Call -> bool (import-aware)
+
+    def is_tainted(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Call):
+            if self._is_wall_call(node):
+                return True
+            # min(cap, elapsed) etc. propagate through builtins we can name
+            if isinstance(node.func, ast.Name) and node.func.id in (
+                    "min", "max", "abs", "round", "int", "float"):
+                return any(self.is_tainted(a) for a in node.args)
+            return False
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, ast.Compare):
+            return self.is_tainted(node.left) or any(
+                self.is_tainted(c) for c in node.comparators)
+        return False
+
+    def assign(self, target: ast.expr, value: ast.expr) -> None:
+        if isinstance(target, ast.Name):
+            if self.is_tainted(value):
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            # t0, t1 = perf_counter(), perf_counter() — taint all elements
+            tainted = self.is_tainted(value)
+            for elt in target.elts:
+                if isinstance(elt, ast.Name):
+                    if tainted:
+                        self.tainted.add(elt.id)
+                    else:
+                        self.tainted.discard(elt.id)

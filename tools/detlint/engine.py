@@ -1,0 +1,179 @@
+"""detlint engine: file discovery, per-module runs, suppressions, baseline.
+
+Everything here is deterministic under any ``PYTHONHASHSEED``: files are
+walked in sorted order, findings are sorted by (path, line, col, rule),
+and no output is derived from set/dict iteration order.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from tools.detlint import dataflow as df
+from tools.detlint.findings import Finding
+from tools.detlint.rules import ModuleChecker, collect_return_kinds
+from tools.detlint.suppress import parse_suppressions
+
+# the strict zone: bare wall-clock reads (DET002) are flagged here even
+# when the taint never reaches a control-flow sink
+DEFAULT_STRICT_PREFIXES = ("src/repro/core", "src/repro/serving")
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]            # unsuppressed, not yet baselined
+    suppressed: int                    # inline-ignored findings
+    baselined: int = 0                 # grandfathered by the baseline file
+    files: int = 0
+    errors: List[str] = dataclasses.field(default_factory=list)
+
+
+def _norm(path: str) -> str:
+    rel = os.path.relpath(path)
+    return rel.replace(os.sep, "/")
+
+
+def discover(paths: Sequence[str]) -> Tuple[List[str], List[str]]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: List[str] = []
+    errors: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs.sort()
+                if "__pycache__" in dirs:
+                    dirs.remove("__pycache__")
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        out.append(_norm(os.path.join(root, name)))
+        elif os.path.isfile(p):
+            out.append(_norm(p))
+        else:
+            errors.append(f"{p}: no such file or directory")
+    return sorted(set(out)), errors
+
+
+def is_strict(path: str, strict_prefixes: Sequence[str]) -> bool:
+    norm = path.replace(os.sep, "/")
+    return any(norm.startswith(pref.rstrip("/") + "/")
+               or norm == pref.rstrip("/") for pref in strict_prefixes)
+
+
+def lint_source(path: str, source: str, strict: bool = False,
+                return_kinds: Optional[Dict[str, str]] = None,
+                ) -> Tuple[List[Finding], int, Optional[str]]:
+    """Lint one module's source.
+
+    Returns (unsuppressed findings, suppressed count, parse error).
+    """
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [], 0, f"{path}:{exc.lineno or 0}: syntax error: {exc.msg}"
+    checker = ModuleChecker(path, tree, source.splitlines(), strict,
+                            return_kinds=return_kinds)
+    raw = checker.run()
+    sup = parse_suppressions(source)
+    findings: List[Finding] = []
+    suppressed = 0
+    for f in raw:
+        extent = getattr(f, "_extent", (f.line, f.line))
+        if sup.covers(f.rule, extent):
+            suppressed += 1
+        else:
+            findings.append(f)
+    for line, problem in sup.malformed:
+        snippet = (source.splitlines()[line - 1]
+                   if line - 1 < len(source.splitlines()) else "")
+        findings.append(Finding(rule="DET000", path=path, line=line, col=0,
+                                message=problem, snippet=snippet))
+    findings.sort(key=Finding.sort_key)
+    return findings, suppressed, None
+
+
+def lint_paths(paths: Sequence[str],
+               strict_prefixes: Sequence[str] = DEFAULT_STRICT_PREFIXES,
+               ) -> LintResult:
+    files, errors = discover(paths)
+    sources: List[Tuple[str, str]] = []
+    for path in files:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                sources.append((path, fh.read()))
+        except OSError as exc:
+            errors.append(f"{path}: {exc}")
+
+    # project-wide pre-pass: annotated return kinds from every scanned file
+    return_kinds: Dict[str, str] = {}
+    for path, source in sources:
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError:
+            continue
+        for name, kind in collect_return_kinds(tree).items():
+            if name in return_kinds:
+                return_kinds[name] = df.join(return_kinds[name], kind)
+            else:
+                return_kinds[name] = kind
+
+    result = LintResult(findings=[], suppressed=0, files=len(sources),
+                        errors=errors)
+    for path, source in sources:
+        strict = is_strict(path, strict_prefixes)
+        findings, suppressed, err = lint_source(
+            path, source, strict=strict, return_kinds=return_kinds)
+        if err is not None:
+            result.errors.append(err)
+        result.findings.extend(findings)
+        result.suppressed += suppressed
+    result.findings.sort(key=Finding.sort_key)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+def load_baseline(path: str) -> Optional[Dict[str, int]]:
+    """Baseline file -> {fingerprint: allowed multiplicity}."""
+    if not os.path.isfile(path):
+        return None
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    counts: Dict[str, int] = {}
+    for fp in data.get("findings", []):
+        counts[fp] = counts.get(fp, 0) + 1
+    return counts
+
+
+def apply_baseline(result: LintResult,
+                   baseline: Optional[Dict[str, int]]) -> None:
+    """Drop findings the baseline grandfathers (by fingerprint, counted)."""
+    if not baseline:
+        return
+    remaining = dict(baseline)
+    kept: List[Finding] = []
+    for f in result.findings:
+        fp = f.fingerprint()
+        if remaining.get(fp, 0) > 0:
+            remaining[fp] -= 1
+            result.baselined += 1
+        else:
+            kept.append(f)
+    result.findings = kept
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    fps = sorted(f.fingerprint() for f in findings)
+    payload = {
+        "comment": ("detlint accepted-findings baseline; regenerate with "
+                    "`python -m tools.detlint --update-baseline <paths>`. "
+                    "The gate target is an empty list — prefer fixing or "
+                    "inline-suppressing with a reason."),
+        "findings": fps,
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")

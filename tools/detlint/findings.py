@@ -1,0 +1,73 @@
+"""Finding record + the rule registry (stable IDs, one-line contracts)."""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Tuple
+
+# Rule registry: id -> (title, contract sentence).  IDs are stable and
+# append-only; retired rules keep their number (never reuse).
+RULES = {
+    "DET001": (
+        "unordered-float-accumulation",
+        "Order-sensitive accumulation (+=, sum(), math.fsum) fed by iteration "
+        "over a set/dict/.keys()/.values()/.items() with no sorted() wrapper; "
+        "float addition is not associative, so the result follows "
+        "PYTHONHASHSEED.",
+    ),
+    "DET002": (
+        "wall-clock-control-flow",
+        "A time.time/perf_counter/monotonic/datetime.now read whose result "
+        "reaches a comparison, branch, loop bound, or return — or any bare "
+        "wall-clock read inside the strict core, where even metrics-only use "
+        "must carry an explicit suppression.",
+    ),
+    "DET003": (
+        "global-rng",
+        "Module-level RNG state (random.*, np.random.*) is shared and "
+        "seed-order dependent; use an explicitly seeded random.Random / "
+        "np.random.Generator / jax.random key instead.",
+    ),
+    "DET004": (
+        "unordered-selection",
+        "min/max/sort over an unordered collection resolves ties (or a "
+        "key-stable sort resolves equal keys) by hash iteration order; "
+        "iterate sorted(...) or make the ordering total.",
+    ),
+    "DET005": (
+        "unordered-iteration-mutates-state",
+        "Iteration over a set/dict mutating shared scheduler state "
+        "(placement, lane, broker, accumulators) without a sorted() ordering "
+        "makes the mutation sequence follow PYTHONHASHSEED.",
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # DETnnn
+    path: str          # posix-style path as given on the command line
+    line: int          # 1-based
+    col: int           # 0-based (ast convention)
+    message: str
+    snippet: str = ""  # stripped source line, for baseline fingerprints
+
+    def sort_key(self) -> Tuple[str, int, int, str]:
+        return (self.path, self.line, self.col, self.rule)
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline file.
+
+        Hashing the stripped source line (not the line number) keeps
+        baseline entries stable across unrelated edits above the finding.
+        """
+        digest = hashlib.sha1(self.snippet.strip().encode()).hexdigest()[:12]
+        return f"{self.path}:{self.rule}:{digest}"
+
+    def format_text(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.rule} {self.message}"
+
+    def format_github(self) -> str:
+        # '::error' annotation lines render inline on the PR diff
+        return (f"::error file={self.path},line={self.line},"
+                f"title=detlint {self.rule}::{self.message}")

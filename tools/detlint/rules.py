@@ -1,0 +1,642 @@
+"""The detlint rule checker: one ordered AST walk per module.
+
+Rules (tools/detlint/findings.py has the registry; docs/determinism.md
+the contract rationale):
+
+* DET001 — order-sensitive accumulation (``+=``/``x = x + v`` on
+  non-counter values, ``sum()``, ``math.fsum``) fed by iteration over a
+  set or dict view without a ``sorted()`` wrapper.
+* DET002 — wall-clock reads.  In the strict zone (``src/repro/core``,
+  ``src/repro/serving``) every read is flagged — metrics-only use must
+  carry the canonical suppression.  Everywhere, a wall-clock-derived
+  value reaching a comparison, branch test, loop bound, or (strict zone)
+  return is flagged at the sink.
+* DET003 — module-level RNG state (``random.*``, ``np.random.*``).
+* DET004 — hash-order tie-breaking: ``min``/``max`` over an unordered
+  collection, or a stable ``sorted(..., key=...)``/``.sort(key=...)``
+  whose equal-key runs preserve hash order.  ``sorted(u)`` with no key
+  is the sanctioned fix and is never flagged.
+* DET005 — iteration over a **set** (hash-ordered) that mutates shared
+  state: outer-name rebinding, attribute/subscript stores, list appends,
+  dict insertions, yields.  Dict iteration is exempt here by a
+  compositional argument: dicts are insertion-ordered, and DET005 itself
+  guarantees insertions never happen in hash order — so a clean tree
+  keeps every dict deterministic by construction (see docs).
+
+Set-content mutations (``seen.add(x)`` etc.) inside set loops are *not*
+flagged: set content is order-free, only its iteration is hazardous, and
+that iteration is checked where it happens.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.detlint import dataflow as df
+from tools.detlint.findings import Finding
+
+# methods that imprint iteration order onto shared ordered state
+_ORDER_SENSITIVE_METHODS = {
+    "append", "appendleft", "extend", "insert", "setdefault", "update",
+    "push", "put", "put_nowait", "heappush", "__setitem__",
+}
+# content mutations that are order-free when the receiver is a set
+_SET_SAFE_METHODS = {
+    "add", "discard", "remove", "clear", "update", "pop",
+    "difference_update", "intersection_update",
+    "symmetric_difference_update",
+}
+# numpy constructors that are fine (explicitly seeded / bit generators)
+_NP_RANDOM_OK = {"Generator", "PCG64", "Philox", "SFC64", "MT19937"}
+_NP_RANDOM_OK_WITH_ARGS = {"default_rng", "RandomState"}
+
+
+class _Scope:
+    """Per-function analysis state: collection kinds + wall-clock taint."""
+
+    def __init__(self, kinds: df.KindEnv, taint: df.TaintEnv):
+        self.kinds = kinds
+        self.taint = taint
+
+
+class ModuleChecker:
+    """Runs every DET rule over one parsed module, in source order."""
+
+    def __init__(self, path: str, tree: ast.Module, source_lines: List[str],
+                 strict: bool,
+                 return_kinds: Optional[Dict[str, str]] = None):
+        self.path = path
+        self.tree = tree
+        self.lines = source_lines
+        self.strict = strict
+        # cross-module fallback: function/method name -> annotated return kind
+        self.return_kinds = return_kinds or {}
+        self.findings: List[Finding] = []
+        # import-alias maps (module-wide; nested imports included)
+        self.time_mods: Set[str] = set()
+        self.wall_direct: Set[str] = set()
+        self.dt_mods: Set[str] = set()
+        self.dt_classes: Set[str] = set()
+        self.random_mods: Set[str] = set()
+        self.random_direct: Set[str] = set()
+        self.numpy_mods: Set[str] = set()
+        self.np_random_mods: Set[str] = set()
+        self.fsum_direct: Set[str] = set()
+        self.math_mods: Set[str] = set()
+
+    # -- entry ---------------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        self._collect_imports()
+        module_scope = _Scope(
+            df.KindEnv(fallback_returns=self.return_kinds),
+            df.TaintEnv(self._is_wall_call))
+        self._exec_block(self.tree.body, module_scope)
+        return self.findings
+
+    # -- imports -------------------------------------------------------------
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound = alias.asname or alias.name.split(".")[0]
+                    if alias.name == "time":
+                        self.time_mods.add(bound)
+                    elif alias.name == "datetime":
+                        self.dt_mods.add(bound)
+                    elif alias.name == "random":
+                        self.random_mods.add(bound)
+                    elif alias.name == "numpy":
+                        self.numpy_mods.add(bound)
+                    elif alias.name == "numpy.random":
+                        self.np_random_mods.add(alias.asname or "numpy")
+                    elif alias.name == "math":
+                        self.math_mods.add(bound)
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                for alias in node.names:
+                    bound = alias.asname or alias.name
+                    if mod == "time" and alias.name in df.WALL_CLOCK_TIME_FUNCS:
+                        self.wall_direct.add(bound)
+                    elif mod == "datetime" and alias.name == "datetime":
+                        self.dt_classes.add(bound)
+                    elif mod == "random" and alias.name not in (
+                            "Random", "SystemRandom"):
+                        self.random_direct.add(bound)
+                    elif mod == "numpy" and alias.name == "random":
+                        self.np_random_mods.add(bound)
+                    elif mod == "math" and alias.name == "fsum":
+                        self.fsum_direct.add(bound)
+
+    # -- findings ------------------------------------------------------------
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        end = getattr(node, "end_lineno", line) or line
+        snippet = self.lines[line - 1] if line - 1 < len(self.lines) else ""
+        f = Finding(rule=rule, path=self.path, line=line, col=col,
+                    message=message, snippet=snippet)
+        # suppression comments may sit on any line of the flagged construct's
+        # header (multi-line calls / for-headers); record the extent
+        object.__setattr__(f, "_extent", (line, end))
+        self.findings.append(f)
+
+    # -- statement executor --------------------------------------------------
+
+    def _exec_block(self, body: List[ast.stmt], scope: _Scope) -> None:
+        for stmt in body:
+            self._exec_stmt(stmt, scope)
+
+    def _exec_stmt(self, stmt: ast.stmt, scope: _Scope) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._check_function(stmt, attrs=scope.kinds.attrs)
+            return
+        if isinstance(stmt, ast.ClassDef):
+            attrs = df.ClassAttrCollector().collect(stmt)
+            class_scope = _Scope(
+                df.KindEnv(attrs=attrs, fallback_returns=self.return_kinds),
+                df.TaintEnv(self._is_wall_call))
+            self._exec_block(stmt.body, class_scope)
+            return
+
+        if isinstance(stmt, ast.Assign):
+            self._scan_expr(stmt.value, scope)
+            kind = scope.kinds.kind_of(stmt.value)
+            for tgt in stmt.targets:
+                self._scan_store_target(tgt, scope)
+                scope.kinds.assign(tgt, kind)
+                scope.taint.assign(tgt, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._scan_expr(stmt.value, scope)
+                kind = scope.kinds.kind_of(stmt.value)
+                if kind == df.UNKNOWN:
+                    kind = df.annotation_kind(stmt.annotation)
+                scope.kinds.assign(stmt.target, kind)
+                scope.taint.assign(stmt.target, stmt.value)
+            else:
+                scope.kinds.assign(stmt.target,
+                                   df.annotation_kind(stmt.annotation))
+        elif isinstance(stmt, ast.AugAssign):
+            self._scan_expr(stmt.value, scope)
+            if (isinstance(stmt.target, ast.Name)
+                    and scope.taint.is_tainted(stmt.value)):
+                scope.taint.tainted.add(stmt.target.id)
+            # attribute += wall-clock is the sanctioned metrics pattern:
+            # no sink, no taint tracking through attributes
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._scan_expr(stmt.value, scope)
+                if self.strict and scope.taint.is_tainted(stmt.value):
+                    self._emit("DET002", stmt,
+                               "wall-clock-derived value returned from a "
+                               "strict-core function; callers may branch on "
+                               "it — return a deterministic quantity (node "
+                               "budget, event count) instead")
+        elif isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test, scope)
+            self._check_truthiness_sink(stmt.test, scope, "branch test")
+            self._exec_block(stmt.body, scope)
+            self._exec_block(stmt.orelse, scope)
+        elif isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test, scope)
+            self._check_truthiness_sink(stmt.test, scope, "while condition")
+            self._exec_block(stmt.body, scope)
+            self._exec_block(stmt.orelse, scope)
+        elif isinstance(stmt, ast.For):
+            self._exec_for(stmt, scope)
+        elif isinstance(stmt, ast.AsyncFor):
+            self._scan_expr(stmt.iter, scope)
+            self._exec_block(stmt.body, scope)
+            self._exec_block(stmt.orelse, scope)
+        elif isinstance(stmt, ast.With) or isinstance(stmt, ast.AsyncWith):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr, scope)
+            self._exec_block(stmt.body, scope)
+        elif isinstance(stmt, ast.Try):
+            self._exec_block(stmt.body, scope)
+            for handler in stmt.handlers:
+                self._exec_block(handler.body, scope)
+            self._exec_block(stmt.orelse, scope)
+            self._exec_block(stmt.finalbody, scope)
+        elif isinstance(stmt, (ast.Expr, ast.Assert, ast.Raise, ast.Delete)):
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._scan_expr(child, scope)
+        # Pass/Break/Continue/Import/Global/Nonlocal: nothing to do
+
+    def _scan_store_target(self, tgt: ast.expr, scope: _Scope) -> None:
+        """Subscript/attribute store targets contain load expressions too."""
+        if isinstance(tgt, ast.Subscript):
+            self._scan_expr(tgt.value, scope)
+            self._scan_expr(tgt.slice, scope)
+        elif isinstance(tgt, ast.Attribute):
+            self._scan_expr(tgt.value, scope)
+
+    # -- functions -----------------------------------------------------------
+
+    def _check_function(self, node, attrs: Dict[str, str]) -> None:
+        kinds = df.KindEnv(attrs=attrs,
+                           self_name=(node.args.args[0].arg
+                                      if node.args.args else None),
+                           fallback_returns=self.return_kinds)
+        all_args = (node.args.posonlyargs + node.args.args
+                    + node.args.kwonlyargs)
+        for arg in all_args:
+            kinds.names[arg.arg] = df.annotation_kind(arg.annotation)
+        scope = _Scope(kinds, df.TaintEnv(self._is_wall_call))
+        self._exec_block(node.body, scope)
+
+    # -- the For rules (DET001 / DET005) -------------------------------------
+
+    def _exec_for(self, node: ast.For, scope: _Scope) -> None:
+        self._scan_expr(node.iter, scope)
+        self._check_range_bound_sink(node.iter, scope)
+        iter_kind = scope.kinds.kind_of(node.iter)
+        scope.kinds.assign(node.target, df.UNKNOWN)
+        if iter_kind in df.UNORDERED:
+            self._check_unordered_loop(node, scope, iter_kind)
+        self._exec_block(node.body, scope)
+        self._exec_block(node.orelse, scope)
+
+    def _check_unordered_loop(self, node: ast.For, scope: _Scope,
+                              iter_kind: str) -> None:
+        what = ("a set" if iter_kind == df.SET else "a dict view")
+        acc = self._find_accumulation(node, scope)
+        if acc is not None:
+            self._emit("DET001", node,
+                       f"iteration over {what} feeds order-sensitive "
+                       f"accumulation at line {acc.lineno}; wrap the "
+                       f"iterable in sorted(...)")
+            return
+        # DET005 applies to hash-ordered sets only; dicts are
+        # insertion-ordered, and a DET005-clean tree never inserts in hash
+        # order, so dict iteration is deterministic by construction
+        if iter_kind != df.SET:
+            return
+        mut = self._find_mutation(node, scope)
+        if mut is not None:
+            self._emit("DET005", node,
+                       f"iteration over a set mutates shared state at line "
+                       f"{mut.lineno} ({self._describe_mutation(mut)}); "
+                       f"wrap the iterable in sorted(...)")
+
+    def _loop_target_names(self, target: ast.expr) -> Set[str]:
+        names: Set[str] = set()
+        for sub in ast.walk(target):
+            if isinstance(sub, ast.Name):
+                names.add(sub.id)
+        return names
+
+    def _ordered_body_stmts(self, node: ast.For):
+        """Loop-body statements in source order, skipping nested defs."""
+        stack = list(reversed(node.body))
+        while stack:
+            stmt = stack.pop()
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            yield stmt
+            children: List[ast.stmt] = []
+            for field in ("body", "orelse", "finalbody"):
+                children.extend(getattr(stmt, field, []) or [])
+            for handler in getattr(stmt, "handlers", []) or []:
+                children.extend(handler.body)
+            stack.extend(reversed(children))
+
+    @staticmethod
+    def _is_counter_rhs(value: ast.expr) -> bool:
+        """+= with an int-literal / len() RHS is exact (no rounding order)."""
+        if isinstance(value, ast.Constant) and isinstance(value.value, int):
+            return True
+        if (isinstance(value, ast.Call) and isinstance(value.func, ast.Name)
+                and value.func.id == "len"):
+            return True
+        return False
+
+    def _unique_key_names(self, node: ast.For) -> Set[str]:
+        """Loop-target names guaranteed unique per iteration: the single
+        target when iterating a set / dict / .keys(), the first tuple
+        element for .items().  (.values() guarantees nothing.)"""
+        it = node.iter
+        if (isinstance(it, ast.Call) and isinstance(it.func, ast.Attribute)
+                and it.func.attr in ("values",)):
+            return set()
+        if (isinstance(it, ast.Call) and isinstance(it.func, ast.Attribute)
+                and it.func.attr == "items"):
+            if (isinstance(node.target, (ast.Tuple, ast.List))
+                    and node.target.elts
+                    and isinstance(node.target.elts[0], ast.Name)):
+                return {node.target.elts[0].id}
+            return set()
+        if isinstance(node.target, ast.Name):
+            return {node.target.id}
+        return set()
+
+    def _find_accumulation(self, node: ast.For,
+                           scope: _Scope) -> Optional[ast.stmt]:
+        """First order-sensitive accumulation statement in the loop body."""
+        unique_keys = self._unique_key_names(node)
+        reset_names: Set[str] = set()   # plain-assigned in body before use
+        for stmt in self._ordered_body_stmts(node):
+            if isinstance(stmt, ast.Assign):
+                rhs_names = {n.id for n in ast.walk(stmt.value)
+                             if isinstance(n, ast.Name)}
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        # x = x + v rebinding is accumulation, not a reset
+                        if tgt.id in rhs_names and not self._is_counter_rhs(
+                                stmt.value):
+                            if tgt.id not in reset_names:
+                                return stmt
+                        else:
+                            reset_names.add(tgt.id)
+            elif isinstance(stmt, ast.AugAssign):
+                if not isinstance(stmt.op, (ast.Add, ast.Sub, ast.Mult,
+                                            ast.Div)):
+                    continue
+                if self._is_counter_rhs(stmt.value):
+                    continue
+                if (isinstance(stmt.target, ast.Name)
+                        and stmt.target.id in reset_names):
+                    continue   # re-initialized every iteration: order-free
+                if (isinstance(stmt.target, ast.Subscript)
+                        and isinstance(stmt.target.slice, ast.Name)
+                        and stmt.target.slice.id in unique_keys):
+                    # d[k] += v keyed by a per-iteration-unique loop var:
+                    # every iteration touches its own slot, no cross-term
+                    # float interaction — order-free
+                    continue
+                return stmt
+        return None
+
+    def _find_mutation(self, node: ast.For,
+                       scope: _Scope) -> Optional[ast.stmt]:
+        """First statement imprinting iteration order on shared state."""
+        loop_locals = self._loop_target_names(node.target)
+        outer_names = set(scope.kinds.names)
+        for stmt in self._ordered_body_stmts(node):
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    root = self._root_name(tgt)
+                    if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                        if root is not None and root in loop_locals:
+                            continue      # per-element write via the loop var
+                        return stmt
+                    if isinstance(tgt, ast.Name):
+                        if tgt.id in outer_names:
+                            return stmt   # rebinding an outer name (argmax-by-hand)
+                        loop_locals.add(tgt.id)
+            elif isinstance(stmt, ast.AugAssign):
+                root = self._root_name(stmt.target)
+                if root is not None and root in loop_locals:
+                    continue
+                if self._is_counter_rhs(stmt.value):
+                    continue
+                tkind = (scope.kinds.kind_of(stmt.target)
+                         if isinstance(stmt.target, ast.Name) else df.UNKNOWN)
+                if (isinstance(stmt.op, (ast.BitOr, ast.BitAnd, ast.BitXor))
+                        and tkind == df.SET):
+                    continue              # set-content accumulation: order-free
+                return stmt
+            elif isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+                call = stmt.value
+                func = call.func
+                if isinstance(func, ast.Attribute):
+                    method = func.attr
+                    root = self._root_name(func.value)
+                    if root is not None and root in loop_locals:
+                        continue
+                    recv_kind = scope.kinds.kind_of(func.value)
+                    if recv_kind == df.SET and method in _SET_SAFE_METHODS:
+                        continue
+                    if method in _ORDER_SENSITIVE_METHODS:
+                        return stmt
+                elif isinstance(func, ast.Name):
+                    if func.id == "heappush":
+                        return stmt
+            elif isinstance(stmt, ast.Expr) and isinstance(
+                    stmt.value, (ast.Yield, ast.YieldFrom)):
+                return stmt
+        return None
+
+    @staticmethod
+    def _root_name(node: ast.expr) -> Optional[str]:
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        if isinstance(node, ast.Name):
+            return node.id
+        return None
+
+    @staticmethod
+    def _describe_mutation(stmt: ast.stmt) -> str:
+        if isinstance(stmt, ast.Assign):
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Subscript):
+                return "subscript store"
+            if isinstance(tgt, ast.Attribute):
+                return "attribute store"
+            return "outer-name rebinding"
+        if isinstance(stmt, ast.AugAssign):
+            return "augmented assignment"
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            func = stmt.value.func
+            name = func.attr if isinstance(func, ast.Attribute) else (
+                func.id if isinstance(func, ast.Name) else "call")
+            return f".{name}() on shared state"
+        return "yield"
+
+    # -- expression scanning (DET001-sum / DET002 / DET003 / DET004) ---------
+
+    def _scan_expr(self, expr: ast.expr, scope: _Scope) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                self._check_call(node, scope)
+            elif isinstance(node, ast.Compare):
+                if scope.taint.is_tainted(node):
+                    self._emit("DET002", node,
+                               "wall-clock-derived value in a comparison; "
+                               "control flow must not depend on machine "
+                               "load — use a node/event budget")
+
+    def _check_truthiness_sink(self, test: ast.expr, scope: _Scope,
+                               where: str) -> None:
+        # bare-name truthiness (`if elapsed:`); Compare tests are flagged by
+        # the Compare scan, don't double-report
+        if not isinstance(test, ast.Compare) and scope.taint.is_tainted(test):
+            self._emit("DET002", test,
+                       f"wall-clock-derived value as a {where}")
+
+    def _check_range_bound_sink(self, iter_expr: ast.expr,
+                                scope: _Scope) -> None:
+        if (isinstance(iter_expr, ast.Call)
+                and isinstance(iter_expr.func, ast.Name)
+                and iter_expr.func.id == "range"
+                and any(scope.taint.is_tainted(a) for a in iter_expr.args)):
+            self._emit("DET002", iter_expr,
+                       "wall-clock-derived loop bound")
+
+    def _check_call(self, node: ast.Call, scope: _Scope) -> None:
+        # DET002: bare wall-clock reads in the strict zone
+        if self.strict and self._is_wall_call(node):
+            self._emit("DET002", node,
+                       "wall-clock read in the deterministic core; even "
+                       "metrics-only use needs an explicit "
+                       "`# detlint: ignore[DET002] <reason>`")
+        # DET003: module-level RNG state
+        rng = self._global_rng_call(node)
+        if rng is not None:
+            self._emit("DET003", node,
+                       f"global RNG state via {rng}; use an explicitly "
+                       f"seeded random.Random / np.random.default_rng(seed) "
+                       f"instance")
+        # DET001: sum()/math.fsum over an unordered iterable
+        if self._is_sum_call(node):
+            arg_kind = (scope.kinds.kind_of(node.args[0])
+                        if node.args else df.UNKNOWN)
+            if arg_kind in df.UNORDERED:
+                what = "a set" if arg_kind == df.SET else "a dict view"
+                self._emit("DET001", node,
+                           f"sum over {what}: float addition is not "
+                           f"associative — sum(sorted(...)) or prove the "
+                           f"operands exact")
+        # DET004: hash-order tie-breaking in selection / key-stable sorts
+        self._check_selection(node, scope)
+
+    def _is_sum_call(self, node: ast.Call) -> bool:
+        func = node.func
+        if isinstance(func, ast.Name):
+            return func.id == "sum" or func.id in self.fsum_direct
+        if isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name):
+            return func.value.id in self.math_mods and func.attr == "fsum"
+        return False
+
+    @staticmethod
+    def _key_is_total(node: ast.Call) -> bool:
+        """True when the ``key=lambda x: (...)`` tuple embeds the element
+        identity (``x`` itself or ``x[0]``, the unique dict key for .items())
+        — ties are then impossible, the order is total."""
+        for kw in node.keywords:
+            if kw.arg != "key" or not isinstance(kw.value, ast.Lambda):
+                continue
+            lam = kw.value
+            if not lam.args.args:
+                continue
+            param = lam.args.args[0].arg
+            parts = (lam.body.elts if isinstance(lam.body, ast.Tuple)
+                     else [lam.body])
+            for part in parts:
+                if isinstance(part, ast.Name) and part.id == param:
+                    return True
+                if (isinstance(part, ast.Subscript)
+                        and isinstance(part.value, ast.Name)
+                        and part.value.id == param
+                        and isinstance(part.slice, ast.Constant)
+                        and part.slice.value == 0):
+                    return True
+        return False
+
+    def _check_selection(self, node: ast.Call, scope: _Scope) -> None:
+        func = node.func
+        has_key = any(kw.arg == "key" for kw in node.keywords)
+        if has_key and self._key_is_total(node):
+            return
+        if isinstance(func, ast.Name) and func.id in ("min", "max"):
+            if len(node.args) != 1:      # min(a, b) scalar form
+                return
+            kind = scope.kinds.kind_of(node.args[0])
+            if kind in df.UNORDERED:
+                what = "a set" if kind == df.SET else "a dict view"
+                detail = ("equal-key ties resolve by hash iteration order"
+                          if has_key else
+                          "ties between equal-comparing elements resolve by "
+                          "hash iteration order")
+                self._emit("DET004", node,
+                           f"{func.id}() over {what}: {detail}; iterate "
+                           f"sorted(...) or make the key total")
+        elif isinstance(func, ast.Name) and func.id == "sorted":
+            # sorted(u) with no key totally orders by value — sanctioned fix
+            if has_key and node.args:
+                kind = scope.kinds.kind_of(node.args[0])
+                if kind in df.UNORDERED:
+                    what = "a set" if kind == df.SET else "a dict view"
+                    self._emit("DET004", node,
+                               f"key-stable sorted() over {what}: equal-key "
+                               f"runs preserve hash iteration order; extend "
+                               f"the key to a total order")
+        elif (isinstance(func, ast.Attribute) and func.attr == "sort"
+              and has_key):
+            kind = scope.kinds.kind_of(func.value)
+            if kind in df.UNORDERED:
+                self._emit("DET004", node,
+                           "key-stable .sort() over an unordered-sourced "
+                           "list: equal-key runs preserve hash iteration "
+                           "order; extend the key to a total order")
+
+    # -- wall-clock classification -------------------------------------------
+
+    def _is_wall_call(self, node: ast.Call) -> bool:
+        func = node.func
+        if isinstance(func, ast.Name):
+            return func.id in self.wall_direct
+        if not isinstance(func, ast.Attribute):
+            return False
+        value = func.value
+        if isinstance(value, ast.Name):
+            if value.id in self.time_mods and func.attr in df.WALL_CLOCK_TIME_FUNCS:
+                return True
+            if value.id in self.dt_classes and func.attr in df.WALL_CLOCK_DT_FUNCS:
+                return True
+        if (isinstance(value, ast.Attribute) and value.attr == "datetime"
+                and isinstance(value.value, ast.Name)
+                and value.value.id in self.dt_mods
+                and func.attr in df.WALL_CLOCK_DT_FUNCS):
+            return True
+        return False
+
+    # -- RNG classification ---------------------------------------------------
+
+    def _global_rng_call(self, node: ast.Call) -> Optional[str]:
+        func = node.func
+        if isinstance(func, ast.Name) and func.id in self.random_direct:
+            return f"random.{func.id}"
+        if not isinstance(func, ast.Attribute):
+            return None
+        value = func.value
+        if (isinstance(value, ast.Name) and value.id in self.random_mods
+                and func.attr not in ("Random", "SystemRandom")):
+            return f"random.{func.attr}"
+        is_np_random = (
+            (isinstance(value, ast.Attribute) and value.attr == "random"
+             and isinstance(value.value, ast.Name)
+             and value.value.id in self.numpy_mods)
+            or (isinstance(value, ast.Name)
+                and value.id in self.np_random_mods))
+        if is_np_random:
+            fn = func.attr
+            if fn in _NP_RANDOM_OK:
+                return None
+            if fn in _NP_RANDOM_OK_WITH_ARGS and node.args:
+                return None
+            return f"np.random.{fn}"
+        return None
+
+
+def collect_return_kinds(tree: ast.Module) -> Dict[str, str]:
+    """Project-wide pre-pass: function name -> annotated return kind.
+
+    Used as a cross-module fallback so ``for u in engine.idle_units(t):``
+    classifies when ``idle_units`` is annotated ``-> Set[int]`` anywhere in
+    the scanned tree.  Name collisions join conservatively.
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            kind = df.annotation_kind(node.returns)
+            if node.name in out:
+                out[node.name] = df.join(out[node.name], kind)
+            else:
+                out[node.name] = kind
+    return out

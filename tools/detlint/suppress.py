@@ -1,0 +1,69 @@
+"""Inline suppression comments, parsed from the token stream.
+
+Grammar (one comment, anywhere on a line of the flagged construct's
+header):
+
+    # detlint: ignore[DET001] <reason>
+    # detlint: ignore[DET002,DET004] <reason>
+    # detlint: skip-file <reason>
+
+The reason is required: a bare ``ignore[...]`` is itself reported as a
+malformed suppression so accepted findings always document *why* they
+are acceptable (the burn-down contract in docs/determinism.md).
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from typing import Dict, List, Set, Tuple
+
+_IGNORE_RE = re.compile(
+    r"#\s*detlint:\s*ignore\[([A-Za-z0-9,\s]+)\]\s*(.*)")
+_SKIP_FILE_RE = re.compile(r"#\s*detlint:\s*skip-file\b")
+
+
+class Suppressions:
+    def __init__(self) -> None:
+        self.by_line: Dict[int, Set[str]] = {}
+        self.skip_file = False
+        self.malformed: List[Tuple[int, str]] = []   # (line, problem)
+
+    def covers(self, rule: str, extent: Tuple[int, int]) -> bool:
+        if self.skip_file:
+            return True
+        start, end = extent
+        for line in range(start, end + 1):
+            if rule in self.by_line.get(line, ()):  # noqa: SIM118 — set lookup
+                return True
+        return False
+
+
+def parse_suppressions(source: str) -> Suppressions:
+    sup = Suppressions()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(tok.start[0], tok.string) for tok in tokens
+                    if tok.type == tokenize.COMMENT]
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        comments = [(i + 1, line.split("#", 1)[1].strip() and "#" + line.split("#", 1)[1])
+                    for i, line in enumerate(source.splitlines()) if "#" in line]
+        comments = [(ln, c) for ln, c in comments if c]
+    for line, text in comments:
+        if _SKIP_FILE_RE.search(text):
+            sup.skip_file = True
+            continue
+        m = _IGNORE_RE.search(text)
+        if m is None:
+            if "detlint:" in text:
+                sup.malformed.append((line, "unrecognized detlint directive"))
+            continue
+        rules = {r.strip().upper() for r in m.group(1).split(",") if r.strip()}
+        reason = m.group(2).strip()
+        if not reason:
+            sup.malformed.append(
+                (line, "suppression without a reason — "
+                       "`# detlint: ignore[DETnnn] <why this is acceptable>`"))
+            continue
+        sup.by_line.setdefault(line, set()).update(rules)
+    return sup
