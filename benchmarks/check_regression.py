@@ -39,6 +39,10 @@ PREDICTIVE_P95_FLOOR = 1.15        # predictive vs adaptive, worst pipeline
 PREDICTIVE_SMOKE_FLOOR = 1.0       # scale-aware: at smoke scale the
                                    # predictive scheduler must never be
                                    # worse than adaptive
+CROSS_BATCH_P95_FLOOR = 1.15       # cross-lane batching vs off, aggregate
+                                   # P95 on the committed burst-storm trace
+CROSS_BATCH_SMOKE_FLOOR = 1.0      # scale-aware: at smoke scale batching
+                                   # must never be worse than off
 UNIFIED_OVERHEAD_CEIL_PCT = 5.0    # kernel overhead vs the old hand-rolled
                                    # loops (wall-clock-class measurement)
 
@@ -177,12 +181,34 @@ def check_predictive(base: Dict, cur: Dict, tol: float,
     return problems
 
 
+def check_cross_batch(base: Dict, cur: Dict, tol: float,
+                      wall_tol: float) -> List[str]:
+    """Cross-lane dynamic batching on the burst-storm trace
+    (BENCH_cross_batch.json).  Same scale: the aggregate P95 improvement
+    must hold near the committed baseline and above the 1.15x acceptance
+    floor.  Different scale (the CI smoke variant): scale-aware floor —
+    batching must never be worse than off (>= 1.0x).  Either way the run
+    must have actually fused launches across lanes (a run with zero
+    merges is a broken candidate path, not a passing one)."""
+    problems: List[str] = []
+    key = "p95_improvement_batching_vs_off"
+    same_scale = base.get("duration_s") == cur.get("duration_s")
+    _ratio_check(problems, key, cur.get(key, 0.0),
+                 base.get(key, 0.0) if same_scale else 0.0, tol,
+                 floor=(CROSS_BATCH_P95_FLOOR if same_scale
+                        else CROSS_BATCH_SMOKE_FLOOR))
+    if cur.get("cross_lane_merges", 0) <= 0:
+        problems.append("batching run fused no cross-lane launches")
+    return problems
+
+
 CHECKERS = {
     "event_driven_simulator_smoke": check_event_sim,
     "shared_cluster_mix_flip": check_shared_cluster,
     "unit_lending_bursty_ec": check_unit_lending,
     "unified_clock_kernel": check_unified_clock,
     "predictive_prewarm_diurnal": check_predictive,
+    "cross_lane_batching_burst_storm": check_cross_batch,
 }
 
 

@@ -52,6 +52,8 @@ def main() -> None:
                                           "BENCH_unified_clock.smoke.json")
         smoke_predictive_json = os.path.join("results",
                                              "BENCH_predictive.smoke.json")
+        smoke_cross_batch_json = os.path.join("results",
+                                              "BENCH_cross_batch.smoke.json")
         t0 = time.perf_counter()
         print("# --- e2e (smoke) ---", flush=True)
         from benchmarks import e2e
@@ -71,6 +73,11 @@ def main() -> None:
         emit(e2e.run_predictive_smoke(bench_path=smoke_predictive_json))
         print(f"# predictive smoke took {time.perf_counter() - t0:.1f}s",
               flush=True)
+        t0 = time.perf_counter()
+        print("# --- e2e (cross-batch smoke) ---", flush=True)
+        emit(e2e.run_cross_batch_smoke(bench_path=smoke_cross_batch_json))
+        print(f"# cross-batch smoke took {time.perf_counter() - t0:.1f}s",
+              flush=True)
         # event-vs-tick parity is the smoke pass's one hard check: a clock
         # regression must fail CI, not just land in the BENCH json.
         # The row must be present — a missing row is a broken check, not a
@@ -88,7 +95,8 @@ def main() -> None:
             [("BENCH_event_sim.json", smoke_event_json),
              ("BENCH_shared_cluster.json", smoke_shared_json),
              ("BENCH_unified_clock.json", smoke_unified_json),
-             ("BENCH_predictive.json", smoke_predictive_json)])
+             ("BENCH_predictive.json", smoke_predictive_json),
+             ("BENCH_cross_batch.json", smoke_cross_batch_json)])
         for p in problems:
             print(f"# REGRESSION: {p}", flush=True)
         if not problems:

@@ -62,6 +62,17 @@ WakeSource = Callable[[float], Optional[float]]
 # finished request, not one per dispatch decision
 Completion = Tuple[float, int, str, str, str, float, Tuple[Request, ...]]
 
+# Merged completion events (fleet cross-lane batching): a fused stage run
+# spanning several lanes is pushed ONCE with this sentinel in the lane
+# field.  Member contract: ``members`` holds every request of every fused
+# decision (corequests included), sorted by (pipeline, rid) — so a driver
+# draining the event can (a) route ``on_completion`` once per participating
+# lane (the sorted-unique pipelines of the members) and (b) count per-
+# request SLO finishes via each member's own ``pipeline``, in an order
+# independent of PYTHONHASHSEED.  Drivers that never fuse (the single-
+# pipeline Simulator) never see the sentinel.
+MERGED_LANE = "*merged*"
+
 
 @dataclasses.dataclass
 class ClockConfig:
@@ -335,11 +346,21 @@ class Lane:
     def record(self, dec, times: Dict[str, Tuple[float, float]],
                clock: EventClock) -> None:
         """Push one decision's stage completions onto the kernel heap and
-        update per-lane result accounting."""
+        update per-lane result accounting.
+
+        Stages in ``dec.xl_skip`` (cross-lane fused runs) still stamp
+        ``stage_done`` for the batch members, but push no per-lane event —
+        the fleet batcher already pushed ONE merged event (``MERGED_LANE``)
+        for the whole fused launch — and count no borrowed-unit runs here:
+        the decision's native auxiliary selection went unused, and the
+        fused launch's borrowed accounting lands on the *host* lane."""
         members = (dec.request,) + tuple(getattr(dec, "corequests", ()))
+        skip = getattr(dec, "xl_skip", ())
         for s, (start, fin) in times.items():
             for req in members:
                 req.stage_done[s] = fin
+            if s in skip:
+                continue
             ptype = self.engine.plan.placements[
                 (dec.d_units if s == "D" else
                  dec.e_units if s == "E" else dec.c_units)[0]]
@@ -354,6 +375,8 @@ class Lane:
             # regression gate can actually trip on, even under python -O.
             for s, units in (("E", dec.e_units), ("D", dec.d_units),
                              ("C", dec.c_units)):
+                if s in skip:
+                    continue
                 if any(g >= self.base_units for g in units):
                     self.borrowed_stage_runs[s] = \
                         self.borrowed_stage_runs.get(s, 0) + 1
@@ -368,22 +391,49 @@ class Lane:
             self.throughput[int(t // 60)] = (
                 self.throughput.get(int(t // 60), 0) + 1)
 
+    def decide(self, tau: float,
+               apply_replacement: Callable[..., None]) -> Sequence:
+        """Placement-switch check + one scheduler tick; returns the
+        decisions *without* executing them.  The fleet's cross-lane batcher
+        rides this split: every lane decides first, the batcher plans fused
+        stage runs across the decisions, then each lane executes
+        (``execute_decisions``).  Lanes own disjoint engines, so deciding
+        all lanes before executing any is equivalent to the interleaved
+        ``step`` — which remains the plain composition of the two."""
+        new_plan = self.sched.maybe_replace(self, tau)
+        if new_plan is not None:
+            apply_replacement(new_plan, tau)
+            self.placement_log.append((tau, new_plan.type_histogram()))
+        return self.sched.tick(self, tau)
+
+    def execute_decisions(self, decisions: Sequence, tau: float,
+                          clock: EventClock) -> None:
+        """Execute a tick's decisions in order: engine timing, completion
+        events, pending-queue removal.
+
+        Decisions marked ``xl_hold`` (cross-lane batching's E-hold: the
+        auxiliary encode unit is backlogged) execute only if the fleet
+        batcher fused them this tick (``xl_efused``); otherwise they are
+        skipped entirely — nothing is reserved and the request stays in
+        the pending pool for a later tick's fusion or native dispatch."""
+        for dec in decisions:
+            if getattr(dec, "xl_hold", False) and \
+                    getattr(dec, "xl_efused", None) is None:
+                continue
+            times = self.engine.execute(dec, tau)
+            self.record(dec, times, clock)
+            self.pending.remove(dec.request)
+            for co in getattr(dec, "corequests", ()):
+                self.pending.remove(co)
+
     def step(self, tau: float, clock: EventClock,
              apply_replacement: Callable[..., None]) -> None:
         """One scheduler step for this lane: placement-switch check, then
         dispatch.  ``apply_replacement(new_plan, tau)`` is the
         driver-specific way a fresh sub-plan reaches the engine (the fleet
         also reattaches loan slots and updates the cluster plan)."""
-        new_plan = self.sched.maybe_replace(self, tau)
-        if new_plan is not None:
-            apply_replacement(new_plan, tau)
-            self.placement_log.append((tau, new_plan.type_histogram()))
-        for dec in self.sched.tick(self, tau):
-            times = self.engine.execute(dec, tau)
-            self.record(dec, times, clock)
-            self.pending.remove(dec.request)
-            for co in getattr(dec, "corequests", ()):
-                self.pending.remove(co)
+        self.execute_decisions(self.decide(tau, apply_replacement), tau,
+                               clock)
 
     # -- engine-stats banking (survives fleet re-partitions) -------------------
 

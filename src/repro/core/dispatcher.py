@@ -8,6 +8,17 @@ Step 2 — derive Γ^E and Γ^C from Γ^D: reuse the primary's unit set when the
 stage co-resides (E merges with D; C takes a subset of D's units), otherwise
 route to an idle/earliest-free auxiliary replica at the profiled optimal
 parallelism.
+
+``CrossLaneBatcher`` extends the dispatch step one level up (fleet-level
+dynamic batching, ``FleetConfig.cross_lane_batching``): when the fleet's
+per-lane dispatchers produce auxiliary E/C stage runs in two or more lanes
+whose units share a ``(placement_type, stage)`` shape, the batcher merges
+them into ONE batched launch on a single host lane's units — StreamDiffusion
+Stream-Batch-style batching across logically independent requests, across
+pipelines.  Member selection is a grouped ILP with multi-dimensional
+columns (``ilp.solve_grouped``), capped by the profiler's measured
+batch-latency curve; the fused run is charged as one merged completion
+event (``clock.MERGED_LANE``) whose members span lanes.
 """
 from __future__ import annotations
 
@@ -391,3 +402,272 @@ class Dispatcher:
                 continue
             dec.c_units = tuple(take)
             del pool[:len(take)]
+
+
+class CrossLaneBatcher:
+    """Fleet-level cross-lane dynamic batching (``FleetConfig.cross_lane_batching``).
+
+    After every lane's dispatcher has produced its tick decisions (but
+    before any engine executes them), the batcher scans the fleet-wide
+    decision set for auxiliary E/C stage runs whose units share a
+    ``(stage, placement_type, unit_size)`` shape across two or more lanes,
+    and fuses each such group into ONE batched launch on a single *host*
+    lane's auxiliary units:
+
+    * **Member selection** is the ILP's multiplicity-aware aggregation with
+      the grouping key extended across lanes: each candidate run becomes a
+      grouped column with a *multi-dimensional* ``ilp.Option`` spanning the
+      shared batch-capacity dimension and its own lane's dimension
+      (``dim=(0, lane)``, ``usage=(b, b)``), so one ``solve_grouped`` call
+      packs the launch under both the fleet-wide batch cap and each lane's
+      own batch-curve cap.  Rewards are the native solo stage times the
+      fusion releases.
+    * **Batch cap** comes from the profiler's measured batch-latency curve
+      (``Profiler.optimal_batch``) unless ``max_batch`` overrides it.
+    * **Duration** charged is the *batched* stage time at the combined
+      batch size — conservatively the max over the member lanes' profiles —
+      on the host units only; every other member lane's native auxiliary
+      selection goes unused (that is the capacity the fusion pools).
+    * **Completion** is one merged event under the ``clock.MERGED_LANE``
+      sentinel whose members span lanes; per-lane results are un-merged by
+      the fleet driver's drain loop (one ``on_completion`` per
+      participating lane, per-member finish accounting).
+
+    E-groups launch at plan time (E has no intra-tick dependency); C-groups
+    are deferred via ``dec.xl_cdefer`` and scheduled in :meth:`finalize`
+    once every lane's engine has executed and stamped ``stage_done["D"]``.
+
+    Only constructed when the fleet knob is on — the off path never sees
+    this class, keeping it bit-identical by construction.
+    """
+
+    def __init__(self, max_batch: int = 0, solver_time_cap: float = 0.05):
+        self.max_batch = max_batch          # 0 = profiler batch-curve cap
+        self.solver_time_cap = solver_time_cap
+        self.merges = 0                     # fused launches charged
+        self.merged_requests = 0            # batch items across all fusions
+
+    # -- candidate assembly ---------------------------------------------------
+
+    @staticmethod
+    def _units(dec: DispatchDecision, stage: str) -> Tuple[int, ...]:
+        return dec.e_units if stage == "E" else dec.c_units
+
+    def _collect(self, lane_decs) -> Dict[tuple, list]:
+        """Group fusable (lane, dec, stage) candidates by shape key.
+
+        The key is ``(stage, placement_type, unit_size)`` — the contract the
+        merged launch relies on: same stage weights resident, same replica
+        shape, same per-unit chip count.  Same placement_type but different
+        stage deliberately yields distinct keys (a ⟨C⟩-typed unit hosting a
+        warm E replica must not merge with a C run)."""
+        groups: Dict[tuple, list] = {}
+        for lane, decs in lane_decs:
+            plan = lane.engine.plan
+            for dec in decs:
+                for stage in getattr(dec, "xl_candidate", ()):
+                    units = self._units(dec, stage)
+                    if not units:
+                        continue
+                    key = (stage, plan.placements[units[0]], plan.unit_size)
+                    groups.setdefault(key, []).append((lane, dec))
+        return groups
+
+    # -- member selection (grouped ILP, cross-lane columns) -------------------
+
+    def _select(self, stage: str, per_lane: Dict[str, list], tau: float):
+        """Pick the fused member set for one shape group.
+
+        Returns ``(fused, host_lane, host_units, n_total, T)`` or ``None``
+        when no fusion spanning >= 2 lanes fits under the caps."""
+        # host = lane whose leading candidate's aux units free up earliest
+        # (its units carry the fused launch); deterministic pipeline tiebreak
+        host_pid = min(
+            sorted(per_lane),
+            key=lambda pid: (max(per_lane[pid][0][0].engine.units[g].free_at
+                                 for g in self._units(per_lane[pid][0][1], stage)),
+                             pid))
+        host, anchor = per_lane[host_pid][0]
+        host_units = self._units(anchor, stage)
+        k_chips = len(host_units) * host.prof.k_min
+        # per-lane batch caps from each profile's measured batch curve, at
+        # the HOST launch shape (that is where the fused run executes); a
+        # positive max_batch override replaces BOTH the shared and the
+        # per-lane curve caps (the operator is asserting a throughput/
+        # latency trade the 1.2x-single curve knee would refuse)
+        cap_of = {}
+        for pid, cands in per_lane.items():
+            rep = min(cands, key=lambda c: (c[1].request.deadline,
+                                            c[1].request.rid))[1].request
+            cap_of[pid] = (self.max_batch if self.max_batch > 0
+                           else cands[0][0].prof.optimal_batch(rep, stage,
+                                                               k_chips))
+        shared_cap = (self.max_batch if self.max_batch > 0
+                      else max(cap_of[p] for p in sorted(cap_of)))
+        b_anchor = anchor.batch
+        if shared_cap - b_anchor < 1:
+            return None            # no room to span a second lane
+        # grouped ILP: dim 0 = shared fleet batch budget, dims 1..L = lanes
+        lane_dim = {pid: i + 1 for i, pid in enumerate(per_lane)}
+        budgets = [shared_cap - b_anchor] + [
+            max(0, cap_of[pid] - (b_anchor if pid == host_pid else 0))
+            for pid in per_lane]
+        gindex: Dict[tuple, int] = {}
+        gopts: List[List[ilp.Option]] = []
+        counts: List[int] = []
+        gmembers: List[list] = []
+        for pid, cands in per_lane.items():
+            for lane, dec in cands:
+                if dec is anchor:
+                    continue
+                b = dec.batch
+                units = self._units(dec, stage)
+                # reward: native solo auxiliary time this member releases
+                saving = lane.prof.batched_stage_time(
+                    dec.request, stage, len(units) * lane.prof.k_min, b)
+                gkey = (lane_dim[pid], b, saving)
+                g = gindex.get(gkey)
+                if g is None:
+                    g = gindex[gkey] = len(gopts)
+                    gopts.append([ilp.Option(dim=(0, lane_dim[pid]),
+                                             usage=(b, b), reward=saving)])
+                    counts.append(0)
+                    gmembers.append([])
+                counts[g] += 1
+                gmembers[g].append((lane, dec))
+        if not gopts:
+            return None
+        sol = ilp.solve_grouped(gopts, budgets, counts,
+                                time_cap=self.solver_time_cap)
+        fused = [(host, anchor)]
+        for g in sorted(sol.alloc):
+            grants = sol.alloc[g]
+            # deadline-ordered un-merging: earliest-deadline members of the
+            # class take the granted slots
+            ordered = sorted(gmembers[g],
+                             key=lambda c: (c[1].request.deadline,
+                                            c[1].request.pipeline,
+                                            c[1].request.rid))
+            fused.extend(ordered[:len(grants)])
+        if len({lane.pipeline for lane, _ in fused}) < 2:
+            return None            # fusion must actually span lanes
+        n_total = sum(dec.batch for _, dec in fused)
+        # batched duration at the combined size: conservative max over the
+        # member lanes' profiles (sorted walk -> deterministic float max)
+        reps: Dict[str, Request] = {}
+        for lane, dec in fused:
+            cur = reps.get(lane.pipeline)
+            r = dec.request
+            if cur is None or (r.deadline, r.rid) < (cur.deadline, cur.rid):
+                reps[lane.pipeline] = r
+        by_lane = {lane.pipeline: lane for lane, _ in fused}
+        T = max(by_lane[pid].prof.batched_stage_time(reps[pid], stage,
+                                                     k_chips, n_total)
+                for pid in sorted(reps))
+        return fused, host, host_units, n_total, T
+
+    # -- fused launch scheduling ----------------------------------------------
+
+    @staticmethod
+    def _members(fused) -> Tuple[Request, ...]:
+        """All batch items of all fused decisions, in the merged event's
+        canonical (pipeline, rid) member order (detlint DET001: sorted
+        before any accumulation downstream)."""
+        return tuple(sorted(
+            (r for _, dec in fused
+             for r in (dec.request,) + tuple(dec.corequests)),
+            key=lambda r: (r.pipeline, r.rid)))
+
+    def _charge_borrowed(self, host, host_units, stage: str) -> None:
+        """A fused launch spanning a borrowed (lending) unit counts ONE
+        stage run against the host lane's borrow ledger — the owning
+        lane's BORROW_PENALTY accounting is untouched (its dispatcher
+        already discounted the native decision that borrowed the unit)."""
+        if host.track_borrowed and any(g >= host.base_units for g in host_units):
+            host.borrowed_stage_runs[stage] = \
+                host.borrowed_stage_runs.get(stage, 0) + 1
+
+    def _launch_e(self, fused, host, host_units, n_total: float, T: float,
+                  tau: float, clock) -> None:
+        from repro.core.clock import MERGED_LANE
+        eng = host.engine
+        start = max(tau, max(eng.units[g].free_at for g in host_units))
+        start += eng._reinstance(host_units)
+        start += eng._prepare_stage("E", host_units, tau)
+        fin = start + T
+        eng._reserve(host_units, start, fin)
+        eng.stats.dispatches += 1
+        self._charge_borrowed(host, host_units, "E")
+        ptype = eng.plan.placements[host_units[0]]
+        clock.push_completion(fin, MERGED_LANE, "E", ptype, T,
+                              self._members(fused))
+        for lane, dec in fused:
+            dec.xl_efused = (start, fin, lane is host, host_units)
+            dec.xl_skip = tuple(getattr(dec, "xl_skip", ())) + ("E",)
+        self.merges += 1
+        self.merged_requests += n_total
+
+    def plan(self, lane_decs, tau: float, clock) -> list:
+        """Fuse this tick's cross-lane candidates.
+
+        ``lane_decs`` is the ordered ``(lane, decisions)`` list for every
+        lane, produced by ``Lane.decide`` *before* any lane executes.
+        E-groups are scheduled immediately (the fused E run depends on
+        nothing this tick); C-groups are returned for :meth:`finalize`
+        after the lanes' engines have stamped ``stage_done["D"]``."""
+        cgroups = []
+        groups = self._collect(lane_decs)
+        for key in sorted(groups):
+            stage = key[0]
+            per_lane: Dict[str, list] = {}
+            for lane, dec in groups[key]:
+                per_lane.setdefault(lane.pipeline, []).append((lane, dec))
+            if len(per_lane) < 2:
+                continue
+            picked = self._select(stage, per_lane, tau)
+            if picked is None:
+                continue
+            fused, host, host_units, n_total, T = picked
+            if stage == "E":
+                self._launch_e(fused, host, host_units, n_total, T, tau, clock)
+            else:
+                for _, dec in fused:
+                    dec.xl_cdefer = True
+                    dec.xl_skip = tuple(getattr(dec, "xl_skip", ())) + ("C",)
+                cgroups.append((fused, host, host_units, n_total, T))
+        return cgroups
+
+    def finalize(self, cgroups: list, tau: float, clock) -> None:
+        """Schedule the deferred fused C launches.
+
+        Runs after every lane executed its decisions: each member's
+        ``stage_done["D"]`` now holds its decode finish, so the fused C
+        start is gated on the slowest member's latent push to the host
+        units (host-lane members use the engine's locality-aware push;
+        foreign members pay the two-step cross-lane path)."""
+        from repro.core.clock import MERGED_LANE
+        for fused, host, host_units, n_total, T in cgroups:
+            eng = host.engine
+            ready = tau
+            for lane, dec in fused:
+                d_fin = dec.request.stage_done["D"]
+                nbytes = lane.prof.comm_bytes(dec.request, "DC")
+                if lane is host:
+                    dr = eng._push(nbytes, dec.d_units, host_units, d_fin)
+                else:
+                    dr = d_fin + lane.engine.push_cross(nbytes)
+                ready = max(ready, dr)
+            start = max(ready, max(eng.units[g].free_at for g in host_units))
+            start += eng._reinstance(host_units)
+            start += eng._prepare_stage("C", host_units, tau)
+            fin = start + T
+            eng._reserve(host_units, start, fin)
+            eng.stats.dispatches += 1
+            self._charge_borrowed(host, host_units, "C")
+            members = self._members(fused)
+            for r in members:
+                r.stage_done["C"] = fin
+            ptype = eng.plan.placements[host_units[0]]
+            clock.push_completion(fin, MERGED_LANE, "C", ptype, T, members)
+            self.merges += 1
+            self.merged_requests += n_total

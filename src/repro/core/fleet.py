@@ -36,6 +36,31 @@ style demand tracking).
   is paid by pre-busying the new units — so an idle Flux unit really can
   be handed to a backlogged SD3 class, at a price the hysteresis must
   beat.
+* Cross-lane dynamic batching — with ``FleetConfig.cross_lane_batching``
+  the fleet step becomes decide-all → fuse → execute-all: the
+  ``CrossLaneBatcher`` (core/dispatcher.py) merges auxiliary E/C runs
+  whose units share a ``(stage, placement_type, unit_size)`` shape across
+  two or more lanes into one batched launch on a host lane's auxiliary
+  units, member-selected by a grouped ILP whose multi-dimensional columns
+  charge both the shared batch budget and each lane's batch-curve cap,
+  charged the batched duration and completed by ONE merged event
+  (``clock.MERGED_LANE``) that ``_drain`` un-merges back into per-lane
+  accounting.  Off (the default) the batcher is never constructed and the
+  step is the plain per-lane interleave — bit-identical by construction.
+
+Wake-source registration (the clock.py standard: each subsystem registers
+one ``tau -> Optional[next-wake-time]`` closure, once, independent of lane
+count): the fleet driver registers the next-arrival source, one
+Monitor-window boundary source per replace-capable lane, the FleetMonitor
+demand/SLO/lending window boundaries when the scheduler can re-partition,
+the broker's loan-expiry/lend-window source when lending, and the
+predictive scheduler's ``forecast_wake`` (rate-history bin boundaries +
+the armed predicted-shift time) when ``mode="predictive"``.  Trigger
+*gates* stay in the schedulers: a wake-up is only an opportunity to look —
+mix-shift hysteresis, cooldowns, and the forecast confidence gate decide
+whether anything fires — so an extra wake-up can never change a decision,
+only surface one earlier (``scheduler_wake_hooks`` opts the trigger-gate
+crossings themselves in as wake-ups; see docs/architecture.md).
 
 The single-pipeline system is the 1-pipeline special case: a fleet with one
 registered pipeline reproduces ``Simulator`` + ``TridentScheduler`` results
@@ -48,7 +73,7 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import repro.configs as configs
-from repro.core.clock import (ClockConfig, EventClock, Lane,
+from repro.core.clock import (MERGED_LANE, ClockConfig, EventClock, Lane,
                               monitor_boundary_source, replace_capable)
 from repro.core.monitor import FleetMonitor
 from repro.core.orchestrator import Orchestrator
@@ -386,6 +411,15 @@ class FleetConfig:
     prewarm_cooldown: float = 60.0    # min time between pre-warm stagings
     prewarm_ttl: float = 240.0        # staged weights are evicted (ignored
                                       # at cutover) after this long
+    # -- cross-lane dynamic batching (core/dispatcher.py CrossLaneBatcher),
+    # default OFF: the batcher object is never constructed and the per-lane
+    # step loop is byte-identical to the committed BENCH trajectories -------
+    cross_lane_batching: bool = False
+    cross_lane_max_batch: int = 0     # 0 = profiler batch-curve cap; >0
+                                      # replaces BOTH the fused launch's
+                                      # shared batch budget and the
+                                      # per-lane curve caps (an explicit
+                                      # operator throughput/latency trade)
 
     def lane_sim_cfg(self, num_chips: int) -> SimConfig:
         return SimConfig(num_chips=num_chips, tick=self.tick,
@@ -405,14 +439,16 @@ class FleetConfig:
 
 
 def make_lane(pipeline: str, prof: Profiler, sim_cfg: SimConfig,
-              trace: Sequence[Request], aggregate_ilp: bool = False) -> Lane:
+              trace: Sequence[Request], aggregate_ilp: bool = False,
+              cross_lane_batching: bool = False) -> Lane:
     """One pipeline's slice of the fleet: the unmodified single-pipeline
     TridentServe stack over a chip range, inside the shared ``Lane``
     container (repro.core.clock) — so the lane *is* the 1-pipeline
     special case."""
     return Lane(pipeline, prof,
                 TridentScheduler(prof, sim_cfg, trace,
-                                 aggregate_ilp=aggregate_ilp))
+                                 aggregate_ilp=aggregate_ilp,
+                                 cross_lane_batching=cross_lane_batching))
 
 
 # ---------------------------------------------------------------- schedulers
@@ -585,6 +621,9 @@ class PredictiveFleetScheduler(AdaptiveFleetScheduler):
         self._campaign_staged = 0
         self.early_fires = 0           # predictively fired re-partitions
         self.prewarms = 0              # units staged across the run
+        self._class_fc = None          # per-placement-class forecaster,
+                                       # built lazily (cross-lane batching
+                                       # runs only; see _class_priority)
 
     # -- wake source (registered by the driver like broker.next_wake) ---------
 
@@ -656,9 +695,34 @@ class PredictiveFleetScheduler(AdaptiveFleetScheduler):
             # idle units only: busy units are deferred to the next bin's
             # retry, so staging rides the old mix's idle tail instead of
             # stalling live work
-            n = fleet.stage_prewarm(budgets, tau, limit=left, idle_only=True)
+            n = fleet.stage_prewarm(
+                budgets, tau, limit=left, idle_only=True,
+                class_priority=self._class_priority(fleet, tau))
             self._campaign_staged += n
             self.prewarms += n
+
+    def _class_priority(self, fleet: "FleetSimulator",
+                        tau: float) -> Optional[List[str]]:
+        """Placement classes by predicted demand at the armed shift time
+        (the PR 5 follow-up): with cross-lane batching on, fused E/C
+        launches concentrate on the hottest auxiliary class, so the
+        pre-warm budget should stage the placement-type *mix* the batcher
+        will want first — not just per-pipeline chip totals.  ``None``
+        (= plan-order staging, byte-identical to the un-prioritized walk)
+        unless the batcher is on and the class history has enough bins."""
+        if not self.cfg.cross_lane_batching:
+            return None
+        hist = fleet.fleet_monitor.class_rate_history(tau, ("E", "C"))
+        if len(hist) < self.MIN_BINS:
+            return None
+        from repro.core.forecast import DemandForecaster, rank_classes
+        if self._class_fc is None:
+            self._class_fc = DemandForecaster(
+                bin_s=self.cfg.forecast_bin,
+                min_conf=self.cfg.forecast_min_conf)
+        self._class_fc.fit(hist)
+        t = self._pred.t_shift if self._pred is not None else tau
+        return rank_classes(self._class_fc, t)
 
     def _target_budgets(self, fleet: "FleetSimulator", tau: float,
                         pred) -> Optional[Dict[str, int]]:
@@ -829,6 +893,10 @@ class FleetResult:
                                        # fully averted by staged weights
     prewarm_loan_returns: int = 0      # loans force-closed by staging
     predictive_repartitions: int = 0   # swaps fired by the forecaster
+    # cross-lane dynamic batching (zeros unless
+    # FleetConfig.cross_lane_batching)
+    cross_lane_merges: int = 0         # fused multi-lane launches charged
+    cross_lane_merged_requests: int = 0  # batch items across all fusions
 
     def summary(self) -> str:
         if self.oom:
@@ -889,6 +957,21 @@ class FleetSimulator:
         if self.uses_forecast:
             self.fleet_monitor.enable_rate_history(self.cfg.forecast_bin,
                                                    self.cfg.forecast_history)
+        # cross-lane dynamic batching (core/dispatcher.py): the batcher is
+        # only constructed when the knob is on — the off path never touches
+        # it and the per-lane step loop below stays byte-identical
+        self._xl = None
+        if self.cfg.cross_lane_batching:
+            from repro.core.dispatcher import CrossLaneBatcher
+            self._xl = CrossLaneBatcher(max_batch=self.cfg.cross_lane_max_batch)
+        self._class_hist = (self.uses_forecast
+                            and self.cfg.cross_lane_batching)
+        if self._class_hist:
+            # per-placement-class demand history: lets the predictive
+            # scheduler pre-warm the placement-type *mix* the batcher will
+            # want, not just per-pipeline totals (see maybe_prewarm)
+            self.fleet_monitor.enable_class_history(self.cfg.forecast_bin,
+                                                    self.cfg.forecast_history)
         self.prewarmed: Dict[int, Tuple[str, frozenset, float]] = {}
         self.prewarm_cost_s = 0.0
         self.prewarm_units = 0
@@ -966,7 +1049,8 @@ class FleetSimulator:
             prof = self.reg.profiler(pid)
             lane = make_lane(pid, prof, self.cfg.lane_sim_cfg(budgets[pid]),
                              sub_traces[pid],
-                             aggregate_ilp=self.cfg.aggregate_ilp)
+                             aggregate_ilp=self.cfg.aggregate_ilp,
+                             cross_lane_batching=self.cfg.cross_lane_batching)
             lane.engine = RuntimeEngine(
                 prof, self.plan.subplans[pid],
                 proactive_push=self.cfg.proactive_push,
@@ -1021,11 +1105,30 @@ class FleetSimulator:
             lane.admit(r, clock)
             self.fleet_monitor.record_arrival(
                 r.arrival, r.pipeline, request_footprint(lane.prof, r))
+            if self._class_hist:
+                # auxiliary-stage chip-seconds by placement class: what the
+                # cross-lane batcher's fused E/C launches will draw on
+                prof = lane.prof
+                for s in ("E", "C"):
+                    k = prof.optimal_degree(r, s) * prof.k_min
+                    self.fleet_monitor.record_class_demand(
+                        r.arrival, s, prof.stage_time(r, s, k) * k)
             ai += 1
         self._ai = ai
 
     def _drain(self, tau: float) -> None:
         for t, _, pid, s, ptype, dur, members in self.clock.pop_due(tau):
+            if pid == MERGED_LANE:
+                # cross-lane fused launch: un-merge the one event back into
+                # per-lane accounting — each participating lane observes the
+                # completion once, each member settles under its own lane
+                for lp in sorted({r.pipeline for r in members}):
+                    self.lanes[lp].on_completion(t, s, ptype, dur)
+                if s == "C":
+                    for req in members:
+                        self.fleet_monitor.record_finish(
+                            t, req.pipeline, t <= req.deadline)
+                continue
             lane = self.lanes[pid]
             lane.on_completion(t, s, ptype, dur)
             if s == "C":
@@ -1041,10 +1144,27 @@ class FleetSimulator:
             self._repartition(budgets, tau)
         if self.broker is not None:
             self.broker.step(self, tau)
-        for lane in self.lanes.values():
-            lane.step(tau, self.clock,
-                      lambda new_plan, t, lane=lane:
-                          self._apply_lane_plan(lane, new_plan, t))
+        if self._xl is None:
+            for lane in self.lanes.values():
+                lane.step(tau, self.clock,
+                          lambda new_plan, t, lane=lane:
+                              self._apply_lane_plan(lane, new_plan, t))
+        else:
+            # cross-lane batching: decide every lane first, fuse matching
+            # auxiliary runs across lanes, then execute.  Lanes own disjoint
+            # engines and the dispatchers see only their own lane's state,
+            # so decide-all-then-execute-all is equivalent to the
+            # interleaved per-lane stepping above; deferred fused C launches
+            # run last, once every member's decode finish is stamped.
+            lane_decs = [
+                (lane, lane.decide(tau,
+                                   lambda new_plan, t, lane=lane:
+                                       self._apply_lane_plan(lane, new_plan, t)))
+                for lane in self.lanes.values()]
+            cgroups = self._xl.plan(lane_decs, tau, self.clock)
+            for lane, decs in lane_decs:
+                lane.execute_decisions(decs, tau, self.clock)
+            self._xl.finalize(cgroups, tau, self.clock)
         if self.broker is not None:
             # sample pressure after dispatch: what is still pending now is
             # genuine backlog, not the arrivals this wake-up just served
@@ -1094,7 +1214,8 @@ class FleetSimulator:
 
     def stage_prewarm(self, budgets: Dict[str, int], tau: float,
                       limit: Optional[int] = None,
-                      idle_only: bool = False) -> int:
+                      idle_only: bool = False,
+                      class_priority: Optional[List[str]] = None) -> int:
         """Stage the predicted target partition's weight loads on the chips
         that will flip, *before* the shift lands (predictive
         re-partitioning, core/forecast.py).  The owning units keep serving
@@ -1109,7 +1230,14 @@ class FleetSimulator:
         idle gap instead of stalling live work).  At most ``limit``
         (default ``prewarm_budget``) target units are staged per call —
         the mis-prediction cost bound.  Already-staged chips are skipped,
-        so repeated calls converge instead of re-paying.  Returns the
+        so repeated calls converge instead of re-paying.
+
+        ``class_priority`` (cross-lane batching, per-placement-class
+        forecast) re-orders the staging walk by placement type — the
+        classes the batcher's fused launches will lean on hardest are
+        staged first, inside the same unit budget.  The sort is *stable*,
+        so ``None`` (and any ranking that lists no present class) walks
+        the target plan in exactly the historical plan order.  Returns the
         number of units staged."""
         recent, measured = self._plan_inputs(tau)
         target = self.orch.generate(recent, budgets, measured)
@@ -1119,52 +1247,58 @@ class FleetSimulator:
         ttl = self.cfg.prewarm_ttl
         cap = self.cfg.prewarm_budget if limit is None else limit
         staged = 0
-        for pid in self.reg.pipelines:
+        units_iter = [(pid, g, ptype)
+                      for pid in self.reg.pipelines
+                      for g, ptype in
+                      enumerate(target.subplans[pid].placements)]
+        if class_priority:
+            rank = {c: i for i, c in enumerate(class_priority)}
+            units_iter.sort(key=lambda u: rank.get(u[2], len(rank)))
+        for pid, g, ptype in units_iter:
             sub = target.subplans[pid]
             prof = self.reg.profiler(pid)
             lo, _ = target.chip_ranges[pid]
             k = sub.unit_size
-            for g, ptype in enumerate(sub.placements):
-                if staged >= cap:
-                    return staged
-                need = set(ptype)
-                chips = range(lo + g * k, lo + (g + 1) * k)
-                per_owner: Dict[Tuple[str, int], set] = {}
-                for c in chips:
-                    owner = chip_owner.get(c)
-                    if owner is None:
-                        continue
-                    missing = need if owner[0] != pid else need - owner[2]
-                    pw = self.prewarmed.get(c)
-                    if pw is not None and pw[0] == pid and tau - pw[2] <= ttl:
-                        missing = missing - pw[1]
-                    if missing:
-                        per_owner.setdefault((owner[0], owner[1]),
-                                             set()).update(missing)
-                if not per_owner:
-                    continue       # nothing (left) to stage for this unit
-                if idle_only and any(
-                        self.lanes[opid].engine.units[ouid].free_at > tau
-                        for opid, ouid in per_owner):
-                    continue       # owner mid-work: defer to a later bin
-                for opid, ouid in sorted(per_owner):
-                    if self.broker is not None and \
-                            self.broker.force_return_unit(self, opid, ouid,
-                                                          tau):
-                        # a lent-out unit scheduled for pre-warm returns its
-                        # loan before anything is staged on its chips — no
-                        # loan may survive the coming cutover
-                        self.prewarm_loan_returns += 1
-                    # sorted: float sum + str-set iteration (see
-                    # _repartition's reload note)
-                    load = sum(prof.stage_load_time(s, via_host=True)
-                               for s in sorted(per_owner[(opid, ouid)]))
-                    self.lanes[opid].engine.stage_prewarm(ouid, tau, load)
-                    self.prewarm_cost_s += load
-                for c in chips:
-                    self.prewarmed[c] = (pid, frozenset(need), tau)
-                self.prewarm_units += 1
-                staged += 1
+            if staged >= cap:
+                return staged
+            need = set(ptype)
+            chips = range(lo + g * k, lo + (g + 1) * k)
+            per_owner: Dict[Tuple[str, int], set] = {}
+            for c in chips:
+                owner = chip_owner.get(c)
+                if owner is None:
+                    continue
+                missing = need if owner[0] != pid else need - owner[2]
+                pw = self.prewarmed.get(c)
+                if pw is not None and pw[0] == pid and tau - pw[2] <= ttl:
+                    missing = missing - pw[1]
+                if missing:
+                    per_owner.setdefault((owner[0], owner[1]),
+                                         set()).update(missing)
+            if not per_owner:
+                continue       # nothing (left) to stage for this unit
+            if idle_only and any(
+                    self.lanes[opid].engine.units[ouid].free_at > tau
+                    for opid, ouid in per_owner):
+                continue       # owner mid-work: defer to a later bin
+            for opid, ouid in sorted(per_owner):
+                if self.broker is not None and \
+                        self.broker.force_return_unit(self, opid, ouid,
+                                                      tau):
+                    # a lent-out unit scheduled for pre-warm returns its
+                    # loan before anything is staged on its chips — no
+                    # loan may survive the coming cutover
+                    self.prewarm_loan_returns += 1
+                # sorted: float sum + str-set iteration (see
+                # _repartition's reload note)
+                load = sum(prof.stage_load_time(s, via_host=True)
+                           for s in sorted(per_owner[(opid, ouid)]))
+                self.lanes[opid].engine.stage_prewarm(ouid, tau, load)
+                self.prewarm_cost_s += load
+            for c in chips:
+                self.prewarmed[c] = (pid, frozenset(need), tau)
+            self.prewarm_units += 1
+            staged += 1
         return staged
 
     def _repartition(self, budgets: Dict[str, int], tau: float) -> None:
@@ -1325,6 +1459,9 @@ class FleetSimulator:
             prewarm_loan_returns=self.prewarm_loan_returns,
             predictive_repartitions=getattr(self.fleet_sched, "early_fires",
                                             0),
+            cross_lane_merges=self._xl.merges if self._xl else 0,
+            cross_lane_merged_requests=(self._xl.merged_requests
+                                        if self._xl else 0),
             **lend_kw)
 
 

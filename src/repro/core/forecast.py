@@ -33,6 +33,17 @@ event and tick clocks — which visit the same bin boundaries — derive
 identical predictions (tests/test_fleet.py parity matrix), and every
 iteration order is sorted so results are independent of
 ``PYTHONHASHSEED``.
+
+Wake sources and trigger gates (the clock.py standard): this module
+registers nothing itself — the fleet driver registers the predictive
+scheduler's ``forecast_wake`` closure, which answers with the next
+rate-history bin boundary (fits and pre-warm staging only move there; a
+fit between boundaries would see the same completed bins and return the
+same answer) plus the armed predicted-shift time.  The trigger gates are
+the forecaster's confidence gate (demand-weighted mean R² — stationary
+traffic never schedules a pre-warm), the pre-warm cooldown, and
+``forecast_grace`` (an unconfirmed shift expires; a live shift moving
+away from the prediction drops it immediately).
 """
 from __future__ import annotations
 
@@ -40,7 +51,11 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-# completed rate-history bins: (bin-center time, {pipeline: demand rate})
+# completed rate-history bins: (bin-center time, {key: demand rate}).
+# Keys are opaque: per-pipeline demand for re-partition prediction, or
+# per-placement-class demand (FleetMonitor.class_rate_history) when the
+# predictive scheduler pre-warms the placement-type mix the cross-lane
+# batcher will want — the fits and extrapolation are key-agnostic.
 History = Sequence[Tuple[float, Dict[str, float]]]
 
 
@@ -258,3 +273,17 @@ class DemandForecaster:
             return None
         return ShiftPrediction(t_shift=t_shift, confidence=conf,
                                shares=best[0], demand=best[1])
+
+
+def rank_classes(forecast: DemandForecaster, t: float) -> List[str]:
+    """Forecast keys by descending predicted demand at ``t`` (stable
+    key-ascending tiebreak — deterministic under any PYTHONHASHSEED).
+
+    Used with a forecaster fitted on *per-placement-class* history
+    (``FleetMonitor.class_rate_history``): the ranking orders the
+    predictive pre-warm's staging walk so the placement types the
+    cross-lane batcher will lean on hardest are staged first, inside the
+    same mis-prediction budget."""
+    demand = forecast.predict_demand(t)
+    return [k for k, _ in sorted(demand.items(), key=lambda kv: (-kv[1],
+                                                                 kv[0]))]

@@ -31,6 +31,17 @@ Hot-path refinements (all exactness-preserving):
   * ``warm`` re-seeds the incumbent from the previous tick's surviving
     (dim, usage) choices, so the branch-and-bound starts near last tick's
     optimum and prunes far more aggressively under steady load.
+
+Multi-dimensional options (cross-lane batching): ``Option.dim``/``usage``
+may also be *parallel tuples*, one (dim, usage) pair per budget dimension
+the option consumes — the column shape the fleet's cross-lane batcher
+needs, where joining a fused launch consumes both the launch's shared
+batch-size budget and the member lane's own batch-curve cap.  Classic
+single-``int`` options are unchanged (and single-dim instances take the
+exact same code path bit-for-bit); the two kinds may mix freely in one
+instance.  ``solve_grouped`` therefore expands cross-lane groups the same
+way it expands within-lane multiplicity: one column with a count, capacity-
+bounded by the *total* usage of the cheapest option.
 """
 from __future__ import annotations
 
@@ -49,10 +60,28 @@ NODES_PER_SECOND = 1_300_000
 
 @dataclasses.dataclass(frozen=True)
 class Option:
-    """One (type i, degree k) choice for a request."""
-    dim: int          # budget dimension (primary type index)
-    usage: int        # units consumed (degree k)
+    """One (type i, degree k) choice for a request.
+
+    ``dim``/``usage`` are plain ints for the classic dispatch column; a
+    multi-dimensional option (cross-lane batching) carries parallel tuples
+    instead — ``dim[j]``'s budget is charged ``usage[j]`` units."""
+    dim: object       # budget dimension (int) | parallel dims (Tuple[int, ...])
+    usage: object     # units consumed (int) | per-dim usages (Tuple[int, ...])
     reward: float
+
+
+def _spans(o: Option) -> Tuple[Tuple[int, int], ...]:
+    """Normalized ((dim, usage), ...) consumption pairs of one option."""
+    if isinstance(o.dim, tuple):
+        return tuple(zip(o.dim, o.usage))
+    return ((o.dim, o.usage),)
+
+
+def _usage_total(o: Option) -> int:
+    """Total units consumed across all of an option's budget dimensions."""
+    if isinstance(o.usage, tuple):
+        return sum(o.usage)
+    return o.usage
 
 
 @dataclasses.dataclass
@@ -91,6 +120,15 @@ def solve_grouped(options: Sequence[Sequence[Option]],
     optimum is unchanged; the expanded instance then reuses ``solve`` (whose
     identical-row symmetry breaking collapses the remaining copies).
 
+    Cross-lane group expansion (fleet dynamic batching): the same
+    machinery extends the grouping key *across lanes* — the fleet batcher
+    keys groups by (lane, batch size) and hands each group multi-
+    dimensional options (see ``Option``) whose parallel dims charge both
+    the fused launch's shared batch budget and the member lane's own
+    batch-curve cap.  Nothing here is lane-aware: a cross-lane group is
+    just a group whose option spans more than one budget dimension, and
+    the capacity bound uses the option's *total* usage.
+
     ``warm`` maps group index -> (dim, usage) pairs granted to the group on
     a previous solve; they seed the incumbent exactly like ``solve``'s warm
     starts.
@@ -102,7 +140,7 @@ def solve_grouped(options: Sequence[Sequence[Option]],
     for g, (opts, m) in enumerate(zip(options, counts)):
         if not opts or m <= 0:
             continue
-        min_use = max(1, min(o.usage for o in opts))
+        min_use = max(1, min(_usage_total(o) for o in opts))
         cap = min(int(m), total_budget // min_use)
         seeds = list((warm or {}).get(g, ()))
         for i in range(cap):
@@ -116,7 +154,7 @@ def solve_grouped(options: Sequence[Sequence[Option]],
     for si, o in sol.choices.items():
         alloc.setdefault(slot_group[si], []).append(o)
     for granted in alloc.values():
-        granted.sort(key=lambda o: (-o.reward, o.usage))
+        granted.sort(key=lambda o: (-o.reward, _usage_total(o)))
     return GroupedSolution(alloc=alloc, reward=sol.reward, nodes=sol.nodes,
                            optimal=sol.optimal, n_slots=len(slot_group))
 
@@ -131,21 +169,23 @@ def _greedy(options: Sequence[Sequence[Option]], budgets: List[int],
     total = 0.0
     if seed:
         for r, o in seed.items():  # detlint: ignore[DET001] warm-start dict is solver-insertion-ordered; admission order is the algorithm
-            if o.usage <= rem[o.dim]:
+            if all(u <= rem[d] for d, u in _spans(o)):
                 chosen[r] = o
-                rem[o.dim] -= o.usage
+                for d, u in _spans(o):
+                    rem[d] -= u
                 total += o.reward
     order = sorted((r for r in range(len(options)) if r not in chosen),
                    key=lambda r: -max((o.reward for o in options[r]), default=0.0))
     for r in order:
         best = None
-        for o in sorted(options[r], key=lambda o: (-o.reward, o.usage)):
-            if o.reward > 0 and o.usage <= rem[o.dim]:
+        for o in sorted(options[r], key=lambda o: (-o.reward, _usage_total(o))):
+            if o.reward > 0 and all(u <= rem[d] for d, u in _spans(o)):
                 best = o
                 break
         if best is not None:
             chosen[r] = best
-            rem[best.dim] -= best.usage
+            for d, u in _spans(best):
+                rem[d] -= u
             total += best.reward
     return chosen, total
 
@@ -169,9 +209,10 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
         node_cap = min(node_cap, max(1, int(time_cap * NODES_PER_SECOND)))
 
     # feasibility filter: an option can never fit if its usage alone
-    # exceeds its dimension's budget
+    # exceeds its dimension's budget (checked per consumed dimension)
     feasible: List[List[Option]] = [
-        [o for o in opts if o.reward > 0 and o.usage <= budgets[o.dim]]
+        [o for o in opts if o.reward > 0
+         and all(u <= budgets[d] for d, u in _spans(o))]
         for opts in options]
 
     # slack dimensions: budget covers every request's largest option there,
@@ -180,24 +221,31 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
     for opts in feasible:
         per_dim: Dict[int, int] = {}
         for o in opts:
-            per_dim[o.dim] = max(per_dim.get(o.dim, 0), o.usage)
+            for d, u in _spans(o):
+                per_dim[d] = max(per_dim.get(d, 0), u)
         for d, u in per_dim.items():
             max_use[d] += u
     slack = [max_use[d] <= budgets[d] for d in range(len(budgets))]
 
     # dominance prune per request:
-    #   * same dim: dominated in (reward, usage) — classic Pareto;
-    #   * cross dim: any option on a slack dimension dominates options with
-    #     no more reward (swapping to it can never break feasibility).
+    #   * same dims: dominated in (reward, per-dim usage) — classic Pareto;
+    #   * cross dim: any option entirely on slack dimensions dominates
+    #     options with no more reward (swapping to it can never break
+    #     feasibility).
     pruned: List[List[Option]] = []
     for opts in feasible:
-        slack_best = max((o.reward for o in opts if slack[o.dim]), default=None)
+        slack_best = max((o.reward for o in opts
+                          if all(slack[d] for d, _ in _spans(o))),
+                         default=None)
         keep: List[Option] = []
-        for o in sorted(opts, key=lambda o: (o.usage, -o.reward)):
+        for o in sorted(opts, key=lambda o: (_usage_total(o), -o.reward)):
+            o_use = dict(_spans(o))
             if (slack_best is not None and o.reward < slack_best
-                    and not slack[o.dim]):
+                    and not all(slack[d] for d in o_use)):
                 continue
-            if any(p.dim == o.dim and p.reward >= o.reward and p.usage <= o.usage
+            if any(p.reward >= o.reward
+                   and set(dict(_spans(p))) == set(o_use)
+                   and all(u <= o_use[d] for d, u in _spans(p))
                    for p in keep):
                 continue
             keep.append(o)
@@ -208,7 +256,7 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
     # break their symmetry (steady traffic yields many same-class requests
     # with bit-identical rewards)
     best_reward = [max((o.reward for o in opts), default=0.0) for opts in pruned]
-    sig = [tuple(sorted((o.dim, o.usage, o.reward) for o in opts))
+    sig = [tuple(sorted((_spans(o), o.reward) for o in opts))
            for opts in pruned]
     order = sorted(range(n), key=lambda r: (-best_reward[r], sig[r]))
     # suffix bound: best achievable from request position j onward
@@ -239,8 +287,11 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
              "capped": False}
 
     # pre-sort each request's options best-reward-first once (the DFS used
-    # to re-sort at every node on the hot path)
+    # to re-sort at every node on the hot path), and pre-normalize each
+    # option's (dim, usage) spans so the hot loop never re-derives them
     by_reward = [sorted(opts, key=lambda o: -o.reward) for opts in pruned]
+    by_spans = [[(_spans(o), _usage_total(o)) for o in opts]
+                for opts in by_reward]
 
     def dfs(j: int, rem: List[int], cap_rem: int, cur: float,
             chosen: Dict[int, Option]):
@@ -266,13 +317,15 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
             return
         r = order[j]
         # try options best-first, then the skip branch
-        for o in by_reward[r]:
-            if o.usage <= rem[o.dim]:
-                rem[o.dim] -= o.usage
+        for o, (sp, use) in zip(by_reward[r], by_spans[r]):
+            if all(u <= rem[d] for d, u in sp):
+                for d, u in sp:
+                    rem[d] -= u
                 chosen[r] = o
-                dfs(j + 1, rem, cap_rem - o.usage, cur + o.reward, chosen)
+                dfs(j + 1, rem, cap_rem - use, cur + o.reward, chosen)
                 del chosen[r]
-                rem[o.dim] += o.usage
+                for d, u in sp:
+                    rem[d] += u
         dfs(skip_to[j], rem, cap_rem, cur, chosen)
 
     dfs(0, list(budgets), sum(budgets), 0.0, {})
@@ -293,8 +346,9 @@ def brute_force(options: Sequence[Sequence[Option]], budgets: Sequence[int]) -> 
                 continue
             if o.reward <= 0:
                 continue
-            rem[o.dim] -= o.usage
-            if rem[o.dim] < 0:
+            for d, u in _spans(o):
+                rem[d] -= u
+            if any(rem[d] < 0 for d, _ in _spans(o)):
                 ok = False
                 break
             total += o.reward

@@ -29,6 +29,16 @@ preferred stock, primary-class units are tapped only while the lender keeps
 ``lend_reserve`` idle units of its own.  With ``FleetConfig.lending=False``
 (the default) the broker is never constructed and every touched code path
 is bit-identical to the lending-free fleet.
+
+Wake sources and trigger gates (the clock.py standard): the fleet driver
+registers the broker's ``next_wake`` — the earliest loan min-hold expiry
+and the next lending-window boundary — and lending forces
+``idle_window_wakeups`` on (a loan must be returnable during an idle gap
+the heartbeat would otherwise widen past).  The trigger gate lives in
+``step``: a wake-up only makes the broker *look*; the pressure/supply
+thresholds (``lend_min_pressure``, idle-window-clean supply,
+``lend_min_stage_s`` — stage runs shorter than that gate never justify a
+reload round-trip) and the min-hold decide whether a loan actually moves.
 """
 from __future__ import annotations
 

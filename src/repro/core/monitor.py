@@ -167,6 +167,14 @@ class FleetMonitor:
         self._rh_keep: int = 0
         self._rh: Dict[int, Dict[str, float]] = {}
         self._rh_lo: int = 0
+        # per-placement-class demand history: same binning, keyed by the
+        # placement type an arrival's auxiliary stages will demand ("E"/"C")
+        # instead of by pipeline.  Disabled unless ``enable_class_history``
+        # is called (predictive + cross-lane batching only).
+        self._ch_bin: float = 0.0
+        self._ch_keep: int = 0
+        self._ch: Dict[int, Dict[str, float]] = {}
+        self._ch_lo: int = 0
 
     # -- recording -------------------------------------------------------------
 
@@ -177,6 +185,29 @@ class FleetMonitor:
         every other path leaves the history disabled and records nothing."""
         self._rh_bin = bin_s
         self._rh_keep = max(2, int(round(span_s / bin_s)))
+
+    def enable_class_history(self, bin_s: float, span_s: float) -> None:
+        """Turn on the per-placement-class demand history (the cross-lane
+        batching follow-up to the per-pipeline forecast): the fleet driver
+        records each admitted request's auxiliary-stage chip-seconds under
+        the placement type that stage will run on, so the predictive
+        scheduler can forecast the placement-type *mix* the batcher will
+        want and prioritize its pre-warm staging accordingly."""
+        self._ch_bin = bin_s
+        self._ch_keep = max(2, int(round(span_s / bin_s)))
+
+    def record_class_demand(self, tau: float, cls: str, cost: float) -> None:
+        """One arrival's demand (chip-seconds) against one placement class.
+        No-op unless ``enable_class_history`` was called."""
+        if not self._ch_bin:
+            return
+        b = int(tau // self._ch_bin)
+        d = self._ch.setdefault(b, {})
+        d[cls] = d.get(cls, 0.0) + cost
+        lo = b - self._ch_keep
+        while self._ch_lo < lo:
+            self._ch.pop(self._ch_lo, None)
+            self._ch_lo += 1
 
     def record_arrival(self, tau: float, pipeline: str, cost: float) -> None:
         self._arrivals.append((tau, pipeline, cost))
@@ -286,6 +317,25 @@ class FleetMonitor:
             d = self._rh.get(b, {})
             out.append(((b + 0.5) * self._rh_bin,
                         {p: d.get(p, 0.0) / self._rh_bin for p in pipelines}))
+        return out
+
+    def class_rate_history(self, tau: float, classes,
+                           last: Optional[int] = None) -> List[
+            Tuple[float, Dict[str, float]]]:
+        """``rate_history``'s per-placement-class twin: completed bins of
+        ``{placement class: demand rate}``, zero-filled, current bin
+        excluded.  Empty unless ``enable_class_history`` was called."""
+        if not self._ch_bin:
+            return []
+        cur = int(tau // self._ch_bin)
+        first = max(0, cur - self._ch_keep)
+        if last is not None:
+            first = max(first, cur - last)
+        out: List[Tuple[float, Dict[str, float]]] = []
+        for b in range(first, cur):
+            d = self._ch.get(b, {})
+            out.append(((b + 0.5) * self._ch_bin,
+                        {c: d.get(c, 0.0) / self._ch_bin for c in classes}))
         return out
 
     def next_window_boundary(self) -> Optional[float]:

@@ -250,6 +250,23 @@ class RuntimeEngine:
             u.hb_staged = 0.0
             self._mark_busy(g, finish)
 
+    def push_cross(self, nbytes: float) -> float:
+        """Transfer cost of pushing inter-stage tensors to a *foreign*
+        engine's units (cross-lane fused stage runs, core/dispatcher.py's
+        ``CrossLaneBatcher``): always the two-step inter-node path — lanes
+        occupy disjoint chip ranges, so source and destination never share
+        a node — with no handoff-buffer staging on the destination (the
+        host engine owns that unit's buffer accounting).  Returns the
+        added latency; stats are charged to this (the member's) engine,
+        mirroring ``_push``."""
+        t = (self.prof.transfer_time(nbytes, intra_node=False)
+             + self.prof.transfer_time(nbytes, intra_node=True))
+        self.stats.device_pushes += 1
+        self.stats.transfer_time += t
+        if self.proactive_push:
+            return t
+        return t + DISPATCH_OVERHEAD
+
     # ----------------------------------------------------------- dispatch plans
 
     def execute(self, dec: DispatchDecision, tau: float) -> Dict[str, Tuple[float, float]]:
@@ -257,50 +274,89 @@ class RuntimeEngine:
 
         Timing honors: unit availability, reinstance, Adjust-on-Dispatch
         loads, proactive push, and merging of co-located consecutive stages.
+
+        Cross-lane fused stages (fleet dynamic batching) override parts of
+        the plan via decision attributes set by the batcher:
+
+        * ``dec.xl_efused = (start, fin, native, host_units)`` — Encode ran
+          (or will run) as one fused launch on the *host* lane's units;
+          this engine only models the activation push from those units to
+          its own Diffuse set (``_push`` when the host is this engine,
+          ``push_cross`` otherwise) and never touches ``dec.e_units``.
+        * ``dec.xl_cdefer`` — Decode is fused downstream: release the
+          Diffuse units at D-finish and return without a "C" entry; the
+          batcher schedules the fused decode from the recorded D-finish.
         """
         req = dec.request
         prof = self.prof
         k_chips = dec.degree * prof.k_min
         bs = getattr(dec, "batch", 1)   # App. E.1 dynamic batching
-        t_e = prof.batched_stage_time(req, "E",
-                                      max(1, len(dec.e_units)) * prof.k_min, bs)
+        xl_e = getattr(dec, "xl_efused", None)
+        xl_cdefer = getattr(dec, "xl_cdefer", False)
         t_d = prof.batched_stage_time(req, "D", k_chips, bs)
-        t_c = prof.batched_stage_time(req, "C",
-                                      max(1, len(dec.c_units)) * prof.k_min, bs)
 
         out: Dict[str, Tuple[float, float]] = {}
-        merged_ed = tuple(dec.e_units) == tuple(dec.d_units)
-        merged_dc = set(dec.c_units) <= set(dec.d_units)
-
-        # --- E ---------------------------------------------------------------
-        e_ready = max(tau, max(self.units[g].free_at for g in dec.e_units))
-        e_ready += self._reinstance(dec.e_units)
-        e_ready += self._prepare_stage("E", dec.e_units, tau)
-        if merged_ed:
-            # merging execute: E+D single atomic run (one dispatch overhead)
-            d_ready = max(e_ready, max(self.units[g].free_at for g in dec.d_units))
-            d_ready += self._reinstance(dec.d_units)
-            d_ready += self._prepare_stage("D", dec.d_units, tau)
-            start = d_ready
-            e_fin = start + t_e
-            d_fin = e_fin + t_d - DISPATCH_OVERHEAD  # merged: one overhead only
-            self.stats.merged_runs += 1
-            out["E"] = (start, e_fin)
-            out["D"] = (e_fin, d_fin)
-        else:
-            e_fin = e_ready + t_e
-            out["E"] = (e_ready, e_fin)
-            self._reserve(dec.e_units, e_ready, e_fin)
-            data_ready = self._push(prof.comm_bytes(req, "ED"),
-                                    dec.e_units, dec.d_units, e_fin)
+        if xl_e is not None:
+            e_start, e_fin, native, host_units = xl_e
+            merged_ed = False
+            out["E"] = (e_start, e_fin)
+            nbytes = prof.comm_bytes(req, "ED")
+            if native:
+                data_ready = self._push(nbytes, host_units, dec.d_units,
+                                        e_fin)
+            else:
+                data_ready = e_fin + self.push_cross(nbytes)
             d_start = max(data_ready,
                           max(self.units[g].free_at for g in dec.d_units))
             d_start += self._reinstance(dec.d_units)
             d_start += self._prepare_stage("D", dec.d_units, tau)
             d_fin = d_start + t_d
             out["D"] = (d_start, d_fin)
+        else:
+            t_e = prof.batched_stage_time(
+                req, "E", max(1, len(dec.e_units)) * prof.k_min, bs)
+            merged_ed = tuple(dec.e_units) == tuple(dec.d_units)
+
+            # --- E -----------------------------------------------------------
+            e_ready = max(tau, max(self.units[g].free_at for g in dec.e_units))
+            e_ready += self._reinstance(dec.e_units)
+            e_ready += self._prepare_stage("E", dec.e_units, tau)
+            if merged_ed:
+                # merging execute: E+D single atomic run (one dispatch overhead)
+                d_ready = max(e_ready,
+                              max(self.units[g].free_at for g in dec.d_units))
+                d_ready += self._reinstance(dec.d_units)
+                d_ready += self._prepare_stage("D", dec.d_units, tau)
+                start = d_ready
+                e_fin = start + t_e
+                d_fin = e_fin + t_d - DISPATCH_OVERHEAD  # merged: one overhead
+                self.stats.merged_runs += 1
+                out["E"] = (start, e_fin)
+                out["D"] = (e_fin, d_fin)
+            else:
+                e_fin = e_ready + t_e
+                out["E"] = (e_ready, e_fin)
+                self._reserve(dec.e_units, e_ready, e_fin)
+                data_ready = self._push(prof.comm_bytes(req, "ED"),
+                                        dec.e_units, dec.d_units, e_fin)
+                d_start = max(data_ready,
+                              max(self.units[g].free_at for g in dec.d_units))
+                d_start += self._reinstance(dec.d_units)
+                d_start += self._prepare_stage("D", dec.d_units, tau)
+                d_fin = d_start + t_d
+                out["D"] = (d_start, d_fin)
 
         # --- C ---------------------------------------------------------------
+        if xl_cdefer:
+            # fused decode downstream: hold the Diffuse units through D only
+            self._reserve(dec.d_units,
+                          out["E"][0] if merged_ed else out["D"][0], d_fin)
+            self.stats.dispatches += 1 if xl_e is not None else 2
+            return out
+
+        t_c = prof.batched_stage_time(req, "C",
+                                      max(1, len(dec.c_units)) * prof.k_min, bs)
+        merged_dc = set(dec.c_units) <= set(dec.d_units)
         if merged_dc:
             c_start = d_fin
             c_fin = c_start + t_c - DISPATCH_OVERHEAD
@@ -323,5 +379,5 @@ class RuntimeEngine:
             out["C"] = (c_start, c_fin)
             self._reserve(dec.c_units, c_start, c_fin)
 
-        self.stats.dispatches += 3
+        self.stats.dispatches += 2 if xl_e is not None else 3
         return out

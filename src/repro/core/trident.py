@@ -21,7 +21,8 @@ class TridentScheduler(Scheduler):
     def __init__(self, prof: Profiler, sim_cfg: SimConfig,
                  trace: Sequence[Request], *, enable_switch: bool = True,
                  stage_aware: bool = True, use_ilp: bool = True,
-                 enable_batching: bool = True, aggregate_ilp: bool = False):
+                 enable_batching: bool = True, aggregate_ilp: bool = False,
+                 cross_lane_batching: bool = False):
         super().__init__(prof, sim_cfg, trace)
         self.orch = Orchestrator(prof, num_chips=sim_cfg.num_chips)
         # aggregate_ilp: multiplicity-aware solver aggregation (identical
@@ -32,6 +33,10 @@ class TridentScheduler(Scheduler):
         self.stage_aware = stage_aware          # wo-stageAware ablation
         self.use_ilp = use_ilp                  # wo-scheduler ablation
         self.enable_batching = enable_batching  # App. E.1 dynamic batching
+        # fleet cross-lane batching: when on, tick() annotates decisions
+        # whose auxiliary E/C runs are fusable across lanes (dec.xl_candidate)
+        # for the fleet's CrossLaneBatcher; off leaves decisions untouched
+        self.cross_lane_batching = cross_lane_batching
         self.t_win = T_WIN.get(prof.cfg.name, 300.0)
         self.solver_time = 0.0
         self.solver_calls = 0
@@ -130,6 +135,40 @@ class TridentScheduler(Scheduler):
                 dec.corequests = tuple(chunk[1:bs])
         self.solver_time += time.perf_counter() - t0  # detlint: ignore[DET002] wall-clock metrics only (solver_time); no control flow
         self.solver_calls += 1
+        if self.cross_lane_batching:
+            # mark auxiliary stage runs the fleet batcher may fuse across
+            # lanes: E when it is NOT merged into the primary launch, C when
+            # it runs on units outside the decode set.  Co-resident stages
+            # stay native — fusing them would break the merged-launch model.
+            free_at = sim.engine.free_at()
+            for dec in out:
+                prim = PRIMARY_PLACEMENTS[dec.vr_type]
+                stages = []
+                if "E" not in prim and dec.e_units:
+                    stages.append("E")
+                if dec.c_units and not set(dec.c_units) <= set(dec.d_units):
+                    stages.append("C")
+                if stages:
+                    dec.xl_candidate = tuple(stages)
+                # E-hold: when the auxiliary encode unit is already
+                # backlogged past one solo run, dispatching natively would
+                # pin primary units against a queued encode.  The decision
+                # is marked held — the fleet batcher still sees it as a
+                # fusion candidate this tick, but if no cross-lane fusion
+                # takes it the lane skips execution and the request stays
+                # in the pending pool (clock.Lane.execute_decisions), so
+                # the backlog queues where fusion can pack it instead of
+                # invisibly on the unit's free_at.  Once the backlog
+                # drains (wait <= one run) requests dispatch natively, so
+                # holding never idles the unit; requests out of deadline
+                # slack always dispatch (no starvation under overload).
+                if "E" in stages:
+                    wait = (max(free_at.get(g, tau) for g in dec.e_units)
+                            - tau)
+                    solo = self.prof.stage_time(
+                        dec.request, "E", len(dec.e_units) * self.prof.k_min)
+                    if wait > solo and tau + wait <= dec.request.deadline:
+                        dec.xl_hold = True
         return out
 
     # -- ablation variants ---------------------------------------------------------

@@ -202,6 +202,97 @@ def bursty_ec_phases(duration: float, head: float = 180.0,
 BURSTY_EC: Tuple[Tuple[float, Dict[str, float]], ...] = bursty_ec_phases(600.0)
 
 
+# Cross-lane dynamic batching scenario (``--cross-batch``,
+# tests/test_cross_batch.py): a long-prompt burst storm over a flux +
+# hunyuanvideo fleet.  A steady cheap-prompt base stream (cond_len 77,
+# ``light`` mixes) sizes the frozen plans — each lane gets exactly one
+# auxiliary encode unit and flux's EDC pool runs ~90% busy.  On top of
+# it, correlated waves of prompt-expansion requests (cond_len 4096,
+# CROSS_BATCH_MIXES classes with cheap decode so the encode stage is the
+# bottleneck) hit both pipelines at once.  Each wave overloads flux's
+# single aux <E> unit (~2.4 unit-equivalents of encode demand against 1);
+# cross-lane batching packs flux and hunyuanvideo encodes into one
+# batched launch on the freer of the two aux units (~1.55x batch
+# amortization at cond 4096).  The alternatives are structurally out:
+# unit lending cannot help (flux's encode at cond 4096 runs 0.37 s,
+# below the 0.5 s ``lend_min_stage_s`` gate, and the correlated waves
+# leave no idle-window-clean supply) and re-partitioning cannot help
+# (every plan shape carries exactly one aux E unit regardless of chip
+# count, the waves are correlated so shares don't move, and each burst
+# is shorter than the detection window + cooldown).  Rates are tuned for
+# 96 chips; the wave rate sits just below the regime where fused batches
+# serialize — raising it inverts the benefit.
+CROSS_BATCH_PIPELINES: Tuple[str, ...] = ("flux", "hunyuanvideo")
+CROSS_BATCH_MIXES: Dict[str, List[Tuple[Tuple[int, float], float]]] = {
+    "flux": [((128, 0), 1), ((256, 0), 1)],
+    "hunyuanvideo": [((540, 1), 1)],
+}
+CROSS_BATCH_BASE_RATES: Dict[str, float] = {"flux": 2.2, "hunyuanvideo": 0.5}
+CROSS_BATCH_WAVE_RATES: Dict[str, float] = {"flux": 7.0, "hunyuanvideo": 0.3}
+CROSS_BATCH_COND: Dict[str, int] = {"flux": 4096, "hunyuanvideo": 4096}
+# the wave stream draws from an offset seed so base and wave arrivals
+# stay independent per-pipeline streams (prime offset, same idiom as the
+# dynamic/proprietary trace seed offsets)
+CROSS_BATCH_WAVE_SEED_OFFSET = 7919
+
+
+def cross_batch_phases(duration: float, head: float = 240.0,
+                       burst: float = 90.0, calm: float = 150.0,
+                       pipelines: Sequence[str] = CROSS_BATCH_PIPELINES
+                       ) -> Tuple[Tuple[float, Dict[str, float]], ...]:
+    """Burst-gate phase spans for the cross-batch wave stream: multiplier
+    0 for every pipeline outside the bursts (the wave simply does not
+    exist then), 1 inside.  Like ``bursty_ec_phases`` the burst lengths
+    are absolute — each burst must stay shorter than the re-partitioner's
+    detection window + cooldown — and durations too short for one full
+    cycle fall back to the tuned 900 s shape scaled proportionally."""
+    if duration < head + burst + calm:
+        scale = duration / 900.0
+        head, burst, calm = head * scale, burst * scale, calm * scale
+    off = {p: 0.0 for p in pipelines}
+    on = {p: 1.0 for p in pipelines}
+    spans: List[Tuple[float, Dict[str, float]]] = [(head / duration, dict(off))]
+    t = head
+    while t < duration:
+        t += burst
+        spans.append((min(t / duration, 1.0), dict(on)))
+        if t >= duration:
+            break
+        t += calm
+        spans.append((min(t / duration, 1.0), dict(off)))
+    return tuple(spans)
+
+
+def cross_batch_trace(duration: float, profs: Dict[str, Profiler],
+                      seed: int = 0,
+                      base_rates: Optional[Dict[str, float]] = None,
+                      wave_rates: Optional[Dict[str, float]] = None,
+                      head: float = 240.0, burst: float = 90.0,
+                      calm: float = 150.0,
+                      slo_scale: float = SLO_SCALE) -> List[Request]:
+    """Long-prompt burst-storm trace: the cheap-prompt base stream merged
+    with the burst-gated cond-4096 wave stream.  Wave requests carry
+    ``cond_len`` from CROSS_BATCH_COND and their deadline is recomputed
+    from the profiler at that prompt length, so the SLO reflects the work
+    actually requested."""
+    pipes = CROSS_BATCH_PIPELINES
+    base = fleet_trace(pipes, duration, profs, seed=seed,
+                       rates=dict(base_rates or CROSS_BATCH_BASE_RATES),
+                       level="light", slo_scale=slo_scale)
+    wave = fleet_trace(pipes, duration, profs,
+                       seed=seed + CROSS_BATCH_WAVE_SEED_OFFSET,
+                       rates=dict(wave_rates or CROSS_BATCH_WAVE_RATES),
+                       phases=cross_batch_phases(duration, head, burst, calm,
+                                                 pipes),
+                       mix_override=CROSS_BATCH_MIXES, slo_scale=slo_scale)
+    for r in wave:
+        r.cond_len = CROSS_BATCH_COND[r.pipeline]
+        r.deadline = r.arrival + slo_scale * profs[r.pipeline].pipeline_time(r)
+    out = base + wave
+    out.sort(key=lambda r: (r.arrival, r.pipeline, r.rid))
+    return out
+
+
 # Diurnal predictive scenario (``--predictive``, tests/test_forecast.py):
 # anti-phase day/night demand between the image and the video pipeline —
 # the periodic structure the demand forecaster (core/forecast.py) exists to
@@ -293,21 +384,27 @@ def fleet_trace(pipelines: Sequence[str], duration: float,
                 rates: Optional[Dict[str, float]] = None,
                 phases: Optional[Sequence[Tuple[float, Dict[str, float]]]] = None,
                 level: str = "medium",
-                slo_scale: float = SLO_SCALE) -> List[Request]:
+                slo_scale: float = SLO_SCALE,
+                mix_override: Optional[Dict[str, List[Tuple[Tuple[int, float],
+                                                            float]]]] = None
+                ) -> List[Request]:
     """Merged multi-pipeline trace with piecewise-constant rate multipliers.
 
     ``phases`` is a sequence of ``(end_fraction, {pipeline: multiplier})``
     spans; within each span pipeline ``p`` arrives as a Poisson process at
     ``rates[p] * multiplier`` (missing multipliers default to 1).  Each
     pipeline draws from its own deterministic stream, so adding a pipeline
-    or reordering the list never perturbs the others' arrivals."""
+    or reordering the list never perturbs the others' arrivals.
+    ``mix_override`` maps a pipeline to a class mix used in place of
+    ``MIXES[pid][level]`` (scenario-specific mixes like CROSS_BATCH_MIXES
+    stay out of the Table 5 tables)."""
     if phases is None:
         phases = ((1.0, {}),)
     out: List[Request] = []
     for pid in pipelines:
         rng = random.Random(f"fleet:{seed}:{pid}")
         base = (rates or FLEET_RATES).get(pid, RATES[pid])
-        mix = MIXES[pid][level]
+        mix = (mix_override or {}).get(pid) or MIXES[pid][level]
         start = 0.0
         for end_frac, mults in phases:
             end = duration * end_frac

@@ -1,0 +1,268 @@
+"""Fleet-level cross-lane dynamic batching (core/dispatcher.CrossLaneBatcher).
+
+Covers: the shape-key contract (same placement type but different stage
+never merges), borrow-ledger accounting for fused launches spanning a
+borrowed unit, the multi-dimensional grouped-ILP column against an
+exhaustive reference, the E-hold execute/skip contract, the burst-storm
+trace generator, off-path bit-identity (knobs present but batching off),
+and the headline behavior at smoke scale — correlated long-prompt bursts
+overload each lane's single auxiliary encode unit and cross-lane fusion
+recovers the tail.
+"""
+import random
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core import ilp, workloads
+from repro.core.clock import Lane
+from repro.core.dispatcher import CrossLaneBatcher
+from repro.core.fleet import FleetConfig, PipelineRegistry, run_fleet
+
+PIPES = workloads.CROSS_BATCH_PIPELINES
+
+# CI-sized burst storm, one tuned definition shared with
+# ``benchmarks/e2e.py --cross-batch`` (its smoke variant)
+SMOKE = dict(duration=600.0, head=160.0,
+             base_rates={"flux": 1.45, "hunyuanvideo": 0.35},
+             wave_rates={"flux": 4.6, "hunyuanvideo": 0.2},
+             cfg=dict(num_chips=64, t_win=120.0, cooldown=100.0))
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return PipelineRegistry(PIPES)
+
+
+@pytest.fixture(scope="module")
+def profs(registry):
+    return {p: registry.profiler(p) for p in PIPES}
+
+
+def _storm(profs, on, seed=0):
+    cfg = FleetConfig(cross_lane_batching=on,
+                      cross_lane_max_batch=(8 if on else 0), **SMOKE["cfg"])
+    trace = workloads.cross_batch_trace(SMOKE["duration"], profs, seed=seed,
+                                        base_rates=SMOKE["base_rates"],
+                                        wave_rates=SMOKE["wave_rates"],
+                                        head=SMOKE["head"])
+    return run_fleet(PIPES, mode="predictive", duration=SMOKE["duration"],
+                     cfg=cfg, registry=PipelineRegistry(PIPES), trace=trace)
+
+
+@pytest.fixture(scope="module")
+def storm_runs(profs):
+    return _storm(profs, on=False), _storm(profs, on=True)
+
+
+# -- shape-key contract --------------------------------------------------------
+
+def _stub_lane(pid, placements, unit_size=2):
+    plan = SimpleNamespace(placements=placements, unit_size=unit_size)
+    return SimpleNamespace(pipeline=pid, engine=SimpleNamespace(plan=plan))
+
+
+def test_same_ptype_different_stage_never_merges():
+    """A ⟨C⟩-typed unit hosting a warm E replica must not merge with a C
+    run on the same placement type: the shape key includes the *stage*,
+    so the two candidates land in distinct groups, each spanning one
+    lane, and no fusion happens."""
+    lane_a = _stub_lane("flux", {0: "C"})
+    lane_b = _stub_lane("hunyuanvideo", {0: "C"})
+    dec_e = SimpleNamespace(xl_candidate=("E",), e_units=(0,), c_units=())
+    dec_c = SimpleNamespace(xl_candidate=("C",), e_units=(), c_units=(0,))
+    batcher = CrossLaneBatcher()
+    groups = batcher._collect([(lane_a, [dec_e]), (lane_b, [dec_c])])
+    assert set(groups) == {("E", "C", 2), ("C", "C", 2)}
+    assert all(len(g) == 1 for g in groups.values())
+    # end-to-end: plan() fuses nothing (clock untouched, so None is safe)
+    cgroups = batcher.plan([(lane_a, [dec_e]), (lane_b, [dec_c])], 0.0, None)
+    assert cgroups == [] and batcher.merges == 0
+    assert not hasattr(dec_e, "xl_efused") and not hasattr(dec_c, "xl_cdefer")
+
+
+def test_same_shape_same_stage_groups_together():
+    lane_a = _stub_lane("flux", {0: "EC"})
+    lane_b = _stub_lane("hunyuanvideo", {0: "EC"})
+    dec_a = SimpleNamespace(xl_candidate=("E",), e_units=(0,), c_units=())
+    dec_b = SimpleNamespace(xl_candidate=("E",), e_units=(0,), c_units=())
+    groups = CrossLaneBatcher()._collect([(lane_a, [dec_a]),
+                                          (lane_b, [dec_b])])
+    assert set(groups) == {("E", "EC", 2)}
+    assert len(groups[("E", "EC", 2)]) == 2
+
+
+# -- borrow-ledger accounting --------------------------------------------------
+
+def test_fused_launch_on_borrowed_unit_charges_host_ledger():
+    """A fused launch whose host units span a borrowed (lending) slot
+    counts ONE stage run on the host lane's borrow ledger; launches on
+    native units charge nothing, and lanes without lending tracking are
+    untouched (the owning lane's BORROW_PENALTY accounting lives in its
+    own dispatcher, not here)."""
+    batcher = CrossLaneBatcher()
+    host = SimpleNamespace(track_borrowed=True, base_units=4,
+                           borrowed_stage_runs={})
+    batcher._charge_borrowed(host, (5,), "E")        # unit 5 is borrowed
+    assert host.borrowed_stage_runs == {"E": 1}
+    batcher._charge_borrowed(host, (5, 1), "C")      # spans a borrowed slot
+    assert host.borrowed_stage_runs == {"E": 1, "C": 1}
+    batcher._charge_borrowed(host, (1, 2), "E")      # native units only
+    assert host.borrowed_stage_runs == {"E": 1, "C": 1}
+    plain = SimpleNamespace(track_borrowed=False, base_units=4,
+                            borrowed_stage_runs={})
+    batcher._charge_borrowed(plain, (9,), "E")
+    assert plain.borrowed_stage_runs == {}
+
+
+# -- multi-dimensional grouped ILP columns -------------------------------------
+
+def test_multidim_grouped_solve_matches_brute_force():
+    """Cross-lane columns charge two budget dimensions at once (the shared
+    fleet batch budget and the member lane's own cap); the grouped solve
+    must still find the exhaustive optimum."""
+    rng = random.Random(11)
+    for _ in range(30):
+        dims = rng.randrange(2, 4)
+        budgets = [rng.randrange(2, 6) for _ in range(dims)]
+        options, counts = [], []
+        for _g in range(rng.randrange(1, 4)):
+            b = rng.randrange(1, 3)
+            lane_dim = rng.randrange(1, dims)
+            options.append([ilp.Option(dim=(0, lane_dim), usage=(b, b),
+                                       reward=float(rng.randrange(1, 10)))])
+            counts.append(rng.randrange(1, 3))
+        sol = ilp.solve_grouped(options, budgets, counts)
+        expanded = [opts for opts, m in zip(options, counts)
+                    for _ in range(m)]
+        assert abs(sol.reward - ilp.brute_force(expanded, budgets)) < 1e-9
+        # feasibility across every charged dimension
+        rem = list(budgets)
+        for g, granted in sol.alloc.items():
+            assert len(granted) <= counts[g]
+            for o in granted:
+                for d, u in zip(o.dim, o.usage):
+                    rem[d] -= u
+        assert all(r >= 0 for r in rem)
+
+
+# -- E-hold execute/skip contract ----------------------------------------------
+
+def _exec_lane(pending):
+    lane = SimpleNamespace(pending=list(pending), executed=[], recorded=[])
+    lane.engine = SimpleNamespace(
+        execute=lambda dec, tau: lane.executed.append(dec) or {})
+    lane.record = lambda dec, times, clock: lane.recorded.append(dec)
+    return lane
+
+
+def test_e_hold_skips_unfused_and_executes_fused():
+    """An ``xl_hold`` decision executes only when the fleet batcher fused
+    it this tick; otherwise nothing is reserved and the request stays in
+    the pending pool for a later tick."""
+    req_h = SimpleNamespace(rid=1)
+    req_f = SimpleNamespace(rid=2)
+    req_n = SimpleNamespace(rid=3)
+    held = SimpleNamespace(request=req_h, corequests=(), xl_hold=True)
+    fused = SimpleNamespace(request=req_f, corequests=(), xl_hold=True,
+                            xl_efused=(0.0, 1.0, True, (0,)))
+    native = SimpleNamespace(request=req_n, corequests=())
+    lane = _exec_lane([req_h, req_f, req_n])
+    Lane.execute_decisions(lane, [held, fused, native], 0.0, None)
+    assert lane.executed == [fused, native]
+    assert lane.recorded == [fused, native]
+    assert lane.pending == [req_h]         # held request stays pending
+
+
+# -- burst-storm trace generator -----------------------------------------------
+
+def test_cross_batch_trace_deterministic_and_stamped(profs):
+    t1 = workloads.cross_batch_trace(300.0, profs, seed=3)
+    t2 = workloads.cross_batch_trace(300.0, profs, seed=3)
+    # rids are a process-global counter; determinism is everything else
+    assert [(r.pipeline, r.arrival, r.cond_len, r.deadline, r.resolution,
+             r.seconds) for r in t1] == \
+           [(r.pipeline, r.arrival, r.cond_len, r.deadline, r.resolution,
+             r.seconds) for r in t2]
+    assert t1 == sorted(t1, key=lambda r: (r.arrival, r.pipeline, r.rid))
+    wave = [r for r in t1 if r.cond_len != 77]
+    base = [r for r in t1 if r.cond_len == 77]
+    assert wave and base
+    for r in wave:
+        assert r.cond_len == workloads.CROSS_BATCH_COND[r.pipeline]
+        expect = r.arrival + workloads.SLO_SCALE * \
+            profs[r.pipeline].pipeline_time(r)
+        assert abs(r.deadline - expect) < 1e-9
+        # wave classes are the long-prompt scenario classes
+        assert ((r.resolution, r.seconds)
+                in [cls for cls, _ in
+                    workloads.CROSS_BATCH_MIXES[r.pipeline]])
+
+
+def test_cross_batch_phases_gate_and_short_fallback():
+    ph = workloads.cross_batch_phases(900.0)
+    assert ph[0][1] == {p: 0.0 for p in PIPES}     # closed head
+    assert ph[-1][0] == 1.0
+    mults = [m[PIPES[0]] for _, m in ph]
+    assert 1.0 in mults and 0.0 in mults           # gate actually opens
+    assert all(a < b for a, b in zip([f for f, _ in ph],
+                                     [f for f, _ in ph][1:]))
+    # a trace too short for one absolute cycle still bursts (scaled shape)
+    short = workloads.cross_batch_phases(90.0)
+    assert any(m[PIPES[0]] == 1.0 for _, m in short)
+    assert short[-1][0] == 1.0
+
+
+# -- off-path bit-identity -----------------------------------------------------
+
+def test_knobs_default_off():
+    cfg = FleetConfig()
+    assert cfg.cross_lane_batching is False
+    assert cfg.cross_lane_max_batch == 0
+
+
+def test_off_path_bit_identical_with_knobs_present(profs):
+    """``cross_lane_max_batch`` with batching off must be bit-identical to
+    the plain config — the knob is read only by the CrossLaneBatcher,
+    which the off path never constructs (the committed BENCH trajectories
+    must stay byte-stable)."""
+    def run(**kw):
+        cfg = FleetConfig(num_chips=64, t_win=60.0, cooldown=40.0, **kw)
+        trace = workloads.cross_batch_trace(180.0, profs, seed=1,
+                                            head=60.0)
+        return run_fleet(PIPES, mode="predictive", duration=180.0, cfg=cfg,
+                         registry=PipelineRegistry(PIPES), trace=trace)
+    a = run()
+    b = run(cross_lane_max_batch=8)
+    assert a.p95_latency == b.p95_latency
+    assert a.mean_latency == b.mean_latency
+    assert a.slo_attainment == b.slo_attainment
+    assert a.sched_wakeups == b.sched_wakeups
+    assert a.repartitions == b.repartitions
+    assert b.cross_lane_merges == 0 and b.cross_lane_merged_requests == 0
+
+
+# -- headline behavior at smoke scale ------------------------------------------
+
+def test_cross_lane_batching_improves_burst_storm_tail(storm_runs):
+    off, on = storm_runs
+    assert not off.oom and not on.oom
+    assert off.n_requests == on.n_requests
+    assert off.cross_lane_merges == 0
+    assert on.cross_lane_merges > 0
+    # every fusion spans >= 2 lanes, so >= 2 batch items per merge
+    assert on.cross_lane_merged_requests >= 2 * on.cross_lane_merges
+    assert on.p95_latency <= off.p95_latency
+    # E-hold never starves: everything admitted finishes under overload
+    assert on.n_finished == on.n_requests
+
+
+def test_burst_storm_helps_the_overloaded_lane(storm_runs):
+    """The lane whose single auxiliary encode unit overloads is the one
+    the fusion rescues — the partner lane may trade some of its own tail
+    into the pool, but the *worst* pipeline's tail must improve (which
+    lane is worst depends on scale; the contract doesn't)."""
+    off, on = storm_runs
+    worst_off = max(m["p95_s"] for m in off.per_pipeline.values())
+    worst_on = max(m["p95_s"] for m in on.per_pipeline.values())
+    assert worst_on < worst_off
