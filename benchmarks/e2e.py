@@ -884,6 +884,314 @@ def run_cross_batch_smoke(bench_path: Optional[str] = None) -> List[Row]:
                            narrative_arms=False)
 
 
+# ---------------------------------------------------------------- scale tier
+
+# 8-pipeline fleet at datacenter scale: the 4 base configs plus a -v2 alias
+# of each (same profile, separately-tracked traffic), rates tuned so 4096
+# chips sit hot-but-not-saturated (~528 req/s aggregate).  The canonical
+# definition lives in workloads.SCALE_* — the values here only name the two
+# committed tiers.
+SCALE_SMOKE_CHIPS = 512
+SCALE_SMOKE_REQUESTS = 100_000
+SCALE_FULL_CHIPS = 4096
+SCALE_FULL_REQUESTS = 1_000_000
+SCALE_LEVEL = "medium"
+# the three flag-gated hot paths this tier exists to measure (FleetConfig
+# fields; the committed BENCH baselines all run with these at their off
+# defaults, pinned bit-exact by tests/test_scale_parity.py)
+SCALE_FAST_KW: Dict = dict(array_state=True, incremental_ilp=True,
+                           step_changed_lanes_only=True)
+
+# Self-contained so it also runs against a pre-scale-out reference tree:
+# the trace is built from the (rates, aliases, level) payload via the
+# pre-existing fleet_trace API instead of workloads.scale_trace (which the
+# reference tree does not have), and unknown FleetConfig fields are
+# filtered out.  Only ``FleetSimulator.run`` is timed.
+_SCALE_DRIVER = r"""
+import dataclasses, gc, json, sys, time
+from repro.core import workloads
+from repro.core.fleet import (FleetConfig, FleetOrchestrator, FleetSimulator,
+                              PipelineRegistry, FLEET_SCHEDULERS)
+p = json.load(sys.stdin)
+aliases = p["aliases"]
+scale = p["num_chips"] / p["base_chips"]
+rates = {pid: r * scale for pid, r in p["rates"].items()}
+duration = p["n_requests"] / sum(rates.values())
+pipelines = list(p["rates"])
+mix = {a: workloads.MIXES[b][p["level"]] for a, b in aliases.items()}
+# older trees resolve RATES[pid] eagerly inside fleet_trace's rate lookup;
+# aliases only need the key to exist (their real rate comes from ``rates``)
+for a in aliases:
+    workloads.RATES.setdefault(a, 0.0)
+fields = {f.name for f in dataclasses.fields(FleetConfig)}
+cfg_kw = {k: v for k, v in p["cfg_kw"].items() if k in fields}
+best = None
+for _ in range(p["repeats"]):
+    reg = PipelineRegistry()
+    for pid in pipelines:
+        if pid not in aliases:
+            reg.register(pid)
+    for a, b in aliases.items():
+        reg.register(a, profiler=reg.profiler(b))
+    profs = {pid: reg.profiler(pid) for pid in pipelines}
+    trace = workloads.fleet_trace(pipelines, duration, profs, seed=0,
+                                  rates=rates, level=p["level"],
+                                  mix_override=mix)
+    cfg = FleetConfig(num_chips=p["num_chips"], **cfg_kw)
+    orch = FleetOrchestrator(reg, num_chips=p["num_chips"])
+    sched = FLEET_SCHEDULERS["adaptive"](orch, cfg)
+    sim = FleetSimulator(reg, sched, trace, cfg)
+    # cyclic-GC pauses scale with the live heap (every trace request stays
+    # reachable), so leaving the collector on taxes the longer tier
+    # superlinearly for work that is not the sim core's.  Both trees are
+    # timed under the same policy, so speedup ratios stay apples-to-apples.
+    gc.collect()
+    gc.disable()
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    gc.enable()
+    if best is None or wall < best["wall_s"]:
+        best = {"wall_s": wall, "duration_s": duration,
+                "n_requests": len(trace), "n_finished": res.n_finished,
+                "slo": res.slo_attainment, "wakeups": res.sched_wakeups,
+                "repartitions": len(res.repartitions) - 1}
+print(json.dumps(best))
+"""
+
+
+def _time_scale_tree(root: str, num_chips: int, n_requests: int,
+                     fast: bool, repeats: int, label: str) -> Optional[Dict]:
+    """Run the scale scenario against a checked-out tree; returns the
+    best-of-``repeats`` sim-core measurement dict, or None."""
+    import os
+    import subprocess
+    import sys as _sys
+    from repro.core import workloads as wl
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    payload = {"num_chips": num_chips, "n_requests": n_requests,
+               "base_chips": wl.SCALE_BASE_CHIPS, "rates": wl.SCALE_RATES,
+               "aliases": wl.SCALE_ALIASES, "level": SCALE_LEVEL,
+               "cfg_kw": SCALE_FAST_KW if fast else {}, "repeats": repeats}
+    try:
+        out = subprocess.run([_sys.executable, "-c", _SCALE_DRIVER],
+                             input=json.dumps(payload),
+                             capture_output=True, text=True, env=env,
+                             timeout=3600, check=True)
+        return json.loads(out.stdout.strip().splitlines()[-1])
+    except Exception as e:  # missing worktree etc. — report, don't fail
+        print(f"# {label} timing unavailable: {e}", flush=True)
+        return None
+
+
+def run_scale(full: bool = False,
+              bench_path: Optional[str] = "BENCH_scale.json",
+              scale_ref: Optional[str] = None) -> List[Row]:
+    """The 4096-chip / 1M-request sim-core throughput tier (``--scale``).
+
+    Headline: requests per second of *wall clock* the simulator core
+    sustains on the 8-pipeline scale trace with the three flag-gated hot
+    paths on (``SCALE_FAST_KW``) — the same role BENCH_unified_clock.json
+    plays for kernel overhead, at fleet scale.  Smoke mode runs the
+    512-chip / 100k-request slice; ``--full`` runs the committed
+    4096-chip / 1M-request tier.
+
+    With ``scale_ref`` (a checked-out pre-scale-out tree), a 100k-request
+    probe slice at the same chip count is timed against both trees in
+    alternating subprocesses (best-of interleaved rounds, the
+    BENCH_unified_clock method, so minutes-scale machine drift cannot
+    masquerade as speedup).  ``speedup_same_tier`` is the probe ratio;
+    ``speedup_extrapolated`` divides the full run's throughput by the
+    reference tree's probe throughput — flat extrapolation across request
+    count, which is *generous* to the reference (its per-wake-up costs
+    cannot shrink on a 10x longer trace).
+    """
+    import os
+    from repro.core import workloads as wl
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    chips = SCALE_FULL_CHIPS if full else SCALE_SMOKE_CHIPS
+    n_req = SCALE_FULL_REQUESTS if full else SCALE_SMOKE_REQUESTS
+    probe_req = min(n_req, SCALE_SMOKE_REQUESTS)
+    rows: List[Row] = []
+
+    now_probe = pre_probe = None
+    for _ in range(BENCH_REPEATS):
+        now = _time_scale_tree(here, chips, probe_req, True, 1,
+                               "self(scale)")
+        if now is None:
+            return rows
+        if now_probe is None or now["wall_s"] < now_probe["wall_s"]:
+            now_probe = now
+        if scale_ref:
+            pre = _time_scale_tree(scale_ref, chips, probe_req, False, 1,
+                                   "scale-ref")
+            if pre is not None and (pre_probe is None
+                                    or pre["wall_s"] < pre_probe["wall_s"]):
+                pre_probe = pre
+
+    if full:
+        head = _time_scale_tree(here, chips, n_req, True, 1, "self(scale)")
+        if head is None:
+            return rows
+    else:
+        head = now_probe
+    rps = head["n_requests"] / max(head["wall_s"], 1e-9)
+    rows.append((f"e2e_scale/{chips}chips/{head['n_requests']}req"
+                 "/throughput_rps", round(rps, 1),
+                 {"wall_s": round(head["wall_s"], 2),
+                  "slo_pct": round(head["slo"] * 100, 2),
+                  "finished": head["n_finished"],
+                  "wakeups": head["wakeups"],
+                  "repartitions": head["repartitions"]}))
+    bench = {
+        "bench": "scale_sim_core",
+        "num_chips": chips,
+        "pipelines": list(wl.SCALE_PIPELINES),
+        "level": SCALE_LEVEL,
+        "fast_path": dict(SCALE_FAST_KW),
+        "n_requests": head["n_requests"],
+        "duration_s": round(head["duration_s"], 1),
+        "wall_s": round(head["wall_s"], 2),
+        "throughput_rps": round(rps, 1),
+        "n_finished": head["n_finished"],
+        "slo_pct": round(head["slo"] * 100, 2),
+        "sched_wakeups": head["wakeups"],
+    }
+    if pre_probe is not None:
+        rps_now_probe = now_probe["n_requests"] / max(now_probe["wall_s"],
+                                                      1e-9)
+        rps_pre_probe = pre_probe["n_requests"] / max(pre_probe["wall_s"],
+                                                      1e-9)
+        bench["probe"] = {
+            "num_chips": chips, "n_requests": now_probe["n_requests"],
+            "wall_now_s": round(now_probe["wall_s"], 2),
+            "wall_pre_s": round(pre_probe["wall_s"], 2),
+            "throughput_now_rps": round(rps_now_probe, 1),
+            "throughput_pre_rps": round(rps_pre_probe, 1),
+        }
+        bench["speedup_same_tier"] = round(rps_now_probe
+                                           / max(rps_pre_probe, 1e-9), 2)
+        bench["speedup_extrapolated"] = round(rps
+                                              / max(rps_pre_probe, 1e-9), 2)
+        rows.append((f"e2e_scale/{chips}chips/speedup_same_tier",
+                     bench["speedup_same_tier"],
+                     {"pre_rps": round(rps_pre_probe, 1),
+                      "now_rps": round(rps_now_probe, 1)}))
+        rows.append((f"e2e_scale/{chips}chips/speedup_extrapolated",
+                     bench["speedup_extrapolated"],
+                     {"full_rps": round(rps, 1),
+                      "pre_probe_rps": round(rps_pre_probe, 1)}))
+    if bench_path:
+        with open(bench_path, "w") as f:
+            json.dump(bench, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+# ------------------------------------------------------------- wall profile
+
+# per-subsystem wall-share buckets: (bucket, module path, class, methods)
+_PROFILE_TARGETS = (
+    ("dispatch_ilp", "repro.core.dispatcher", "Dispatcher", ("dispatch",)),
+    ("cross_lane_batching", "repro.core.dispatcher", "CrossLaneBatcher",
+     ("select", "step")),
+    ("monitor", "repro.core.monitor", "Monitor",
+     ("record_stage", "record_backlog", "next_window_boundary",
+      "pattern_change")),
+    ("monitor", "repro.core.monitor", "FleetMonitor",
+     ("record_arrival", "record_finish", "record_util",
+      "record_class_demand", "demand", "demand_shares", "slo_attainment",
+      "backlog_pressure", "idle_supply", "next_window_boundary",
+      "mix_shift")),
+    ("orchestrator", "repro.core.fleet", "FleetOrchestrator",
+     ("generate", "budgets")),
+    ("lending", "repro.core.lending", "UnitLendingBroker",
+     ("step", "sample")),
+    ("engine_execute", "repro.core.runtime", "RuntimeEngine", ("execute",)),
+)
+
+
+def run_profile(full: bool = False) -> List[Row]:
+    """``--profile``: per-subsystem wall shares of one scale-tier run.
+
+    Wraps the subsystem entry points (dispatch/ILP, monitor, orchestrator,
+    lending, cross-lane batching, engine execute) with wall accumulators
+    and runs the scale slice in-process; whatever wall is left over is the
+    clock kernel + lane bookkeeping.  A single global re-entrancy guard
+    attributes nested calls (e.g. the orchestrator consulting the monitor)
+    to the *outermost* bucket, so the shares are additive.
+    """
+    import importlib
+    from repro.core import workloads
+    from repro.core.fleet import (FleetConfig, FleetOrchestrator,
+                                  FleetSimulator, PipelineRegistry,
+                                  FLEET_SCHEDULERS)
+
+    chips = SCALE_FULL_CHIPS if full else SCALE_SMOKE_CHIPS
+    n_req = (SCALE_FULL_REQUESTS if full else SCALE_SMOKE_REQUESTS) // 10
+    acc: Dict[str, float] = {}
+    depth = [0]
+    patched = []
+    for bucket, modname, clsname, methods in _PROFILE_TARGETS:
+        try:
+            cls = getattr(importlib.import_module(modname), clsname)
+        except (ImportError, AttributeError):
+            continue
+        for meth in methods:
+            orig = cls.__dict__.get(meth)
+            if orig is None:
+                continue
+
+            def timed(*a, __orig=orig, __b=bucket, **kw):
+                if depth[0]:
+                    return __orig(*a, **kw)
+                depth[0] = 1
+                t0 = time.perf_counter()
+                try:
+                    return __orig(*a, **kw)
+                finally:
+                    depth[0] = 0
+                    acc[__b] = (acc.get(__b, 0.0)
+                                + time.perf_counter() - t0)
+            setattr(cls, meth, timed)
+            patched.append((cls, meth, orig))
+    try:
+        reg = PipelineRegistry()
+        for pid in workloads.SCALE_PIPELINES:
+            if pid not in workloads.SCALE_ALIASES:
+                reg.register(pid)
+        for a, b in workloads.SCALE_ALIASES.items():
+            reg.register(a, profiler=reg.profiler(b))
+        profs = {pid: reg.profiler(pid) for pid in workloads.SCALE_PIPELINES}
+        dur = workloads.scale_duration(n_req, chips)
+        trace = workloads.scale_trace(dur, profs, seed=0, num_chips=chips,
+                                      level=SCALE_LEVEL)
+        cfg = FleetConfig(num_chips=chips, **SCALE_FAST_KW)
+        orch = FleetOrchestrator(reg, num_chips=chips)
+        sched = FLEET_SCHEDULERS["adaptive"](orch, cfg)
+        sim = FleetSimulator(reg, sched, trace, cfg)
+        t0 = time.perf_counter()
+        sim.run()
+        wall = time.perf_counter() - t0
+    finally:
+        for cls, meth, orig in patched:
+            setattr(cls, meth, orig)
+    rows: List[Row] = []
+    accounted = sum(acc[k] for k in sorted(acc))
+    acc["clock_kernel_and_lanes"] = max(0.0, wall - accounted)
+    for bucket in sorted(acc):
+        rows.append((f"e2e_scale_profile/{chips}chips/{bucket}/wall_s",
+                     round(acc[bucket], 3),
+                     {"share_pct": round(100.0 * acc[bucket]
+                                         / max(wall, 1e-9), 1)}))
+    rows.append((f"e2e_scale_profile/{chips}chips/total/wall_s",
+                 round(wall, 3),
+                 {"requests": len(trace),
+                  "throughput_rps": round(len(trace) / max(wall, 1e-9), 1)}))
+    return rows
+
+
 def run_shared_smoke(bench_path: Optional[str] = None) -> List[Row]:
     """CI-sized ``--mixed --shared`` variant: short flip trace, static vs
     adaptive only, fleet windows shrunk to match — exercises the whole fleet
@@ -971,6 +1279,16 @@ if __name__ == "__main__":
                     help="cross-lane dynamic batching on the long-prompt "
                          "burst-storm trace: predictive with batching off "
                          "vs on (writes BENCH_cross_batch.json)")
+    ap.add_argument("--scale", action="store_true",
+                    help="sim-core throughput tier: the 8-pipeline scale "
+                         "trace with the flag-gated hot paths on — "
+                         "512 chips / 100k requests by default, "
+                         "4096 chips / 1M requests with --full (writes "
+                         "BENCH_scale.json)")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-subsystem wall shares (clock kernel, "
+                         "dispatch/ILP, monitor, orchestrator, lending, "
+                         "cross-lane batching) of one scale-tier run")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--bench-json", default="BENCH_event_sim.json")
     ap.add_argument("--seed-ref", default=None,
@@ -997,7 +1315,20 @@ if __name__ == "__main__":
                          "last commit with the two hand-rolled loops); "
                          "records the kernel's overhead vs them in the "
                          "unified-kernel BENCH")
+    ap.add_argument("--scale-ref", default=None,
+                    help="path to a checked-out pre-scale-out tree; times "
+                         "a same-chip-count probe slice against it in "
+                         "interleaved subprocesses and records the "
+                         "speedup in the scale BENCH")
+    ap.add_argument("--scale-json", default="BENCH_scale.json",
+                    help="output path for the --scale BENCH (same caveat "
+                         "as --shared-json)")
     args = ap.parse_args()
+    if args.scale:
+        emit(run_scale(full=args.full, bench_path=args.scale_json,
+                       scale_ref=args.scale_ref))
+    if args.profile:
+        emit(run_profile(full=args.full))
     if args.smoke:
         emit(run_smoke(bench_path=args.bench_json, seed_ref=args.seed_ref,
                        unified_bench_path=args.unified_json,
@@ -1016,5 +1347,6 @@ if __name__ == "__main__":
     elif args.mixed:
         emit(run_mixed(quick=not args.full))
     if not (args.smoke or args.mixed or args.shared or args.lending
-            or args.predictive or args.cross_batch):
+            or args.predictive or args.cross_batch or args.scale
+            or args.profile):
         emit(run(quick=not args.full))

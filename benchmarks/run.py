@@ -54,6 +54,7 @@ def main() -> None:
                                              "BENCH_predictive.smoke.json")
         smoke_cross_batch_json = os.path.join("results",
                                               "BENCH_cross_batch.smoke.json")
+        smoke_scale_json = os.path.join("results", "BENCH_scale.smoke.json")
         t0 = time.perf_counter()
         print("# --- e2e (smoke) ---", flush=True)
         from benchmarks import e2e
@@ -78,6 +79,13 @@ def main() -> None:
         emit(e2e.run_cross_batch_smoke(bench_path=smoke_cross_batch_json))
         print(f"# cross-batch smoke took {time.perf_counter() - t0:.1f}s",
               flush=True)
+        t0 = time.perf_counter()
+        print("# --- e2e (scale smoke) ---", flush=True)
+        # 512-chip / 100k-request slice of the 4096-chip tier; no reference
+        # tree in CI, so the checker's different-scale regime applies
+        emit(e2e.run_scale(full=False, bench_path=smoke_scale_json))
+        print(f"# scale smoke took {time.perf_counter() - t0:.1f}s",
+              flush=True)
         # event-vs-tick parity is the smoke pass's one hard check: a clock
         # regression must fail CI, not just land in the BENCH json.
         # The row must be present — a missing row is a broken check, not a
@@ -96,7 +104,8 @@ def main() -> None:
              ("BENCH_shared_cluster.json", smoke_shared_json),
              ("BENCH_unified_clock.json", smoke_unified_json),
              ("BENCH_predictive.json", smoke_predictive_json),
-             ("BENCH_cross_batch.json", smoke_cross_batch_json)])
+             ("BENCH_cross_batch.json", smoke_cross_batch_json),
+             ("BENCH_scale.json", smoke_scale_json)])
         for p in problems:
             print(f"# REGRESSION: {p}", flush=True)
         if not problems:

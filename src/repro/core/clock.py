@@ -47,6 +47,11 @@ import heapq
 import math
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
+try:                        # array-backed lane state (SimConfig.array_state)
+    import numpy as np
+except ImportError:         # pragma: no cover - numpy ships with jax
+    np = None
+
 from repro.core.monitor import Monitor
 from repro.core.request import Request
 from repro.core.runtime import EngineStats, RuntimeEngine
@@ -229,23 +234,104 @@ class PendingSet:
     Backed by an insertion-ordered dict so dispatch bookkeeping is O(1) per
     removal instead of the O(n) ``list.remove`` scans the tick loop did;
     iteration yields requests in arrival (admission) order.
+
+    ``array_state=True`` additionally maintains a flat float64 deadline
+    column aligned with an admission-ordered slot list (tombstoned on
+    removal, compacted when the dead outnumber the live), so the dispatch
+    hot path's deadline ordering comes from one vectorized stable argsort
+    (``by_deadline``) instead of a per-request Python key sort.  Deadlines
+    are immutable after admission (workloads stamp them at trace build
+    time), so the snapshot taken on ``add`` never goes stale.  Stable
+    argsort over the admission-ordered column is bit-identical to
+    ``sorted(self, key=lambda r: r.deadline)`` — ties keep admission
+    order, float64 comparisons are exactly Python's — which is what lets
+    the flag flip without changing a single trajectory
+    (tests/test_scale_parity.py pins this).
     """
 
-    __slots__ = ("_by_rid",)
+    __slots__ = ("_by_rid", "_arr", "_req", "_dl", "_slot", "_dead")
 
-    def __init__(self, reqs: Sequence[Request] = ()):
-        self._by_rid: Dict[int, Request] = {r.rid: r for r in reqs}
+    def __init__(self, reqs: Sequence[Request] = (),
+                 array_state: bool = False):
+        self._by_rid: Dict[int, Request] = {}
+        self._arr = bool(array_state) and np is not None
+        if self._arr:
+            self._req: List[Optional[Request]] = []
+            self._dl = np.empty(64, dtype=np.float64)
+            self._slot: Dict[int, int] = {}
+            self._dead = 0
+        for r in reqs:
+            self.add(r)
 
     def add(self, req: Request) -> None:
+        if self._arr:
+            slot = self._slot.get(req.rid)
+            if slot is not None:      # re-add keeps the dict's original slot
+                self._req[slot] = req
+                self._dl[slot] = req.deadline
+            else:
+                n = len(self._req)
+                if n == self._dl.shape[0]:
+                    if self._dead * 2 > n:
+                        self._compact()
+                        n = len(self._req)
+                    else:
+                        dl = np.empty(max(64, 2 * n), dtype=np.float64)
+                        dl[:n] = self._dl[:n]
+                        self._dl = dl
+                self._req.append(req)
+                self._dl[n] = req.deadline
+                self._slot[req.rid] = n
         self._by_rid[req.rid] = req
 
     append = add   # drop-in for the old list-based field
 
+    def _compact(self) -> None:
+        reqs = [r for r in self._req if r is not None]
+        self._req = reqs
+        n = len(reqs)
+        dl = np.empty(max(64, 2 * n), dtype=np.float64)
+        for i, r in enumerate(reqs):
+            dl[i] = r.deadline
+        self._dl = dl
+        self._slot = {r.rid: i for i, r in enumerate(reqs)}
+        self._dead = 0
+
+    def _drop_slot(self, rid: int) -> None:
+        slot = self._slot.pop(rid, None)
+        if slot is not None:
+            self._req[slot] = None
+            self._dead += 1
+            if self._dead > len(self._by_rid):
+                self._compact()
+
+    def by_deadline(self, cap: Optional[int] = None) -> List[Request]:
+        """Pending requests in (deadline, admission) order — the dispatch
+        hot path's sort, vectorized when array-backed."""
+        if not self._arr:
+            out = sorted(self._by_rid.values(), key=lambda r: r.deadline)  # detlint: ignore[DET004] rid-dict is admission-ordered: stable ties are deterministic (and what the array path reproduces)
+            return out if cap is None else out[:cap]
+        n = len(self._req)
+        reqs = self._req
+        if self._dead:
+            idx = np.fromiter((i for i in range(n) if reqs[i] is not None),
+                              dtype=np.int64, count=n - self._dead)
+            order = idx[np.argsort(self._dl[idx], kind="stable")]
+        else:
+            order = np.argsort(self._dl[:n], kind="stable")
+        if cap is not None:
+            # full stable sort then truncate — identical to sorted()[:cap]
+            order = order[:cap]
+        return [reqs[i] for i in order]
+
     def remove(self, req: Request) -> None:
         del self._by_rid[req.rid]
+        if self._arr:
+            self._drop_slot(req.rid)
 
     def discard(self, req: Request) -> None:
-        self._by_rid.pop(req.rid, None)
+        if self._by_rid.pop(req.rid, None) is not None and self._arr:
+            self._drop_slot(req.rid)
 
     def has_rid(self, rid: int) -> bool:
         return rid in self._by_rid
@@ -306,12 +392,13 @@ class Lane:
     ``FleetSimulator`` holds one Lane per served pipeline.
     """
 
-    def __init__(self, pipeline: str, prof, scheduler: Scheduler):
+    def __init__(self, pipeline: str, prof, scheduler: Scheduler,
+                 array_state: bool = False):
         self.pipeline = pipeline
         self.prof = prof
         self.sched = scheduler
-        self.monitor = Monitor()
-        self.pending = PendingSet()
+        self.monitor = Monitor(array_state=array_state)
+        self.pending = PendingSet(array_state=array_state)
         self.new_arrivals: List[Request] = []  # admitted since the last step
         self.engine: Optional[RuntimeEngine] = None
         self.request_oom: List[Request] = []

@@ -22,7 +22,9 @@ event (``clock.MERGED_LANE``) whose members span lanes.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import ilp
@@ -75,22 +77,47 @@ class DispatchDecision:
 
 class Dispatcher:
     def __init__(self, profiler: Profiler, max_batch: int = 64,
-                 solver_time_cap: float = 0.05, aggregate: bool = False):
+                 solver_time_cap: float = 0.05, aggregate: bool = False,
+                 incremental: bool = False):
         """``aggregate`` turns on multiplicity-aware ILP aggregation:
         pending requests with identical option lists (same class, same
         reward state) enter the solver once with a count instead of N
         times, so dense same-class floods build capacity-bounded instances
         (see ``ilp.solve_grouped``).  Off by default so the single-pipeline
         dispatch path is bit-identical to its pre-aggregation behavior; the
-        fleet layer (core/fleet.py) turns it on."""
+        fleet layer (core/fleet.py) turns it on.
+
+        ``incremental`` persists the dispatch model across wake-ups: when
+        the option matrix and budgets are unchanged since the previous
+        ``dispatch`` call (pure-completion wake-ups, heartbeat re-checks
+        with a frozen pending set), the previous solution is reused without
+        re-solving.  Reuse is exact whenever the previous solve proved
+        optimality (the branch-and-bound only replaces an incumbent on
+        *strictly* better reward, so a warm re-solve of the identical
+        instance returns the identical choices); under a node-capped solve
+        it may pin an improvable incumbent, which is why the flag defaults
+        off and the committed BENCH trajectories never see it
+        (docs/architecture.md: incremental-solve contract)."""
         self.prof = profiler
         self.max_batch = max_batch
         self.solver_time_cap = solver_time_cap
         self.aggregate = aggregate
+        self.incremental = incremental
         self.last_solve_stats: Dict[str, float] = {}
         # previous solve's surviving (dim, usage) per request id — warm-starts
         # the ILP incumbent under steady load (requests pending across ticks)
         self._warm: Dict[int, Tuple[int, int]] = {}
+        # per-class feasibility cache: (req.key(), cond_len) -> the budget-
+        # independent (runtime, vr, k) triples of build_options' nested scan,
+        # in scan order.  Pure memoization of profiler-table functions of the
+        # request class — byte-identical to the uncached scan, so it is
+        # always on (unlike the flag-gated solve reuse above).
+        self._feas: Dict[tuple, Tuple[Tuple[float, int, int], ...]] = {}
+        # persisted model for the flag-gated cross-tick solve reuse
+        self._sig: Optional[tuple] = None
+        self._sig_choices: Optional[Dict[int, ilp.Option]] = None
+        self._sig_stats: Optional[Dict[str, float]] = None
+        self.solve_reuses = 0    # solves skipped via the persisted model
 
     # -- reward / penalty (App. C.2) ----------------------------------------
 
@@ -127,6 +154,30 @@ class Dispatcher:
     # auxiliary stages each Virtual Replica routes off-primary (Table 3)
     _VR_AUX = {0: (), 1: ("E",), 2: ("C",), 3: ("E", "C")}
 
+    def _feas_configs(self, req: Request) -> Tuple[Tuple[float, int, int], ...]:
+        """Budget-independent feasible (runtime, vr, k) triples for one
+        request class, in ``build_options``' scan order (vr outer 0..3, k
+        inner over the efficient degrees).  Budgets — the only tau- or
+        state-dependent input of the scan — are filtered at use time, so
+        the cached triples reproduce the uncached loop bit-for-bit."""
+        key = (req.key(), req.cond_len)
+        cached = self._feas.get(key)
+        if cached is None:
+            # E_{r,k}: efficient degrees only (plus degree 1, always
+            # allowed); capped at one node's worth of units (intra-machine
+            # SP)
+            eff_ks = [k for k in PARALLEL_DEGREES
+                      if k <= self.prof.max_degree_units
+                      and (k == 1 or self.prof.efficiency(
+                          req, "D", k * self.prof.k_min) > EFF_THRESHOLD)]
+            cached = tuple(
+                (self._req_runtime(req, vr, k), vr, k)
+                for vr in range(4)
+                for k in eff_ks
+                if self.prof.fits(req, primary_of_vr(vr), k))   # F_{r,i,k}
+            self._feas[key] = cached
+        return cached
+
     def build_options(self, reqs: Sequence[Request], tau: float,
                       idle_by_type: Dict[str, int],
                       aux_penalty: Optional[Dict[str, float]] = None
@@ -141,38 +192,74 @@ class Dispatcher:
             vr_pen = [sum(aux_penalty.get(s, 0.0) for s in self._VR_AUX[v])
                       for v in range(4)]
         options: List[List[ilp.Option]] = []
+        # per-call class cache: budgets, tau, and vr_pen are fixed for the
+        # whole call, so the budget-filtered triples, the best/worst
+        # predicted finishes, and — for requests every config beats the
+        # deadline of — the complete option list are functions of the
+        # request *class* alone.  Same-class floods (the common fleet-scale
+        # wave) then build their options once instead of once per request;
+        # cached option lists are shared (ilp.Option is frozen and no
+        # downstream consumer mutates an option list).
+        cache: Dict[tuple, list] = {}
         for req in reqs:
-            opts: List[ilp.Option] = []
-            # E_{r,k}: efficient degrees only (plus degree 1, always allowed);
-            # capped at one node's worth of units (intra-machine SP)
-            eff_ks = [k for k in PARALLEL_DEGREES
-                      if k <= self.prof.max_degree_units
-                      and (k == 1 or self.prof.efficiency(
-                          req, "D", k * self.prof.k_min) > EFF_THRESHOLD)]
-            # best predicted finish for W_r (over all feasible pairs)
-            finishes = []
-            for vr in range(4):
-                prim = primary_of_vr(vr)
-                if budgets[vr] <= 0:
-                    continue
-                for k in eff_ks:
-                    if k > budgets[vr]:
-                        continue
-                    if not self.prof.fits(req, prim, k):
-                        continue   # F_{r,i,k}
-                    finishes.append((tau + self._req_runtime(req, vr, k), vr, k))
-            if not finishes:
+            ckey = (req.key(), req.cond_len)
+            ent = cache.get(ckey)
+            if ent is None:
+                # the class feasibility cache holds the budget-independent
+                # triples; the budget filter reproduces the original nested
+                # scan's order
+                filt = [t for t in self._feas_configs(req)
+                        if budgets[t[1]] > 0 and t[2] <= budgets[t[1]]]
+                best_finish = max_f = None
+                for rt, vr, k in filt:
+                    f = tau + rt
+                    if best_finish is None or f < best_finish:
+                        best_finish = f
+                    if max_f is None or f > max_f:
+                        max_f = f
+                ent = cache[ckey] = [filt, best_finish, max_f, None]
+            filt, best_finish, max_f = ent[0], ent[1], ent[2]
+            if best_finish is None:
                 options.append([])
                 continue
-            best_finish = min(f for f, _, _ in finishes)
+            deadline = req.deadline
+            if max_f <= deadline:
+                # every config makes the deadline: W_r = C_on and no option
+                # is filtered, so the list is deadline-independent — reuse
+                # the class's cached on-time list
+                opts = ent[3]
+                if opts is None:
+                    base: List[Optional[float]] = [None] * 4
+                    opts = []
+                    for rt, vr, k in filt:
+                        f = tau + rt
+                        b = base[vr]
+                        if b is None:
+                            b = base[vr] = (C_ON - self._q_ri(req, vr)
+                                            - vr_pen[vr])
+                        opts.append(ilp.Option(
+                            dim=vr, usage=k,
+                            reward=b - GAMMA_TIME * (f - tau)))
+                    ent[3] = opts
+                options.append(opts)
+                continue
             w = self._w_r(req, tau, best_finish)
-            opts = [ilp.Option(dim=vr, usage=k,
-                               reward=w - self._q_ri(req, vr) - vr_pen[vr]
-                               - GAMMA_TIME * (f - tau))
-                    for f, vr, k in finishes
-                    # C3a-guided: drop configs that blow the deadline unless
-                    # nothing makes it (then keep the fastest)
-                    if f <= req.deadline or f == best_finish]
+            # per-VR reward base hoisted out of the option loop; the final
+            # subtraction keeps the original left-to-right association so
+            # rewards stay bit-identical
+            base = [None] * 4
+            opts = []
+            for rt, vr, k in filt:
+                f = tau + rt
+                # C3a-guided: drop configs that blow the deadline unless
+                # nothing makes it (then keep the fastest)
+                if f <= deadline or f == best_finish:
+                    b = base[vr]
+                    if b is None:
+                        b = base[vr] = w - self._q_ri(req, vr) - vr_pen[vr]
+                    opts.append(ilp.Option(
+                        dim=vr, usage=k,
+                        reward=b - GAMMA_TIME * (f - tau)))
             options.append(opts)
         return options, budgets
 
@@ -205,7 +292,8 @@ class Dispatcher:
                 warm[g] = seeds
         gsol = ilp.solve_grouped(gopts, budgets,
                                  [len(mem) for mem in members],
-                                 time_cap=self.solver_time_cap, warm=warm)
+                                 time_cap=self.solver_time_cap, warm=warm,
+                                 dp=self.incremental)
         choices: Dict[int, ilp.Option] = {}
         for g, granted in gsol.alloc.items():
             for ri, opt in zip(members[g], granted):
@@ -255,14 +343,19 @@ class Dispatcher:
         cands = plan.units_of_type(stage)
         if not cands:
             return ()
+        # nsmallest == sorted(...)[:k] (stable, documented), at O(n) instead
+        # of O(n log n) — k is a profiled optimal degree, i.e. tiny, while
+        # the candidate list is every auxiliary unit of the stage type
         if borrowed:
-            cands = sorted(cands, key=lambda g: (g not in idle_units,
-                                                 free_at.get(g, tau),
-                                                 g in borrowed))
+            cands = heapq.nsmallest(k, cands,
+                                    key=lambda g: (g not in idle_units,
+                                                   free_at.get(g, tau),
+                                                   g in borrowed))
         else:
-            cands = sorted(cands, key=lambda g: (g not in idle_units,
-                                                 free_at.get(g, tau)))
-        return tuple(cands[:k])
+            cands = heapq.nsmallest(k, cands,
+                                    key=lambda g: (g not in idle_units,
+                                                   free_at.get(g, tau)))
+        return tuple(cands)
 
     # -- main entry ---------------------------------------------------------------
 
@@ -270,6 +363,13 @@ class Dispatcher:
                  idle_units: set, free_at: Dict[int, float], tau: float,
                  borrowed: Optional[Dict[str, Tuple[int, ...]]] = None
                  ) -> List[DispatchDecision]:
+        """One dispatch round over the pending set.
+
+        ``idle_units`` and ``free_at`` are the engine's *live* views
+        (``ServingEngine.idle_units`` / ``free_at``): never mutated here —
+        grants consume from a private ``avail`` copy — and only valid
+        until the caller applies the returned decisions to the engine.
+        """
         # candidate set scales with idle capacity: a fixed cap would only
         # ever show the solver the oldest (often already-late) requests
         # under high-churn workloads and starve fresh feasible ones
@@ -277,7 +377,10 @@ class Dispatcher:
         reqs = sorted(pending, key=lambda r: r.deadline)[:cap]
         if not reqs:
             return []
-        idle_by_type = {t: sum(1 for g in plan.units_of_type(t) if g in idle_units)
+        # C-speed set intersection == counting units_of_type members in the
+        # idle set (same active view); the genexpr walked every unit of
+        # every primary type per dispatch round
+        idle_by_type = {t: len(idle_units & plan.type_set(t))
                         for t in PRIMARY_PLACEMENTS}
         # cross-pipeline unit lending (core/lending.py): borrowed foreign
         # units appear as E/C-only candidates.  An option whose auxiliary
@@ -297,27 +400,109 @@ class Dispatcher:
                     aux_penalty[s] = BORROW_PENALTY
         options, budgets = self.build_options(reqs, tau, idle_by_type,
                                               aux_penalty)
-        if self.aggregate:
+        # incremental re-solve: the solver only ever sees (options, budgets)
+        # — the request identities, tau, and unit ids are outside the model —
+        # so an unchanged signature means the previous solution is a valid
+        # solution of this instance (and the optimum, when the previous
+        # solve proved optimality).  Pure-completion wake-ups, where freed
+        # units are auxiliary and the pending head is frozen, hit this path.
+        sig = ((tuple(budgets), tuple(tuple(o) for o in options))
+               if self.incremental else None)
+        if (sig is not None and sig == self._sig
+                and self._sig_choices is not None):
+            choices = self._sig_choices
+            stats = {**self._sig_stats, "nodes": 0, "reused": True}
+            self.solve_reuses += 1
+        elif self.aggregate:
             choices, stats = self._solve_grouped(reqs, options, budgets)
         else:
             warm = {ri: self._warm[req.rid] for ri, req in enumerate(reqs)
                     if req.rid in self._warm}
             sol = ilp.solve(options, budgets, time_cap=self.solver_time_cap,
-                            warm=warm)
+                            warm=warm, dp=self.incremental)
             choices = sol.choices
             stats = {"nodes": sol.nodes, "optimal": sol.optimal,
                      "reward": sol.reward, "n_solved": len(reqs)}
+        if sig is not None and not stats.get("reused"):
+            self._sig = sig
+            self._sig_choices = choices
+            self._sig_stats = dict(stats)
         self._warm = {reqs[ri].rid: (opt.dim, opt.usage)
                       for ri, opt in choices.items()}
         self.last_solve_stats = {**stats, "n_reqs": len(reqs)}
 
         decisions: List[DispatchDecision] = []
         avail = set(idle_units)
+        # Maintained unit pools: ``select_units`` rebuilds its by-node map by
+        # walking *every* unit of the placement type on each grant — O(units)
+        # per grant, the dominant dispatch cost on multi-thousand-chip plans.
+        # Placement types partition the unit space and only primary grants
+        # consume from ``avail``, so each type's by-node map can be built
+        # once per dispatch round (lazily, from the then-current ``avail``)
+        # and maintained across grants.  Selection is byte-identical to
+        # ``select_units``: lists are kept ascending, the node scan walks
+        # ascending node ids taking the first strict count maximum (== the
+        # first len>=k entry of the (-count, node)-sorted order), and the
+        # cross-node pool concatenates ascending nodes.
+        upn = plan.units_per_node
+        pools: Dict[str, Dict[int, List[int]]] = {}
+        # lazy max-heap per type over (-count, node): the top valid entry is
+        # the max-count node with the smallest node id — exactly the winner
+        # of the ascending strict-max scan — without an O(nodes) walk per
+        # grant.  Entries go stale when a node's count changes; they are
+        # popped (never trusted) once the stored count mismatches.
+        heaps: Dict[str, List[Tuple[int, int]]] = {}
+
+        def _pool(ptype: str) -> Dict[int, List[int]]:
+            by_node = pools.get(ptype)
+            if by_node is None:
+                by_node = pools[ptype] = {}
+                for g in plan.units_of_type(ptype):
+                    if g in avail:
+                        by_node.setdefault(g // upn, []).append(g)
+                h = heaps[ptype] = [(-len(u), nd) for nd, u in by_node.items()]
+                heapq.heapify(h)
+            return by_node
+
+        def _take(ptype: str, k: int) -> Optional[Tuple[int, ...]]:
+            by_node = _pool(ptype)
+            heap = heaps[ptype]
+            best, best_n = None, 0
+            while heap:
+                neg, node = heap[0]
+                if -neg == len(by_node[node]):
+                    best, best_n = node, -neg
+                    break
+                heapq.heappop(heap)   # stale count
+            if best_n >= k:
+                units = by_node[best]
+                out = tuple(units[:k])
+                del units[:k]
+                heapq.heapreplace(heap, (k - best_n, best))
+                return out
+            if self.prof.cross_node_sp:
+                pool = [g for node in sorted(by_node) for g in by_node[node]]
+                if len(pool) >= k:
+                    out = tuple(pool[:k])
+                    taken = set(out)
+                    for node, units in by_node.items():
+                        units[:] = [g for g in units if g not in taken]
+                        heapq.heappush(heap, (-len(units), node))
+                    return out
+            return None
+
+        def _give_back(ptype: str, units: Tuple[int, ...]) -> None:
+            by_node = _pool(ptype)
+            heap = heaps[ptype]
+            for g in units:
+                node = g // upn
+                bisect.insort(by_node[node], g)
+                heapq.heappush(heap, (-len(by_node[node]), node))
+
         for ri, opt in sorted(choices.items(), key=lambda kv: -kv[1].reward):  # detlint: ignore[DET004] choices is solver-walk-ordered; equal-reward order is BENCH-byte-frozen
             req = reqs[ri]
             prim = primary_of_vr(opt.dim)
-            units = self.select_units(plan, prim, opt.usage, avail,
-                                      cross_node=self.prof.cross_node_sp)
+            units = _take(prim, opt.usage)
             if units is None:
                 continue   # stay undispatched for next round (paper §6.2)
             avail -= set(units)
@@ -337,6 +522,7 @@ class Dispatcher:
                                           borrowed_all or None)
             if not e_units or not c_units:
                 avail |= set(units)
+                _give_back(prim, units)
                 continue   # no auxiliary capacity -> undispatched this tick
             decisions.append(DispatchDecision(
                 request=req, vr_type=opt.dim, degree=opt.usage,
@@ -441,11 +627,20 @@ class CrossLaneBatcher:
     this class, keeping it bit-identical by construction.
     """
 
-    def __init__(self, max_batch: int = 0, solver_time_cap: float = 0.05):
+    def __init__(self, max_batch: int = 0, solver_time_cap: float = 0.05,
+                 incremental: bool = False):
         self.max_batch = max_batch          # 0 = profiler batch-curve cap
         self.solver_time_cap = solver_time_cap
+        self.incremental = incremental
         self.merges = 0                     # fused launches charged
         self.merged_requests = 0            # batch items across all fusions
+        self.warm_solves = 0                # selects seeded from prior grants
+        # previous grants per shape key: (stage, ptype, unit_size) ->
+        # {gkey: [(dim, usage), ...]} — warm incumbents for the next select
+        # of the same shape group.  Flag-gated like Dispatcher.incremental:
+        # warm seeding changes which of several equally-optimal member sets
+        # the DFS lands on, so the off path stays bit-identical.
+        self._warm_grants: Dict[tuple, Dict[tuple, list]] = {}
 
     # -- candidate assembly ---------------------------------------------------
 
@@ -475,9 +670,12 @@ class CrossLaneBatcher:
 
     # -- member selection (grouped ILP, cross-lane columns) -------------------
 
-    def _select(self, stage: str, per_lane: Dict[str, list], tau: float):
+    def _select(self, stage: str, per_lane: Dict[str, list], tau: float,
+                skey: tuple = ()):
         """Pick the fused member set for one shape group.
 
+        ``skey`` is the shape key the group was collected under — the
+        stable identity the flag-gated warm store is keyed by across ticks.
         Returns ``(fused, host_lane, host_units, n_total, T)`` or ``None``
         when no fusion spanning >= 2 lanes fits under the caps."""
         # host = lane whose leading candidate's aux units free up earliest
@@ -537,8 +735,24 @@ class CrossLaneBatcher:
                 gmembers[g].append((lane, dec))
         if not gopts:
             return None
+        # cross-tick warm incumbents (flag-gated): re-seed each surviving
+        # group's grants from the previous select of this shape group, so
+        # the branch-and-bound starts at last tick's member set under a
+        # steady burst instead of rediscovering it from the greedy incumbent
+        warm = None
+        if self.incremental:
+            prev = self._warm_grants.get(skey, {})
+            warm = {g: prev[gk] for gk, g in gindex.items()
+                    if gk in prev} or None
+            if warm:
+                self.warm_solves += 1
         sol = ilp.solve_grouped(gopts, budgets, counts,
-                                time_cap=self.solver_time_cap)
+                                time_cap=self.solver_time_cap, warm=warm,
+                                dp=self.incremental)
+        if self.incremental:
+            self._warm_grants[skey] = {
+                gk: [(o.dim, o.usage) for o in sol.alloc[g]]
+                for gk, g in gindex.items() if g in sol.alloc}
         fused = [(host, anchor)]
         for g in sorted(sol.alloc):
             grants = sol.alloc[g]
@@ -624,7 +838,7 @@ class CrossLaneBatcher:
                 per_lane.setdefault(lane.pipeline, []).append((lane, dec))
             if len(per_lane) < 2:
                 continue
-            picked = self._select(stage, per_lane, tau)
+            picked = self._select(stage, per_lane, tau, skey=key)
             if picked is None:
                 continue
             fused, host, host_units, n_total, T = picked

@@ -420,6 +420,33 @@ class FleetConfig:
                                       # shared batch budget and the
                                       # per-lane curve caps (an explicit
                                       # operator throughput/latency trade)
+    # -- scale-out fast paths (benchmarks/e2e.py --scale), default OFF so
+    # every committed BENCH trajectory stays byte-identical ------------------
+    array_state: bool = False         # array-backed lane state (PendingSet
+                                      # deadline column + Monitor window
+                                      # columns); bit-identical trajectories
+                                      # by construction, pinned by
+                                      # tests/test_scale_parity.py
+    incremental_ilp: bool = False     # persist each lane's dispatch model
+                                      # across wake-ups: skip the ILP solve
+                                      # when (options, budgets) are unchanged
+                                      # and thread cross-tick warm incumbents
+                                      # through the cross-lane batcher's
+                                      # grouped solves (docs/architecture.md:
+                                      # incremental-solve contract)
+    step_changed_lanes_only: bool = False  # O(changed-lanes) fleet stepping:
+                                      # a wake-up steps only lanes with
+                                      # pending work or a dirty event
+                                      # (arrival / completion / window
+                                      # boundary / re-partition), and a
+                                      # re-partition rebuilds only lanes
+                                      # whose chip range or sub-plan moved.
+                                      # Semantics-preserving but trajectory-
+                                      # CHANGING (idle lanes skip backlog
+                                      # samples), so it guards no committed
+                                      # BENCH and is ignored under lending /
+                                      # cross-lane batching (both need every
+                                      # lane visited every step).
 
     def lane_sim_cfg(self, num_chips: int) -> SimConfig:
         return SimConfig(num_chips=num_chips, tick=self.tick,
@@ -429,7 +456,8 @@ class FleetConfig:
                          seed=self.seed, mode="event",
                          max_idle_gap=self.max_idle_gap,
                          adaptive_idle_gap=self.adaptive_idle_gap,
-                         idle_gap_max=self.idle_gap_max)
+                         idle_gap_max=self.idle_gap_max,
+                         array_state=self.array_state)
 
     def clock_cfg(self, horizon: float) -> ClockConfig:
         return ClockConfig(tick=self.tick, horizon=horizon, mode=self.mode,
@@ -440,7 +468,8 @@ class FleetConfig:
 
 def make_lane(pipeline: str, prof: Profiler, sim_cfg: SimConfig,
               trace: Sequence[Request], aggregate_ilp: bool = False,
-              cross_lane_batching: bool = False) -> Lane:
+              cross_lane_batching: bool = False,
+              incremental_ilp: bool = False) -> Lane:
     """One pipeline's slice of the fleet: the unmodified single-pipeline
     TridentServe stack over a chip range, inside the shared ``Lane``
     container (repro.core.clock) — so the lane *is* the 1-pipeline
@@ -448,7 +477,9 @@ def make_lane(pipeline: str, prof: Profiler, sim_cfg: SimConfig,
     return Lane(pipeline, prof,
                 TridentScheduler(prof, sim_cfg, trace,
                                  aggregate_ilp=aggregate_ilp,
-                                 cross_lane_batching=cross_lane_batching))
+                                 cross_lane_batching=cross_lane_batching,
+                                 incremental_ilp=incremental_ilp),
+                array_state=sim_cfg.array_state)
 
 
 # ---------------------------------------------------------------- schedulers
@@ -937,6 +968,7 @@ class FleetSimulator:
         self.clock = EventClock(
             self.cfg.clock_cfg(trace_end + self.cfg.horizon_slack))
         self._ai = 0                   # arrival cursor into the trace
+        self._fp_cache: Dict[tuple, float] = {}   # class -> footprint
         self.repartition_log: List[Tuple[float, Dict[str, int]]] = []
         self.swap_cost_s = 0.0
         self.units_reloaded = 0
@@ -963,7 +995,18 @@ class FleetSimulator:
         self._xl = None
         if self.cfg.cross_lane_batching:
             from repro.core.dispatcher import CrossLaneBatcher
-            self._xl = CrossLaneBatcher(max_batch=self.cfg.cross_lane_max_batch)
+            self._xl = CrossLaneBatcher(
+                max_batch=self.cfg.cross_lane_max_batch,
+                incremental=self.cfg.incremental_ilp)
+        # O(changed-lanes) stepping (tentpole c): a wake-up visits only
+        # lanes with pending work or a dirty event.  Disabled under lending
+        # and cross-lane batching — the broker samples every lane's
+        # pressure each step, and the batcher must see every lane's
+        # decisions to fuse across them.
+        self._lane_gating = (self.cfg.step_changed_lanes_only
+                             and not self.cfg.lending
+                             and not self.cfg.cross_lane_batching)
+        self._dirty: set = set()
         self._class_hist = (self.uses_forecast
                             and self.cfg.cross_lane_batching)
         if self._class_hist:
@@ -1050,7 +1093,8 @@ class FleetSimulator:
             lane = make_lane(pid, prof, self.cfg.lane_sim_cfg(budgets[pid]),
                              sub_traces[pid],
                              aggregate_ilp=self.cfg.aggregate_ilp,
-                             cross_lane_batching=self.cfg.cross_lane_batching)
+                             cross_lane_batching=self.cfg.cross_lane_batching,
+                             incremental_ilp=self.cfg.incremental_ilp)
             lane.engine = RuntimeEngine(
                 prof, self.plan.subplans[pid],
                 proactive_push=self.cfg.proactive_push,
@@ -1088,7 +1132,10 @@ class FleetSimulator:
         return any(lane.pending for lane in self.lanes.values())
 
     def still_pending(self, lane: str, rid: int) -> bool:
-        return self.lanes[lane].pending.has_rid(rid)
+        alive = self.lanes[lane].pending.has_rid(rid)
+        if alive and self._lane_gating:
+            self._dirty.add(lane)   # aging flip: dispatch rewards changed
+        return alive
 
     # -- one scheduler step ---------------------------------------------------
 
@@ -1099,12 +1146,23 @@ class FleetSimulator:
         n = len(trace)
         ai = self._ai
         clock = self.clock if self._track_flips else None
+        dirty = self._dirty if self._lane_gating else None
+        # request_footprint is a pure function of the request class (its
+        # profiler sub-calls are already class-memoized, but the two
+        # tuple-key probes per arrival still showed up at the million-
+        # request tier) — cache the final float per class
+        fp_cache = self._fp_cache
         while ai < n and trace[ai].arrival <= tau:
             r = trace[ai]
             lane = self.lanes[r.pipeline]
             lane.admit(r, clock)
-            self.fleet_monitor.record_arrival(
-                r.arrival, r.pipeline, request_footprint(lane.prof, r))
+            if dirty is not None:
+                dirty.add(r.pipeline)
+            fk = (r.pipeline, r.resolution, r.seconds, r.cond_len)
+            fp = fp_cache.get(fk)
+            if fp is None:
+                fp = fp_cache[fk] = request_footprint(lane.prof, r)
+            self.fleet_monitor.record_arrival(r.arrival, r.pipeline, fp)
             if self._class_hist:
                 # auxiliary-stage chip-seconds by placement class: what the
                 # cross-lane batcher's fused E/C launches will draw on
@@ -1117,7 +1175,13 @@ class FleetSimulator:
         self._ai = ai
 
     def _drain(self, tau: float) -> None:
+        dirty = self._dirty if self._lane_gating else None
         for t, _, pid, s, ptype, dur, members in self.clock.pop_due(tau):
+            if dirty is not None:
+                if pid == MERGED_LANE:
+                    dirty.update(r.pipeline for r in members)
+                else:
+                    dirty.add(pid)
             if pid == MERGED_LANE:
                 # cross-lane fused launch: un-merge the one event back into
                 # per-lane accounting — each participating lane observes the
@@ -1145,7 +1209,22 @@ class FleetSimulator:
         if self.broker is not None:
             self.broker.step(self, tau)
         if self._xl is None:
-            for lane in self.lanes.values():
+            lanes = self.lanes.values()
+            if self._lane_gating:
+                # a lane must also wake when a retained Monitor sample exits
+                # its window — windowed rates (and the placement-switch
+                # trigger) can newly fire there with no lane event at all
+                dirty = self._dirty
+                for pid, lane in self.lanes.items():
+                    if pid in dirty:
+                        continue
+                    bnd = lane.monitor.next_window_boundary()
+                    if bnd is not None and bnd <= tau:
+                        dirty.add(pid)
+                lanes = [lane for pid, lane in self.lanes.items()
+                         if pid in dirty or lane.pending]
+                dirty.clear()
+            for lane in lanes:
                 lane.step(tau, self.clock,
                           lambda new_plan, t, lane=lane:
                               self._apply_lane_plan(lane, new_plan, t))
@@ -1322,6 +1401,17 @@ class FleetSimulator:
         for pid, lane in self.lanes.items():  # detlint: ignore[DET001] lanes dict is registry-ordered; reload-sum order is BENCH-byte-frozen
             sub = new_plan.subplans[pid]
             prof = lane.prof
+            if (self._lane_gating
+                    and new_plan.chip_ranges[pid] == self.plan.chip_ranges[pid]
+                    and sub.unit_size == self.plan.subplans[pid].unit_size
+                    and sub.placements == self.plan.subplans[pid].placements):
+                # O(changed-lanes) re-partition: this lane's chip range and
+                # sub-plan are identical — no chip changed hands, no reload
+                # is owed.  Keep the live engine (its free_at state IS the
+                # chip state a rebuild would re-seed) instead of paying the
+                # rebuild; the retained sub-plan object stays authoritative.
+                new_plan.subplans[pid] = self.plan.subplans[pid]
+                continue
             lane.bank_engine_stats()
             engine = RuntimeEngine(
                 prof, sub, proactive_push=self.cfg.proactive_push,
@@ -1378,6 +1468,9 @@ class FleetSimulator:
         # (an aborted re-partition must leave the mix-shift trigger armed)
         self.fleet_sched.on_repartitioned(self, tau)
         self.repartition_log.append((tau, dict(budgets)))
+        if self._lane_gating:
+            # every lane's engine/plan may have moved: all must re-step
+            self._dirty.update(self.lanes)
 
     # ---------------------------------------------------------------- results
 
@@ -1396,14 +1489,20 @@ class FleetSimulator:
         lat: List[float] = []
         on_time = 0
         finished = 0
+        # Request.finished/latency/on_time inlined: each property re-derives
+        # the "C" finish stamp, and this loop runs twice per request (lane
+        # pass + aggregate pass) over million-request traces — the same
+        # floats come out of one dict probe
         for r in reqs:
             if r.rid in oom_ids:
                 lat.append(horizon_lat)
                 continue
-            if r.finished:
+            f = r.stage_done.get("C")
+            if f is not None:
                 finished += 1
-                lat.append(r.latency)
-                on_time += int(r.on_time)
+                lat.append(f - r.arrival)
+                if f <= r.deadline:
+                    on_time += 1
             else:
                 lat.append(horizon_lat - r.arrival)   # censored
         lat_sorted = sorted(lat)
@@ -1421,9 +1520,15 @@ class FleetSimulator:
         oom_ids = {r.rid for lane in self.lanes.values()
                    for r in lane.request_oom}
         per_pipeline: Dict[str, Dict[str, float]] = {}
+        # one grouping pass instead of one full-trace scan per lane (order
+        # within each group is trace order, same as the per-lane filter)
+        by_pid: Dict[str, List[Request]] = {pid: [] for pid in self.lanes}
+        for r in self.trace:
+            grp = by_pid.get(r.pipeline)
+            if grp is not None:
+                grp.append(r)
         for pid, lane in self.lanes.items():
-            reqs = [r for r in self.trace if r.pipeline == pid]
-            m = self._metrics(reqs, oom_ids, horizon_lat)
+            m = self._metrics(by_pid[pid], oom_ids, horizon_lat)
             m["chips"] = self.plan.chip_ranges[pid][1] - \
                 self.plan.chip_ranges[pid][0]
             per_pipeline[pid] = m

@@ -49,6 +49,11 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+try:                        # dense-DP fast path (``dp=True`` instances)
+    import numpy as np
+except ImportError:         # pragma: no cover - numpy ships with jax
+    np = None
+
 # deterministic time->node translation for the anytime cap: calibrated on a
 # flood instance (~1.3M nodes/s on the baseline box), so the node budget
 # sits where the old wall-clock cap effectively was there — verified to
@@ -105,8 +110,8 @@ class GroupedSolution:
 def solve_grouped(options: Sequence[Sequence[Option]],
                   budgets: Sequence[int], counts: Sequence[int],
                   node_cap: int = 200_000, time_cap: float = 0.2,
-                  warm: Optional[Dict[int, Sequence[Tuple[int, int]]]] = None
-                  ) -> GroupedSolution:
+                  warm: Optional[Dict[int, Sequence[Tuple[int, int]]]] = None,
+                  dp: bool = False) -> GroupedSolution:
     """Multiplicity-aware dispatch ILP: group g enters once with a count.
 
     ``options[g]`` is the option list shared by ``counts[g]`` identical
@@ -149,7 +154,7 @@ def solve_grouped(options: Sequence[Sequence[Option]],
             slot_group.append(g)
             slot_opts.append(opts)
     sol = solve(slot_opts, budgets, node_cap=node_cap, time_cap=time_cap,
-                warm=warm_slots or None)
+                warm=warm_slots or None, dp=dp)
     alloc: Dict[int, List[Option]] = {}
     for si, o in sol.choices.items():
         alloc.setdefault(slot_group[si], []).append(o)
@@ -190,9 +195,61 @@ def _greedy(options: Sequence[Sequence[Option]], budgets: List[int],
     return chosen, total
 
 
+def _solve_dp_single_dim(pruned: Sequence[Sequence[Option]], dim: int,
+                         cap: int) -> Tuple[Dict[int, Option], float]:
+    """Exact multiple-choice knapsack DP for *effectively one-dimensional*
+    instances (every surviving option charges the same single budget
+    dimension).  These are precisely the instances where the branch-and-
+    bound's additive suffix bound degrades — a saturated fleet lane whose
+    backlog all competes for one placement type routinely burned the whole
+    deterministic node cap (and returned a sub-optimal incumbent) on what
+    is a textbook 0/1 knapsack.  The dense DP is O(requests * cap * options)
+    cells, exact, and cap-free.
+
+    Determinism: iteration order is fixed (requests in index order, options
+    in list order), updates replace only on *strictly* better reward, and
+    reconstruction walks a parent-choice table — no hash-order, no clock.
+    """
+    n = len(pruned)
+    # capacities beyond what every request's largest option could jointly
+    # consume are unreachable — clamping shrinks the table on lanes whose
+    # budget far exceeds the backlog (val is monotone, so val[cap_eff] is
+    # still the optimum)
+    cap = min(cap, sum(max((o.usage for o in opts), default=0)
+                       for opts in pruned))
+    val = np.zeros(cap + 1, dtype=np.float64)      # best reward at capacity <= c
+    take = np.full((n, cap + 1), -1, dtype=np.int32)
+    for r, opts in enumerate(pruned):
+        if not opts:
+            continue
+        best = val.copy()                          # skip branch
+        choice = take[r]
+        for oi, o in enumerate(opts):
+            u = o.usage
+            if u > cap:
+                continue
+            cand = val[:cap + 1 - u] + o.reward
+            seg = best[u:]
+            upd = cand > seg
+            seg[upd] = cand[upd]
+            choice[u:][upd] = oi
+        val = best
+    c = cap
+    picks: List[Tuple[int, Option]] = []
+    for r in range(n - 1, -1, -1):
+        oi = int(take[r, c])
+        if oi >= 0:
+            o = pruned[r][oi]
+            picks.append((r, o))
+            c -= o.usage
+    picks.reverse()
+    return dict(picks), float(val[cap])
+
+
 def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
           node_cap: int = 200_000, time_cap: float = 0.2,
-          warm: Optional[Dict[int, Tuple[int, int]]] = None) -> Solution:
+          warm: Optional[Dict[int, Tuple[int, int]]] = None,
+          dp: bool = False) -> Solution:
     """Maximize total reward.  ``options[r]`` lists request r's choices.
 
     ``warm`` maps request index -> (dim, usage) chosen on a previous solve
@@ -202,30 +259,121 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
     ``time_cap`` is a *latency budget*, enforced deterministically: it is
     converted to a node budget at ``NODES_PER_SECOND``, so a capped solve
     stops at the same node on every machine and every run.
+
+    ``dp`` permits the exact dense-DP fast path on effectively one-
+    dimensional instances (``_solve_dp_single_dim``).  It is opt-in —
+    flag-gated behind ``incremental_ilp`` at the dispatcher layer — because
+    on instances big enough to hit the node cap the DFS returns a capped
+    *incumbent* while the DP returns the true optimum: better grants, but a
+    different trajectory than the committed BENCH baselines pin.
     """
     n = len(options)
     budgets = list(budgets)
     if time_cap is not None:
         node_cap = min(node_cap, max(1, int(time_cap * NODES_PER_SECOND)))
 
+    # fused all-scalar fast path (opt-in with ``dp``, like the all-slack
+    # early return below — this IS that return, with the feasibility
+    # filter and the slack analysis folded into one pass that never
+    # materializes spans).  At fleet scale almost every dispatch instance
+    # is scalar-dim and fully slack, and the per-option ``_spans`` tuple
+    # construction dominated solve preprocessing.  Bails to the generic
+    # path (identical behavior) on the first tuple-dim option or any
+    # non-slack dimension.
+    if dp:
+        nb = len(budgets)
+        max_use_f = [0] * nb
+        fast_best: List[Optional[Option]] = []
+        scalar = True
+        for opts in options:
+            best = None
+            per_dim: Dict[int, int] = {}
+            for o in opts:
+                if o.reward <= 0:
+                    continue
+                d = o.dim
+                if isinstance(d, tuple):
+                    scalar = False
+                    break
+                u = o.usage
+                if u > budgets[d]:
+                    continue
+                if u > per_dim.get(d, 0):
+                    per_dim[d] = u
+                if best is None or o.reward > best.reward:
+                    best = o
+            if not scalar:
+                break
+            for d, u in per_dim.items():
+                max_use_f[d] += u
+            fast_best.append(best)
+        if scalar and all(max_use_f[d] <= budgets[d] for d in range(nb)):
+            choices: Dict[int, Option] = {}
+            reward = 0.0
+            for r, best in enumerate(fast_best):
+                if best is not None:
+                    choices[r] = best
+                    reward += best.reward
+            return Solution(choices=choices, reward=reward, nodes=0,
+                            optimal=True)
+
     # feasibility filter: an option can never fit if its usage alone
-    # exceeds its dimension's budget (checked per consumed dimension)
-    feasible: List[List[Option]] = [
-        [o for o in opts if o.reward > 0
-         and all(u <= budgets[d] for d, u in _spans(o))]
-        for opts in options]
+    # exceeds its dimension's budget (checked per consumed dimension).
+    # Spans are derived once per option here and threaded through the
+    # slack analysis, the prune, and the DFS prep — ``_spans`` tuple
+    # construction was a measurable share of solve preprocessing at
+    # fleet scale.
+    feasible: List[List[Option]] = []
+    fspans: List[List[Tuple[Tuple[int, int], ...]]] = []
+    for opts in options:
+        keep_o: List[Option] = []
+        keep_s: List[Tuple[Tuple[int, int], ...]] = []
+        for o in opts:
+            if o.reward <= 0:
+                continue
+            sp = _spans(o)
+            for d, u in sp:
+                if u > budgets[d]:
+                    break
+            else:
+                keep_o.append(o)
+                keep_s.append(sp)
+        feasible.append(keep_o)
+        fspans.append(keep_s)
 
     # slack dimensions: budget covers every request's largest option there,
     # so the dimension can never be binding in any solution
     max_use = [0] * len(budgets)
-    for opts in feasible:
+    for sps in fspans:
         per_dim: Dict[int, int] = {}
-        for o in opts:
-            for d, u in _spans(o):
-                per_dim[d] = max(per_dim.get(d, 0), u)
+        for sp in sps:
+            for d, u in sp:
+                if u > per_dim.get(d, 0):
+                    per_dim[d] = u
         for d, u in per_dim.items():
             max_use[d] += u
     slack = [max_use[d] <= budgets[d] for d in range(len(budgets))]
+
+    # fully slack instance -> unconstrained: even if every request takes its
+    # largest option in every dimension it touches, no budget binds, so the
+    # optimum is each request's first-listed max-reward option.  Opt-in for
+    # the same reason as the DP below: a node-capped DFS may have returned a
+    # different (worse) incumbent, so always-on would change committed
+    # trajectories.  At fleet scale most dispatch instances are slack —
+    # this skips the dominance prune, ordering, and search entirely.
+    if dp and all(slack):
+        choices: Dict[int, Option] = {}
+        reward = 0.0
+        for r, opts in enumerate(feasible):
+            best = None
+            for o in opts:
+                if best is None or o.reward > best.reward:
+                    best = o
+            if best is not None:
+                choices[r] = best
+                reward += best.reward
+        return Solution(choices=choices, reward=reward, nodes=0,
+                        optimal=True)
 
     # dominance prune per request:
     #   * same dims: dominated in (reward, per-dim usage) — classic Pareto;
@@ -233,31 +381,79 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
     #     options with no more reward (swapping to it can never break
     #     feasibility).
     pruned: List[List[Option]] = []
-    for opts in feasible:
-        slack_best = max((o.reward for o in opts
-                          if all(slack[d] for d, _ in _spans(o))),
-                         default=None)
-        keep: List[Option] = []
-        for o in sorted(opts, key=lambda o: (_usage_total(o), -o.reward)):
-            o_use = dict(_spans(o))
-            if (slack_best is not None and o.reward < slack_best
-                    and not all(slack[d] for d in o_use)):
-                continue
-            if any(p.reward >= o.reward
-                   and set(dict(_spans(p))) == set(o_use)
-                   and all(u <= o_use[d] for d, u in _spans(p))
-                   for p in keep):
-                continue
-            keep.append(o)
-        pruned.append(keep)
+    pspans: List[List[Tuple[Tuple[int, int], ...]]] = []
+    for opts, sps in zip(feasible, fspans):
+        slack_best = None
+        for o, sp in zip(opts, sps):
+            for d, _ in sp:
+                if not slack[d]:
+                    break
+            else:
+                if slack_best is None or o.reward > slack_best:
+                    slack_best = o.reward
+        keep: List[Tuple[Option, Tuple[Tuple[int, int], ...],
+                         Dict[int, int]]] = []
+        for o, sp in sorted(zip(opts, sps),
+                            key=lambda t: (_usage_total(t[0]), -t[0].reward)):
+            o_use = dict(sp)
+            if slack_best is not None and o.reward < slack_best:
+                allslack = True
+                for d in o_use:
+                    if not slack[d]:
+                        allslack = False
+                        break
+                if not allslack:
+                    continue
+            dominated = False
+            for p, psp, p_use in keep:
+                if p.reward >= o.reward and p_use.keys() == o_use.keys():
+                    for d, u in psp:
+                        if u > o_use[d]:
+                            break
+                    else:
+                        dominated = True
+                        break
+            if not dominated:
+                keep.append((o, sp, o_use))
+        pruned.append([t[0] for t in keep])
+        pspans.append([t[1] for t in keep])
+
+    # per-dimension decomposable instance -> exact dense DP (opt-in).
+    # When every surviving option charges one scalar dimension and each
+    # request's options are confined to one dimension, requests partition
+    # by dimension into independent multiple-choice knapsacks (budgets are
+    # per-dim, rewards add across requests) — the effectively-1D case the
+    # suffix bound degrades on, generalized to several dims at once.
+    if dp and np is not None:
+        decomposable = True
+        req_dim: Dict[int, object] = {}
+        for r, opts in enumerate(pruned):
+            dims_r = {o.dim for o in opts}
+            if len(dims_r) > 1 or any(isinstance(d, tuple) for d in dims_r):
+                decomposable = False
+                break
+            if dims_r:
+                req_dim[r] = next(iter(dims_r))
+        if decomposable and req_dim:
+            choices = {}
+            reward = 0.0
+            for d in sorted(set(req_dim.values())):
+                rs = [r for r in range(n) if req_dim.get(r) == d]
+                sub_choices, sub_reward = _solve_dp_single_dim(
+                    [pruned[r] for r in rs], d, int(budgets[d]))
+                for i, o in sub_choices.items():
+                    choices[rs[i]] = o
+                reward += sub_reward
+            return Solution(choices=choices, reward=reward, nodes=0,
+                            optimal=True)
 
     # order: largest best-reward first (tightens the additive bound quickly);
     # requests with *identical* option lists sort adjacently so the DFS can
     # break their symmetry (steady traffic yields many same-class requests
     # with bit-identical rewards)
     best_reward = [max((o.reward for o in opts), default=0.0) for opts in pruned]
-    sig = [tuple(sorted((_spans(o), o.reward) for o in opts))
-           for opts in pruned]
+    sig = [tuple(sorted((sp, o.reward) for o, sp in zip(opts, sps)))
+           for opts, sps in zip(pruned, pspans)]
     order = sorted(range(n), key=lambda r: (-best_reward[r], sig[r]))
     # suffix bound: best achievable from request position j onward
     suffix = [0.0] * (n + 1)
@@ -269,6 +465,18 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
     for j in range(n - 2, -1, -1):
         if sig[order[j]] == sig[order[j + 1]]:
             skip_to[j] = skip_to[j + 1]
+    # full multiplicity symmetry break (opt-in with ``dp``): within a run of
+    # identical requests, restrict assignments to the canonical form whose
+    # option indices are non-decreasing along the run.  Any assignment
+    # permutes into it with the same total reward, so the optimum value is
+    # untouched, but a group of m identical requests with c options costs
+    # C(m+c, c) states instead of (c+1)^m — the difference between a
+    # steady-traffic dispatch flood proving optimality and burning the
+    # node cap.  Opt-in because the canonical optimum can map options onto
+    # members differently than the unconstrained first-found optimum
+    # (equal-reward tie reordering; same contract as the DP fast path).
+    same_as_next = [j + 1 < n and sig[order[j]] == sig[order[j + 1]]
+                    for j in range(n)] if dp else [False] * n
 
     seed: Dict[int, Option] = {}
     if warm:
@@ -283,27 +491,31 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
         warm_inc, warm_reward = _greedy(pruned, budgets, seed=seed)
         if warm_reward > inc_reward:
             incumbent, inc_reward = warm_inc, warm_reward
-    state = {"best": inc_reward, "choices": dict(incumbent), "nodes": 0,
-             "capped": False}
+    best_reward_found = inc_reward
+    best_choices = dict(incumbent)
+    nodes = 0
+    capped = False
 
     # pre-sort each request's options best-reward-first once (the DFS used
     # to re-sort at every node on the hot path), and pre-normalize each
     # option's (dim, usage) spans so the hot loop never re-derives them
-    by_reward = [sorted(opts, key=lambda o: -o.reward) for opts in pruned]
-    by_spans = [[(_spans(o), _usage_total(o)) for o in opts]
-                for opts in by_reward]
+    by = [sorted(zip(opts, sps), key=lambda t: -t[0].reward)
+          for opts, sps in zip(pruned, pspans)]
+    by_reward = [[o for o, _ in lst] for lst in by]
+    by_spans = [[(sp, _usage_total(o)) for o, sp in lst] for lst in by]
 
     def dfs(j: int, rem: List[int], cap_rem: int, cur: float,
-            chosen: Dict[int, Option]):
-        if state["capped"]:
+            chosen: Dict[int, Option], min_opt: int = 0):
+        nonlocal best_reward_found, best_choices, nodes, capped
+        if capped:
             return
-        state["nodes"] += 1
-        if state["nodes"] >= node_cap:
-            state["capped"] = True
+        nodes += 1
+        if nodes >= node_cap:
+            capped = True
             return
-        if cur > state["best"]:
-            state["best"] = cur
-            state["choices"] = dict(chosen)
+        if cur > best_reward_found:
+            best_reward_found = cur
+            best_choices = dict(chosen)
         if j >= n:
             return
         # capacity-aware admissible bound: every option consumes >= 1 unit,
@@ -312,25 +524,37 @@ def solve(options: Sequence[Sequence[Option]], budgets: Sequence[int],
         # of the suffix array.  This is what lets backlog >> capacity
         # instances (the dispatch flood case) prove optimality quickly
         # instead of burning the node cap.
-        bound = suffix[j] - suffix[min(n, j + cap_rem)]
-        if cur + bound <= state["best"] + 1e-12:
+        stop = j + cap_rem
+        bound = suffix[j] - suffix[stop if stop < n else n]
+        if cur + bound <= best_reward_found + 1e-12:
             return
         r = order[j]
-        # try options best-first, then the skip branch
-        for o, (sp, use) in zip(by_reward[r], by_spans[r]):
-            if all(u <= rem[d] for d, u in sp):
+        opts_r = by_reward[r]
+        spans_r = by_spans[r]
+        chain = same_as_next[j]
+        # try options best-first, then the skip branch; ``min_opt`` (always
+        # 0 unless ``dp``) is the canonical-form floor within a run of
+        # identical requests
+        for i in range(min_opt, len(opts_r)):
+            sp, use = spans_r[i]
+            for d, u in sp:
+                if u > rem[d]:
+                    break
+            else:
+                o = opts_r[i]
                 for d, u in sp:
                     rem[d] -= u
                 chosen[r] = o
-                dfs(j + 1, rem, cap_rem - use, cur + o.reward, chosen)
+                dfs(j + 1, rem, cap_rem - use, cur + o.reward, chosen,
+                    i if chain else 0)
                 del chosen[r]
                 for d, u in sp:
                     rem[d] += u
         dfs(skip_to[j], rem, cap_rem, cur, chosen)
 
     dfs(0, list(budgets), sum(budgets), 0.0, {})
-    return Solution(choices=state["choices"], reward=state["best"],
-                    nodes=state["nodes"], optimal=not state["capped"])
+    return Solution(choices=best_choices, reward=best_reward_found,
+                    nodes=nodes, optimal=not capped)
 
 
 def brute_force(options: Sequence[Sequence[Option]], budgets: Sequence[int]) -> float:

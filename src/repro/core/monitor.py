@@ -16,9 +16,54 @@ from __future__ import annotations
 import collections
 from typing import Deque, Dict, List, Optional, Tuple
 
+try:                        # array-backed window state (SimConfig.array_state)
+    import numpy as np
+except ImportError:         # pragma: no cover - numpy ships with jax
+    np = None
+
 
 SWITCH_RATIO = 1.5
 MIN_SAMPLES = 8
+
+
+class _Cols:
+    """Append-only parallel sample columns with a head cursor — the
+    array-state twin of a deque of tuples.  Appends go at the tail, trims
+    advance the head; the dead prefix is compacted away once it dominates
+    the buffer, so both operations stay O(1) amortized and memory stays
+    window-bounded.  Columns are plain lists: every consumer reads scalars
+    (the incremental window sums are maintained outside), and a list
+    append is several times cheaper than a float64 element store — which
+    sat directly on the per-completion hot path at fleet scale.  Values
+    are stored untouched, so the window sums are bit-identical to the
+    deque path."""
+
+    __slots__ = ("t", "cols", "h", "n")
+
+    def __init__(self, n_cols: int, cap: int = 256):
+        self.t: List[float] = []
+        self.cols: List[List[float]] = [[] for _ in range(n_cols)]
+        self.h = 0          # head: index of the oldest retained sample
+        self.n = 0          # tail: one past the newest sample
+
+    def __len__(self) -> int:
+        return self.n - self.h
+
+    def append(self, t: float, *vals: float) -> None:
+        h = self.h
+        if h > 8192 and 2 * h > self.n:
+            del self.t[:h]
+            for c in self.cols:
+                del c[:h]
+            self.n -= h
+            self.h = 0
+        self.t.append(t)
+        for c, v in zip(self.cols, vals):
+            c.append(v)
+        self.n += 1
+
+    def head_t(self) -> Optional[float]:
+        return self.t[self.h] if self.n > self.h else None
 
 
 def next_boundary(*windows) -> Optional[float]:
@@ -34,33 +79,101 @@ def next_boundary(*windows) -> Optional[float]:
 
 
 class Monitor:
-    def __init__(self, t_win: float = 180.0):
+    """Per-lane window tracker; ``array_state=True`` swaps the deque-of-
+    tuples sample stores for flat parallel columns (``_Cols``) with string
+    stages/placement-types interned to integer codes.  The incremental
+    aggregates (``_stage_counts`` / ``_ptype_sums`` / ``_ptype_counts``)
+    are shared by both paths and updated with the *same* float adds and
+    subtracts in the *same* order, so every query — and therefore every
+    trajectory — is bit-identical flag on or off
+    (tests/test_scale_parity.py)."""
+
+    def __init__(self, t_win: float = 180.0, array_state: bool = False):
         self.t_win = t_win
-        self._completions: Deque[Tuple[float, str, str, float]] = collections.deque()
-        self._backlog: Deque[Tuple[float, int, int]] = collections.deque()
+        self._arr = bool(array_state) and np is not None
+        if self._arr:
+            self._c = _Cols(3)      # (stage code, ptype code, duration)
+            self._b = _Cols(2)      # (pending, idle primary)
+            self._code: Dict[str, int] = {}
+            self._name: List[str] = []
+        else:
+            self._completions: Deque[Tuple[float, str, str, float]] = \
+                collections.deque()
+            self._backlog: Deque[Tuple[float, int, int]] = collections.deque()
         self.last_switch: float = -1e9
-        # incremental window aggregates (kept in lockstep with _completions)
+        # incremental window aggregates (kept in lockstep with the samples)
         self._stage_counts: Dict[str, int] = collections.defaultdict(int)
         self._ptype_sums: Dict[str, float] = collections.defaultdict(float)
         self._ptype_counts: Dict[str, int] = collections.defaultdict(int)
+        # earliest time the oldest retained sample can exit the window:
+        # ``_trim`` is a strict no-op until then, so it returns in O(1)
+        # off that bound instead of re-deriving it from the heads on every
+        # recorded sample (``_trim`` sits on the per-sample hot path)
+        self._trim_due: float = float("inf")
+
+    def _intern(self, s: str) -> int:
+        code = self._code.get(s)
+        if code is None:
+            code = self._code[s] = len(self._name)
+            self._name.append(s)
+        return code
 
     # -- recording -------------------------------------------------------------
 
     def record_stage(self, tau: float, stage: str, ptype: str,
                      duration: float = 0.0):
-        self._completions.append((tau, stage, ptype, duration))
+        if self._arr:
+            self._c.append(tau, self._intern(stage), self._intern(ptype),
+                           duration)
+        else:
+            self._completions.append((tau, stage, ptype, duration))
         self._stage_counts[stage] += 1
         if duration > 0:
             self._ptype_sums[ptype] += duration
             self._ptype_counts[ptype] += 1
+        if tau + self.t_win < self._trim_due:
+            self._trim_due = tau + self.t_win
         self._trim(tau)
 
     def record_backlog(self, tau: float, pending: int, idle_primary: int):
-        self._backlog.append((tau, pending, idle_primary))
+        if self._arr:
+            self._b.append(tau, pending, idle_primary)
+        else:
+            self._backlog.append((tau, pending, idle_primary))
+        if tau + self.t_win < self._trim_due:
+            self._trim_due = tau + self.t_win
         self._trim(tau)
 
     def _trim(self, tau: float):
+        # a sample exits only when tau - t_win moves strictly past its
+        # timestamp, i.e. when tau > head + t_win == _trim_due; before that
+        # both scan loops below are guaranteed zero-iteration no-ops
+        if tau <= self._trim_due:
+            return
         cutoff = tau - self.t_win
+        if self._arr:
+            c = self._c
+            ct, cs, cp, cd = c.t, c.cols[0], c.cols[1], c.cols[2]
+            h, n = c.h, c.n
+            while h < n and ct[h] < cutoff:
+                self._stage_counts[self._name[int(cs[h])]] -= 1
+                dur = float(cd[h])
+                if dur > 0:
+                    p = self._name[int(cp[h])]
+                    self._ptype_sums[p] -= dur
+                    self._ptype_counts[p] -= 1
+                h += 1
+            c.h = h
+            b = self._b
+            h, n, bt = b.h, b.n, b.t
+            while h < n and bt[h] < cutoff:
+                h += 1
+            b.h = h
+            heads = [t for t in (self._c.head_t(), self._b.head_t())
+                     if t is not None]
+            self._trim_due = (min(heads) + self.t_win) if heads \
+                else float("inf")
+            return
         q = self._completions
         while q and q[0][0] < cutoff:
             _, s, p, dur = q.popleft()
@@ -71,12 +184,19 @@ class Monitor:
         b = self._backlog
         while b and b[0][0] < cutoff:
             b.popleft()
+        heads = [dq[0][0] for dq in (q, b) if dq]
+        self._trim_due = (min(heads) + self.t_win) if heads else float("inf")
 
     # -- queries ---------------------------------------------------------------
 
     def next_window_boundary(self) -> Optional[float]:
         """Earliest future time a retained sample exits the sliding window
         (the kernel's Monitor-window wake source; see ``next_boundary``)."""
+        if self._arr:
+            heads = [t + self.t_win
+                     for t in (self._c.head_t(), self._b.head_t())
+                     if t is not None]
+            return min(heads) if heads else None
         return next_boundary((self._completions, self.t_win),
                              (self._backlog, self.t_win))
 
@@ -107,7 +227,14 @@ class Monitor:
         # congestion: backlog persistently exceeds idle primary capacity
         # (peek the newest MIN_SAMPLES right-to-left; copying the whole
         # window deque per wake-up is O(T_win))
-        if len(self._backlog) >= MIN_SAMPLES:
+        if self._arr:
+            b = self._b
+            if len(b) >= MIN_SAMPLES:
+                bp, bi = b.cols[0], b.cols[1]
+                if all(bp[j] > 2 * max(1, int(bi[j]))
+                       for j in range(b.n - 1, b.n - 1 - MIN_SAMPLES, -1)):
+                    trigger = True
+        elif len(self._backlog) >= MIN_SAMPLES:
             it = reversed(self._backlog)
             if all(p > 2 * max(1, i)
                    for _, p, i in (next(it) for _ in range(MIN_SAMPLES))):
@@ -175,6 +302,10 @@ class FleetMonitor:
         self._ch_keep: int = 0
         self._ch: Dict[int, Dict[str, float]] = {}
         self._ch_lo: int = 0
+        # earliest time any head sample (arrival/finish on t_win, util on
+        # lend_win) can exit its window — same O(1) ``_trim`` gate as the
+        # lane Monitor's
+        self._trim_due: float = float("inf")
 
     # -- recording -------------------------------------------------------------
 
@@ -223,12 +354,16 @@ class FleetMonitor:
             while self._rh_lo < lo:
                 self._rh.pop(self._rh_lo, None)
                 self._rh_lo += 1
+        if tau + self.t_win < self._trim_due:
+            self._trim_due = tau + self.t_win
         self._trim(tau)
 
     def record_finish(self, tau: float, pipeline: str, on_time: bool) -> None:
         self._fin.append((tau, pipeline, on_time))
         self._fin_n[pipeline] += 1
         self._fin_on[pipeline] += int(on_time)
+        if tau + self.t_win < self._trim_due:
+            self._trim_due = tau + self.t_win
         self._trim(tau)
 
     def record_util(self, tau: float, pipeline: str, backlog: float,
@@ -239,9 +374,15 @@ class FleetMonitor:
         self._util_bl[pipeline] += backlog
         self._util_idle[pipeline] += idle_units
         self._util_n[pipeline] += 1
+        if tau + self.lend_win < self._trim_due:
+            self._trim_due = tau + self.lend_win
         self._trim(tau)
 
     def _trim(self, tau: float) -> None:
+        # no head sample can exit before _trim_due (strict < comparisons
+        # below) — skip the three scans in O(1) until then
+        if tau <= self._trim_due:
+            return
         cutoff = tau - self.t_win
         q = self._arrivals
         while q and q[0][0] < cutoff:
@@ -259,6 +400,12 @@ class FleetMonitor:
             self._util_bl[p] -= bl
             self._util_idle[p] -= idle
             self._util_n[p] -= 1
+        heads = [h for h in
+                 ((q[0][0] + self.t_win if q else None),
+                  (f[0][0] + self.t_win if f else None),
+                  (u[0][0] + self.lend_win if u else None))
+                 if h is not None]
+        self._trim_due = min(heads) if heads else float("inf")
 
     # -- queries ---------------------------------------------------------------
 

@@ -91,8 +91,16 @@ class PlacementPlan:
                     with_stage.setdefault(s, []).append(g)
             primary = frozenset(g for g, p in enumerate(self.placements)
                                 if p in PRIMARY_PLACEMENTS and g not in inactive)
-            idx = self.__dict__["_idx"] = (by_type, with_stage, primary)
+            tsets = {p: frozenset(gs) for p, gs in by_type.items()}
+            idx = self.__dict__["_idx"] = (by_type, with_stage, primary,
+                                           tsets)
         return idx
+
+    def type_set(self, ptype: str) -> FrozenSet[int]:
+        """``units_of_type`` as a frozenset — for C-speed intersections
+        with the engine's idle set on the dispatch hot path (same active
+        view, same cache invalidation)."""
+        return self._index()[3].get(ptype, frozenset())
 
     # -- fleet unit-lending overlay (core/lending.py) -------------------------
 

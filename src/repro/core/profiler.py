@@ -86,6 +86,7 @@ class Profiler:
         self._time_memo: Dict[Tuple, float] = {}
         self._deg_memo: Dict[Tuple, int] = {}
         self._fits_memo: Dict[Tuple, bool] = {}
+        self._batch_memo: Dict[Tuple, float] = {}
 
     @staticmethod
     def _class_key(req: Request) -> Tuple:
@@ -192,7 +193,8 @@ class Profiler:
 
     def stage_time(self, req: Request, stage: str, k_chips: int) -> float:
         """Wall-clock estimate of stage ``stage`` at SP degree ``k_chips``."""
-        key = self._class_key(req) + (stage, k_chips)
+        key = (req.pipeline, req.resolution, req.seconds, req.cond_len,
+               stage, k_chips)
         hit = self._time_memo.get(key)
         if hit is not None:
             return hit
@@ -233,6 +235,11 @@ class Profiler:
         traffic scales linearly."""
         if batch <= 1:
             return self.stage_time(req, stage, k_chips)
+        key = (req.pipeline, req.resolution, req.seconds, req.cond_len,
+               stage, k_chips, batch)
+        hit = self._batch_memo.get(key)
+        if hit is not None:
+            return hit
         flops = self.stage_flops(req, stage) * batch
         hbm = (self.stage_hbm_bytes(req, stage)
                + (batch - 1) * self.stage_act_bytes(req, stage) * 3)
@@ -240,12 +247,15 @@ class Profiler:
         mfu = MFU_CONV if stage == "C" else MFU
         t = max(flops / (k_chips * PEAK_FLOPS * mfu),
                 hbm / (k_chips * HBM_BW)) + DISPATCH_OVERHEAD
-        return max(base, t)
+        t = max(base, t)
+        self._batch_memo[key] = t
+        return t
 
     def optimal_batch(self, req: Request, stage: str, k_chips: int,
                       cap: int = 8) -> int:
         """Largest batch whose latency stays within 1.2x single (E.1)."""
-        key = self._class_key(req) + (stage, k_chips, "bs")
+        key = (req.pipeline, req.resolution, req.seconds, req.cond_len,
+               stage, k_chips, "bs")
         hit = self._deg_memo.get(key)
         if hit is not None:
             return hit
@@ -268,7 +278,8 @@ class Profiler:
     def optimal_degree(self, req: Request, stage: str) -> int:
         """Paper's *optimal parallelism strategy*: highest degree with
         efficiency > 0.8 (footnote 4). In scheduling *units*."""
-        key = self._class_key(req) + (stage,)
+        key = (req.pipeline, req.resolution, req.seconds, req.cond_len,
+               stage)
         hit = self._deg_memo.get(key)
         if hit is not None:
             return hit
@@ -315,7 +326,8 @@ class Profiler:
         """Memory-feasibility filter F_{r,i,k} — memoized: it sits on the
         dispatch hot path (called per pending request x VR type x degree,
         every scheduler wake-up)."""
-        key = self._class_key(req) + (ptype, k_units)
+        key = (req.pipeline, req.resolution, req.seconds, req.cond_len,
+               ptype, k_units)
         hit = self._fits_memo.get(key)
         if hit is None:
             hit = self.peak_mem(req, ptype, k_units) <= HBM_BYTES

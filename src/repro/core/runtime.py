@@ -59,6 +59,10 @@ class EngineStats:
     downtime: float = 0.0
     prewarm_loads: int = 0
     prewarm_load_time: float = 0.0
+    # dispatch ILP solutions reused across wake-ups without a re-solve
+    # (Dispatcher(incremental=True)'s persisted-model skip; credited by
+    # the scheduler driving this engine — core/trident.py)
+    ilp_reuses: int = 0
 
 
 class RuntimeEngine:
@@ -79,6 +83,11 @@ class RuntimeEngine:
         # Stale heap entries (unit re-reserved meanwhile) are dropped on pop.
         self._idle: Set[int] = {u.uid for u in self.units}
         self._busy_heap: List[Tuple[float, int]] = []
+        # mirror of every unit's free_at, maintained at the (few) mutation
+        # sites so ``free_at()`` is O(1) instead of an O(units) dict build
+        # on every dispatch round
+        self._free_map: Dict[int, float] = {u.uid: u.free_at
+                                            for u in self.units}
 
     # ------------------------------------------------------------------ state
 
@@ -87,15 +96,21 @@ class RuntimeEngine:
         heapq.heappush(self._busy_heap, (until, uid))
 
     def idle_units(self, tau: float) -> Set[int]:
+        """Units idle at ``tau``.  Returns the engine's *live* idle set —
+        treat it as read-only and consume it before the next engine
+        mutation (every scheduler fetches it fresh per wake-up; copying
+        here cost O(units) per tick at fleet scale)."""
         heap = self._busy_heap
         while heap and heap[0][0] <= tau:
             _, uid = heapq.heappop(heap)
             if self.units[uid].free_at <= tau:   # else: re-reserved since
                 self._idle.add(uid)
-        return set(self._idle)
+        return self._idle
 
     def free_at(self) -> Dict[int, float]:
-        return {u.uid: u.free_at for u in self.units}
+        """Live ``{uid: free_at}`` view (same read-only contract as
+        ``idle_units``)."""
+        return self._free_map
 
     def seed_unit_state(self, busy_until: Dict[int, float]) -> None:
         """Pre-busy freshly built units (fleet re-partition, core/fleet.py):
@@ -107,6 +122,7 @@ class RuntimeEngine:
             u = self.units[uid]
             if t > u.free_at:
                 u.free_at = t
+                self._free_map[uid] = t
             if u.free_at > 0.0:
                 self._mark_busy(uid, u.free_at)
 
@@ -137,6 +153,7 @@ class RuntimeEngine:
         uid = self.plan.extend(ptype)
         self.units.append(Unit(uid=uid, node=node, placement=ptype,
                                resident=set(ptype), free_at=busy_until))
+        self._free_map[uid] = busy_until
         self._mark_busy(uid, busy_until)
         return uid
 
@@ -150,6 +167,7 @@ class RuntimeEngine:
         u.node = node
         u.hb_staged = 0.0
         u.free_at = max(u.free_at, busy_until)
+        self._free_map[uid] = u.free_at
         self.plan.retype(uid, ptype)
         self.plan.set_active(uid, True)
         self._mark_busy(uid, u.free_at)
@@ -175,6 +193,7 @@ class RuntimeEngine:
             barrier = max([tau] + [u.free_at for u in self.units]) + cost
             for u in self.units:
                 u.free_at = barrier
+                self._free_map[u.uid] = barrier
                 self._mark_busy(u.uid, barrier)
             self.stats.downtime += cost
         for u, new_p in zip(self.units, new_plan.placements):
@@ -244,9 +263,11 @@ class RuntimeEngine:
         return pred_finish + t + DISPATCH_OVERHEAD
 
     def _reserve(self, unit_ids: Sequence[int], start: float, finish: float):
+        fm = self._free_map
         for g in unit_ids:
             u = self.units[g]
             u.free_at = finish
+            fm[g] = finish
             u.hb_staged = 0.0
             self._mark_busy(g, finish)
 
@@ -318,13 +339,21 @@ class RuntimeEngine:
             merged_ed = tuple(dec.e_units) == tuple(dec.d_units)
 
             # --- E -----------------------------------------------------------
-            e_ready = max(tau, max(self.units[g].free_at for g in dec.e_units))
+            units = self.units
+            e_ready = tau
+            for g in dec.e_units:
+                t = units[g].free_at
+                if t > e_ready:
+                    e_ready = t
             e_ready += self._reinstance(dec.e_units)
             e_ready += self._prepare_stage("E", dec.e_units, tau)
             if merged_ed:
                 # merging execute: E+D single atomic run (one dispatch overhead)
-                d_ready = max(e_ready,
-                              max(self.units[g].free_at for g in dec.d_units))
+                d_ready = e_ready
+                for g in dec.d_units:
+                    t = units[g].free_at
+                    if t > d_ready:
+                        d_ready = t
                 d_ready += self._reinstance(dec.d_units)
                 d_ready += self._prepare_stage("D", dec.d_units, tau)
                 start = d_ready
@@ -339,8 +368,11 @@ class RuntimeEngine:
                 self._reserve(dec.e_units, e_ready, e_fin)
                 data_ready = self._push(prof.comm_bytes(req, "ED"),
                                         dec.e_units, dec.d_units, e_fin)
-                d_start = max(data_ready,
-                              max(self.units[g].free_at for g in dec.d_units))
+                d_start = data_ready
+                for g in dec.d_units:
+                    t = units[g].free_at
+                    if t > d_start:
+                        d_start = t
                 d_start += self._reinstance(dec.d_units)
                 d_start += self._prepare_stage("D", dec.d_units, tau)
                 d_fin = d_start + t_d
@@ -356,7 +388,8 @@ class RuntimeEngine:
 
         t_c = prof.batched_stage_time(req, "C",
                                       max(1, len(dec.c_units)) * prof.k_min, bs)
-        merged_dc = set(dec.c_units) <= set(dec.d_units)
+        merged_dc = (dec.c_units == dec.d_units
+                     or set(dec.c_units) <= set(dec.d_units))
         if merged_dc:
             c_start = d_fin
             c_fin = c_start + t_c - DISPATCH_OVERHEAD
@@ -371,8 +404,12 @@ class RuntimeEngine:
             self._reserve(dec.d_units, out["D"][0], d_fin)
             data_ready = self._push(prof.comm_bytes(req, "DC"),
                                     dec.d_units, dec.c_units, d_fin)
-            c_start = max(data_ready,
-                          max(self.units[g].free_at for g in dec.c_units))
+            units = self.units
+            c_start = data_ready
+            for g in dec.c_units:
+                t = units[g].free_at
+                if t > c_start:
+                    c_start = t
             c_start += self._reinstance(dec.c_units)
             c_start += self._prepare_stage("C", dec.c_units, tau)
             c_fin = c_start + t_c

@@ -76,6 +76,14 @@ class SimConfig:
                                       # shift heartbeat phase, so the
                                       # default keeps committed traces
                                       # bit-exact.
+    array_state: bool = False         # array-backed lane state: flat numpy
+                                      # deadline/window columns behind
+                                      # PendingSet/Monitor instead of
+                                      # per-request Python object walks.
+                                      # Bit-identical trajectories by
+                                      # construction (stable argsort +
+                                      # same-order incremental sums);
+                                      # pinned by tests/test_scale_parity.py.
 
     def clock_cfg(self, horizon: float) -> ClockConfig:
         return ClockConfig(tick=self.tick, horizon=horizon, mode=self.mode,
@@ -125,7 +133,8 @@ class Simulator(Lane):
 
     def __init__(self, pipeline_id: str, scheduler: Scheduler,
                  trace: Sequence[Request], sim_cfg: SimConfig):
-        super().__init__(pipeline_id, scheduler.prof, scheduler)
+        super().__init__(pipeline_id, scheduler.prof, scheduler,
+                         array_state=sim_cfg.array_state)
         self.pipeline_id = pipeline_id
         self.scheduler = scheduler     # alias of ``self.sched``
         self.trace = sorted(trace, key=lambda r: r.arrival)

@@ -22,13 +22,21 @@ class TridentScheduler(Scheduler):
                  trace: Sequence[Request], *, enable_switch: bool = True,
                  stage_aware: bool = True, use_ilp: bool = True,
                  enable_batching: bool = True, aggregate_ilp: bool = False,
-                 cross_lane_batching: bool = False):
+                 cross_lane_batching: bool = False,
+                 incremental_ilp: bool = False):
         super().__init__(prof, sim_cfg, trace)
         self.orch = Orchestrator(prof, num_chips=sim_cfg.num_chips)
         # aggregate_ilp: multiplicity-aware solver aggregation (identical
         # pending requests enter once with a count); default off so the
-        # single-pipeline path keeps its exact pre-aggregation behavior
-        self.disp = Dispatcher(prof, aggregate=aggregate_ilp)
+        # single-pipeline path keeps its exact pre-aggregation behavior.
+        # incremental_ilp: persist the dispatch model across wake-ups and
+        # skip the solve when it is unchanged (docs/architecture.md).
+        self.disp = Dispatcher(prof, aggregate=aggregate_ilp,
+                               incremental=incremental_ilp)
+        # array-backed lane state (SimConfig.array_state): deadline ordering
+        # comes from PendingSet's flat deadline array instead of a Python
+        # key sort — bit-identical order, vectorized argsort
+        self._array_state = getattr(sim_cfg, "array_state", False)
         self.enable_switch = enable_switch      # wo-switch ablation
         self.stage_aware = stage_aware          # wo-stageAware ablation
         self.use_ilp = use_ilp                  # wo-scheduler ablation
@@ -94,6 +102,9 @@ class TridentScheduler(Scheduler):
             drop = self._recent[:-4096]
             self._recent = self._recent[-4096:]
             self._recent_ids -= {r.rid for r in drop}
+        # live engine view (read-only contract, ServingEngine.idle_units):
+        # held across dispatch but never mutated, and consumed before the
+        # decisions are applied back to the engine
         idle = sim.engine.idle_units(tau)
         idle_primary = len(idle & sim.engine.plan.primary_units)
         sim.monitor.record_backlog(tau, len(sim.pending), idle_primary)
@@ -111,7 +122,10 @@ class TridentScheduler(Scheduler):
         chunk_of = {}
         if self.enable_batching:
             groups = {}
-            for r in sorted(pending, key=lambda r: r.deadline):
+            ordered = (pending.by_deadline()
+                       if self._array_state and hasattr(pending, "by_deadline")
+                       else sorted(pending, key=lambda r: r.deadline))
+            for r in ordered:
                 groups.setdefault(r.key(), []).append(r)
             pending = []
             for key, pool in groups.items():
@@ -124,9 +138,16 @@ class TridentScheduler(Scheduler):
                     chunk_of[chunk[0].rid] = chunk
         # fleet unit lending: a Lane carries borrowed foreign E/C units
         # (core/lending.py); the plain Simulator never sets the attribute
+        reuses0 = self.disp.solve_reuses
         out = self.disp.dispatch(pending, sim.engine.plan, idle,
                                  sim.engine.free_at(), tau,
                                  borrowed=getattr(sim, "borrowed_units", None))
+        if self.disp.solve_reuses != reuses0:
+            # credit persisted-model solve skips to the engine serving this
+            # lane (banked across fleet re-partitions like every EngineStats
+            # counter); the default path never increments, so the stats
+            # surface is unchanged when incremental_ilp is off
+            sim.engine.stats.ilp_reuses += self.disp.solve_reuses - reuses0
         if self.enable_batching:
             for dec in out:
                 chunk = chunk_of.get(dec.request.rid, [dec.request])

@@ -293,6 +293,56 @@ def cross_batch_trace(duration: float, profs: Dict[str, Profiler],
     return out
 
 
+# Scale-out tier (``benchmarks/e2e.py --scale``, BENCH_scale.json): an
+# 8-pipeline, 4096-chip, ~1M-request trace exercising the sim-core hot
+# path at one order beyond the committed 512-chip benches.  The 8
+# pipelines are the 4 profiled configs plus 4 registry aliases that
+# SHARE the base Profiler instances (``PipelineRegistry.register(alias,
+# profiler=...)``): the traffic is genuinely 8 independent lanes with 8
+# chip ranges and 8 dispatch models, but the memoized profiler tables are
+# built once per config — profiling cost is not what this tier measures.
+# Rates are per 4096 chips and scale linearly with the chip count (the
+# smoke tier runs 512 chips / 100k requests at rates/8), tuned to the
+# same ~hot-but-not-saturated operating point as FLEET_RATES.
+SCALE_ALIASES: Dict[str, str] = {
+    "sd3-v2": "sd3", "flux-v2": "flux", "cogvideox-v2": "cogvideox",
+    "hunyuanvideo-v2": "hunyuanvideo",
+}
+SCALE_PIPELINES: Tuple[str, ...] = (
+    "sd3", "flux", "cogvideox", "hunyuanvideo",
+    "sd3-v2", "flux-v2", "cogvideox-v2", "hunyuanvideo-v2",
+)
+SCALE_BASE_CHIPS = 4096
+SCALE_RATES: Dict[str, float] = {
+    "sd3": 240.0, "flux": 12.0, "cogvideox": 8.0, "hunyuanvideo": 4.0,
+    "sd3-v2": 240.0, "flux-v2": 12.0, "cogvideox-v2": 8.0,
+    "hunyuanvideo-v2": 4.0,
+}
+
+
+def scale_duration(n_requests: int,
+                   num_chips: int = SCALE_BASE_CHIPS) -> float:
+    """Trace duration whose Poisson streams yield ``n_requests`` arrivals
+    in expectation at the chip-scaled SCALE_RATES."""
+    total = sum(SCALE_RATES.values()) * (num_chips / SCALE_BASE_CHIPS)  # detlint: ignore[DET001] module-literal dict: insertion order is fixed
+    return n_requests / total
+
+
+def scale_trace(duration: float, profs: Dict[str, Profiler], seed: int = 0,
+                num_chips: int = SCALE_BASE_CHIPS,
+                level: str = "medium") -> List[Request]:
+    """The scale tier's trace: ``fleet_trace`` over the 8 SCALE_PIPELINES
+    at chip-scaled rates; aliases draw from their base config's Table 5
+    mix (``mix_override`` — aliases have no MIXES entry of their own).
+    ``profs`` must map every alias too (share the base Profiler)."""
+    scale = num_chips / SCALE_BASE_CHIPS
+    rates = {p: r * scale for p, r in SCALE_RATES.items()}
+    mix = {alias: MIXES[base][level]
+           for alias, base in SCALE_ALIASES.items()}
+    return fleet_trace(SCALE_PIPELINES, duration, profs, seed=seed,
+                       rates=rates, level=level, mix_override=mix)
+
+
 # Diurnal predictive scenario (``--predictive``, tests/test_forecast.py):
 # anti-phase day/night demand between the image and the video pipeline —
 # the periodic structure the demand forecaster (core/forecast.py) exists to
@@ -403,7 +453,9 @@ def fleet_trace(pipelines: Sequence[str], duration: float,
     out: List[Request] = []
     for pid in pipelines:
         rng = random.Random(f"fleet:{seed}:{pid}")
-        base = (rates or FLEET_RATES).get(pid, RATES[pid])
+        base = (rates or FLEET_RATES).get(pid)
+        if base is None:   # lazily: alias pipelines have no Table 5 rate
+            base = RATES[pid]
         mix = (mix_override or {}).get(pid) or MIXES[pid][level]
         start = 0.0
         for end_frac, mults in phases:

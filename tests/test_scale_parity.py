@@ -1,0 +1,250 @@
+"""Scale-out fast-path parity (ISSUE 9): the flag-gated hot paths behind
+``benchmarks/e2e.py --scale`` must not change what the simulator computes.
+
+Three flags, three contracts:
+
+* ``array_state`` — array-backed PendingSet/Monitor columns are
+  **bit-identical by construction** (stable argsort, same-order
+  incremental sums): full-result equality on single-lane and fleet runs.
+* ``incremental_ilp`` — signature reuse is exact whenever the previous
+  solve proved optimality; the dense-DP fast path returns a true optimum
+  where a node-capped DFS may return an improvable incumbent, so whole-run
+  equality is *modulo equal-reward tie reordering*: every deterministic
+  headline metric must match exactly, per-pipeline latency percentiles
+  within a small tolerance, and the run must actually reuse solves.
+* ``step_changed_lanes_only`` — documented trajectory-changing (idle lanes
+  skip backlog samples): the contract is determinism plus conservation
+  (same requests, all finished both ways) and headline-metric sanity.
+
+Plus the solver-level pin: the DP fast path's reward equals the
+branch-and-bound's proven optimum on randomized single-dimension
+instances.
+"""
+import dataclasses
+import json
+import os
+import random
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import ilp, workloads
+from repro.core.fleet import FleetConfig, run_fleet
+from repro.core.simulator import SimConfig, run_sim
+from repro.core.trident import TridentScheduler
+
+
+def _fleet(seed, **kw):
+    rates, phases = workloads.randomized_fleet_scenario(seed)
+    cfg = FleetConfig(num_chips=128, t_win=60.0, cooldown=40.0, **kw)
+    return run_fleet(["sd3", "flux"], mode="adaptive", duration=90.0,
+                     cfg=cfg, seed=seed, rates=rates, phases=phases)
+
+
+def _strip_reuses(d):
+    out = dict(d)
+    out["engine_stats"] = {k: {kk: vv for kk, vv in v.items()
+                               if kk != "ilp_reuses"}
+                           for k, v in d["engine_stats"].items()}
+    return out
+
+
+# -- array_state: bit-exact ---------------------------------------------------
+
+@pytest.mark.parametrize("seed", (0, 3, 7))
+def test_array_state_fleet_bit_exact(seed):
+    a = dataclasses.asdict(_fleet(seed))
+    b = dataclasses.asdict(_fleet(seed, array_state=True))
+    assert a == b
+
+
+@pytest.mark.parametrize("workload", ("light", "medium"))
+def test_array_state_single_lane_bit_exact(workload):
+    a = run_sim("sd3", TridentScheduler, workload, 45.0,
+                sim_cfg=SimConfig(num_chips=128), seed=2)
+    b = run_sim("sd3", TridentScheduler, workload, 45.0,
+                sim_cfg=SimConfig(num_chips=128, array_state=True), seed=2)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+# the strong form of the array_state contract: with the flag forced ON,
+# re-running the committed shared-cluster scenario reproduces
+# BENCH_shared_cluster.json *byte-for-byte* (the file has no wall-clock
+# fields).  Nightly, like the other committed-baseline reproductions.
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SHARED_DRIVER = r"""
+import json, sys
+from benchmarks import e2e
+p = json.load(sys.stdin)
+e2e.run_mixed_shared(quick=True, bench_path=p["out"],
+                     fleet_cfg_kw={"array_state": True})
+print("done")
+"""
+
+
+@pytest.mark.slow
+def test_array_state_reproduces_committed_shared_bench(tmp_path):
+    out = tmp_path / "BENCH_shared_cluster.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(_REPO, "src"))
+    subprocess.run([sys.executable, "-c", _SHARED_DRIVER],
+                   input=json.dumps({"out": str(out)}), capture_output=True,
+                   text=True, cwd=_REPO, timeout=3600, check=True, env=env)
+    with open(os.path.join(_REPO, "BENCH_shared_cluster.json"), "rb") as f:
+        committed = f.read()
+    assert out.read_bytes() == committed
+
+
+# -- incremental_ilp: exact modulo equal-reward ties --------------------------
+
+@pytest.mark.parametrize("seed", (0, 3, 7))
+def test_incremental_ilp_headline_parity(seed):
+    a = _fleet(seed)
+    c = _fleet(seed, incremental_ilp=True)
+    # deterministic headline metrics must be unaffected by solve reuse and
+    # the DP fast path (equal-reward solutions grant the same totals)
+    assert c.n_requests == a.n_requests
+    assert c.n_finished == a.n_finished
+    assert c.slo_attainment == a.slo_attainment
+    assert c.goodput == a.goodput
+    assert c.sched_wakeups == a.sched_wakeups
+    assert c.repartitions == a.repartitions
+    for pid, pa in a.per_pipeline.items():
+        pc = c.per_pipeline[pid]
+        for k in ("requests", "finished", "on_time", "slo", "chips"):
+            assert pc[k] == pa[k], (pid, k)
+        # equal-reward tie reordering can shuffle which request lands in
+        # which batch; latency summaries stay within a small band
+        for k in ("mean_s", "p95_s"):
+            assert pc[k] == pytest.approx(pa[k], rel=0.05), (pid, k)
+    # the flag must actually have reused solves on a steady trace
+    reuses = sum(v.get("ilp_reuses", 0) for v in c.engine_stats.values())
+    assert reuses > 0
+    base_reuses = sum(v.get("ilp_reuses", 0)
+                      for v in a.engine_stats.values())
+    assert base_reuses == 0
+
+
+def test_incremental_ilp_run_is_deterministic():
+    a = dataclasses.asdict(_fleet(0, incremental_ilp=True))
+    b = dataclasses.asdict(_fleet(0, incremental_ilp=True))
+    assert a == b
+
+
+# -- step_changed_lanes_only: determinism + conservation ----------------------
+
+@pytest.mark.parametrize("seed", (0, 3, 7))
+def test_lane_gating_conserves_requests(seed):
+    a = _fleet(seed)
+    d = _fleet(seed, step_changed_lanes_only=True)
+    assert d.n_requests == a.n_requests
+    assert d.n_finished == a.n_finished
+    assert d.slo_attainment == pytest.approx(a.slo_attainment, abs=0.02)
+    # gating skips only no-op lane steps, never scheduler wake-ups
+    assert d.sched_wakeups == a.sched_wakeups
+
+
+def test_lane_gating_run_is_deterministic():
+    a = dataclasses.asdict(_fleet(3, step_changed_lanes_only=True))
+    b = dataclasses.asdict(_fleet(3, step_changed_lanes_only=True))
+    assert a == b
+
+
+def test_all_fast_paths_together_conserve_requests():
+    a = _fleet(3)
+    f = _fleet(3, array_state=True, incremental_ilp=True,
+               step_changed_lanes_only=True)
+    assert f.n_requests == a.n_requests
+    assert f.n_finished == a.n_finished
+    assert f.slo_attainment == pytest.approx(a.slo_attainment, abs=0.02)
+
+
+# -- DP fast path == proven DFS optimum on single-dim instances ---------------
+
+def _random_single_dim_instance(rng):
+    n = rng.randint(1, 10)
+    dim = rng.randint(0, 2)
+    budgets = [0, 0, 0]
+    budgets[dim] = rng.randint(1, 60)
+    options = []
+    for _ in range(n):
+        opts = [ilp.Option(dim=dim, usage=rng.randint(1, 12),
+                           reward=rng.uniform(0.1, 10.0))
+                for _ in range(rng.randint(0, 3))]
+        options.append(opts)
+    return options, budgets
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dp_reward_matches_dfs_optimum(seed):
+    rng = random.Random(seed)
+    for _ in range(40):
+        options, budgets = _random_single_dim_instance(rng)
+        dfs = ilp.solve(options, budgets, time_cap=1.0)
+        dp = ilp.solve(options, budgets, time_cap=1.0, dp=True)
+        assert dfs.optimal, "instance too big for a proven optimum"
+        assert dp.reward == pytest.approx(dfs.reward, rel=1e-12)
+        surviving = any(o.usage <= budgets[o.dim]
+                        for opts in options for o in opts)
+        if surviving:
+            assert dp.optimal and dp.nodes == 0, "DP path not taken"
+        # DP choices must themselves be a feasible solution
+        used = sum(o.usage for o in dp.choices.values())
+        assert used <= max(budgets)
+
+
+def test_unconstrained_shortcut_picks_per_request_argmax():
+    # every dim slack -> each request takes its first-listed best option
+    options = [[ilp.Option(dim=0, usage=2, reward=1.0),
+                ilp.Option(dim=0, usage=1, reward=1.0)],   # tie: first wins
+               [ilp.Option(dim=1, usage=2, reward=3.0)]]
+    sol = ilp.solve(options, [4, 4, 0], time_cap=1.0, dp=True)
+    assert sol.optimal and sol.nodes == 0
+    assert sol.reward == pytest.approx(4.0)
+    assert sol.choices[0].usage == 2       # first-listed tie-break
+
+
+def test_dp_decomposes_per_dim_and_declines_coupled_instances():
+    # constrained but per-request single-dim: decomposes into independent
+    # knapsacks (dim 0 must drop the 0.9 request; dim 1 keeps its one)
+    options = [[ilp.Option(dim=0, usage=2, reward=1.0)],
+               [ilp.Option(dim=0, usage=2, reward=0.9)],
+               [ilp.Option(dim=1, usage=2, reward=1.0)]]
+    sol = ilp.solve(options, [2, 2, 0], time_cap=1.0, dp=True)
+    assert sol.optimal and sol.nodes == 0  # DP decomposition path
+    assert sol.reward == pytest.approx(2.0)
+    assert set(sol.choices) == {0, 2}
+    # a request whose options straddle dims couples the instance -> DFS
+    coupled = [[ilp.Option(dim=0, usage=2, reward=1.0),
+                ilp.Option(dim=1, usage=2, reward=0.8)],
+               [ilp.Option(dim=0, usage=2, reward=0.9)]]
+    sol = ilp.solve(coupled, [2, 2, 0], time_cap=1.0, dp=True)
+    assert sol.optimal and sol.nodes > 0   # fell through to the DFS
+    assert sol.reward == pytest.approx(1.7)  # r0 -> dim1, r1 -> dim0
+
+
+# -- scale trace: deterministic and correctly aliased -------------------------
+
+def test_scale_trace_is_deterministic_and_aliased():
+    from repro.core.fleet import PipelineRegistry
+    reg = PipelineRegistry()
+    for pid in workloads.SCALE_PIPELINES:
+        if pid not in workloads.SCALE_ALIASES:
+            reg.register(pid)
+    for alias, base in workloads.SCALE_ALIASES.items():
+        reg.register(alias, profiler=reg.profiler(base))
+    profs = {pid: reg.profiler(pid) for pid in workloads.SCALE_PIPELINES}
+    dur = workloads.scale_duration(2000, num_chips=512)
+    t1 = workloads.scale_trace(dur, profs, seed=0, num_chips=512)
+    t2 = workloads.scale_trace(dur, profs, seed=0, num_chips=512)
+    assert len(t1) == len(t2) > 0
+    assert ([(r.pipeline, r.arrival, r.resolution, r.seconds) for r in t1]
+            == [(r.pipeline, r.arrival, r.resolution, r.seconds)
+                for r in t2])
+    pids = {r.pipeline for r in t1}
+    assert pids == set(workloads.SCALE_PIPELINES)
+    # arrivals are sorted — the fleet clock requires a time-ordered trace
+    arr = [r.arrival for r in t1]
+    assert arr == sorted(arr)
