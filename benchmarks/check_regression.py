@@ -56,6 +56,14 @@ SCALE_SMOKE_SPEEDUP_FLOOR = 0.6    # scale-aware: at 512 chips the fast paths
 SCALE_SLO_FLOOR_PCT = 95.0         # the scale trace is sized to be servable;
                                    # a throughput "win" that drops SLO is a
                                    # broken scheduler, not a fast one
+ELASTIC_RECOVERY_FLOOR = 1.15      # drain-aware vs drain-unaware recovery
+                                   # P95 on the committed preemption storm
+ELASTIC_SWEEP_FLOOR = 0.95         # off-canonical arrival seeds: drain must
+                                   # never make recovery materially worse
+ELASTIC_SMOKE_FLOOR = 0.9          # scale-aware: the 128-chip smoke storm
+                                   # is too small to back the pool up, so
+                                   # smoke only guards parity — the
+                                   # mechanism canaries below do the work
 SCALE_RPS_SANITY_FRACTION = 0.05   # cross-scale wall sanity fallback: only
                                    # consulted when the smoke run timed no
                                    # reference tree (the same-machine probe
@@ -285,6 +293,49 @@ def check_scale(base: Dict, cur: Dict, tol: float,
     return problems
 
 
+def check_elastic(base: Dict, cur: Dict, tol: float,
+                  wall_tol: float) -> List[str]:
+    """Elastic preemption storm (BENCH_elastic.json).  Same scale: the
+    drain-aware recovery-P95 win on the canonical storm must hold near
+    the committed baseline and above the 1.15x acceptance floor, and the
+    arrival-seed sweep must stay above the never-worse floor.  Different
+    scale (the CI smoke variant): the two-node smoke storm cannot back a
+    128-chip pool up, so the gate only asks for parity — the real smoke
+    signal is the mechanism canaries: the unaware arm must pay requeues
+    (the fault path ran), the aware arm must drain units and stage
+    pre-warm chips (the notice path ran), and both arms must end at the
+    scheduled chip count (joins landed)."""
+    problems: List[str] = []
+    key = "recovery_p95_improvement_drain_vs_unaware"
+    same_scale = base.get("duration_s") == cur.get("duration_s")
+    _ratio_check(problems, key, cur.get(key, 0.0),
+                 base.get(key, 0.0) if same_scale else 0.0, tol,
+                 floor=(ELASTIC_RECOVERY_FLOOR if same_scale
+                        else ELASTIC_SMOKE_FLOOR))
+    if same_scale:
+        _ratio_check(problems, "recovery_p95_sweep_floor",
+                     cur.get("recovery_p95_sweep_floor", 0.0),
+                     base.get("recovery_p95_sweep_floor", 0.0), tol,
+                     floor=ELASTIC_SWEEP_FLOOR)
+    modes = cur.get("modes", {})
+    unaware = modes.get("drain_unaware", {})
+    aware = modes.get("drain_aware", {})
+    if unaware.get("requeued_requests", 0) <= 0:
+        problems.append("unaware arm paid no requeues: the storm never "
+                        "caught in-flight work (broken fault path or a "
+                        "trace too cold to exercise it)")
+    if aware.get("drained_units", 0) <= 0:
+        problems.append("aware arm drained no units: the preemption "
+                        "notice path never ran")
+    if aware.get("elastic_prewarm_chips", 0) <= 0:
+        problems.append("aware arm staged no pre-warm chips: the join "
+                        "announce path never ran")
+    for arm, m in modes.items():
+        if m.get("nodes_lost", 0) <= 0 or m.get("nodes_joined", 0) <= 0:
+            problems.append(f"{arm}: schedule lost/joined no nodes")
+    return problems
+
+
 CHECKERS = {
     "event_driven_simulator_smoke": check_event_sim,
     "shared_cluster_mix_flip": check_shared_cluster,
@@ -293,6 +344,7 @@ CHECKERS = {
     "predictive_prewarm_diurnal": check_predictive,
     "cross_lane_batching_burst_storm": check_cross_batch,
     "scale_sim_core": check_scale,
+    "elastic_preemption_storm": check_elastic,
 }
 
 

@@ -55,6 +55,8 @@ def main() -> None:
         smoke_cross_batch_json = os.path.join("results",
                                               "BENCH_cross_batch.smoke.json")
         smoke_scale_json = os.path.join("results", "BENCH_scale.smoke.json")
+        smoke_elastic_json = os.path.join("results",
+                                          "BENCH_elastic.smoke.json")
         t0 = time.perf_counter()
         print("# --- e2e (smoke) ---", flush=True)
         from benchmarks import e2e
@@ -86,6 +88,11 @@ def main() -> None:
         emit(e2e.run_scale(full=False, bench_path=smoke_scale_json))
         print(f"# scale smoke took {time.perf_counter() - t0:.1f}s",
               flush=True)
+        t0 = time.perf_counter()
+        print("# --- e2e (elastic smoke) ---", flush=True)
+        emit(e2e.run_elastic_smoke(bench_path=smoke_elastic_json))
+        print(f"# elastic smoke took {time.perf_counter() - t0:.1f}s",
+              flush=True)
         # event-vs-tick parity is the smoke pass's one hard check: a clock
         # regression must fail CI, not just land in the BENCH json.
         # The row must be present — a missing row is a broken check, not a
@@ -105,7 +112,8 @@ def main() -> None:
              ("BENCH_unified_clock.json", smoke_unified_json),
              ("BENCH_predictive.json", smoke_predictive_json),
              ("BENCH_cross_batch.json", smoke_cross_batch_json),
-             ("BENCH_scale.json", smoke_scale_json)])
+             ("BENCH_scale.json", smoke_scale_json),
+             ("BENCH_elastic.json", smoke_elastic_json)])
         for p in problems:
             print(f"# REGRESSION: {p}", flush=True)
         if not problems:

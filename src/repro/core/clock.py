@@ -62,10 +62,16 @@ from repro.core.runtime import EngineStats, RuntimeEngine
 WakeSource = Callable[[float], Optional[float]]
 
 # unified stage-completion event, one format for every driver:
-#   (finish, seq, lane, stage, placement type, duration, batch members)
+#   (finish, seq, lane, stage, placement type, duration, batch members,
+#    units)
 # — the whole batch rides along so per-pipeline SLO windows can count every
-# finished request, not one per dispatch decision
-Completion = Tuple[float, int, str, str, str, float, Tuple[Request, ...]]
+# finished request, not one per dispatch decision.  ``units`` is the tuple
+# of (pipeline, unit) pairs the stage physically runs on — populated only
+# while a fault injector is live (Lane.track_units; core/elastic.py), so
+# the default path pushes () and pays nothing.  Heap order never reaches
+# it: (finish, seq) is already unique.
+Completion = Tuple[float, int, str, str, str, float, Tuple[Request, ...],
+                   Tuple[Tuple[str, int], ...]]
 
 # Merged completion events (fleet cross-lane batching): a fused stage run
 # spanning several lanes is pushed ONCE with this sentinel in the lane
@@ -141,10 +147,11 @@ class EventClock:
 
     def push_completion(self, finish: float, lane: str, stage: str,
                         ptype: str, duration: float,
-                        members: Tuple[Request, ...]) -> None:
+                        members: Tuple[Request, ...],
+                        units: Tuple[Tuple[str, int], ...] = ()) -> None:
         heapq.heappush(self.completions,
                        (finish, self._eseq, lane, stage, ptype, duration,
-                        members))
+                        members, units))
         self._eseq += 1
 
     def pop_due(self, tau: float) -> Sequence[Completion]:
@@ -160,6 +167,23 @@ class EventClock:
         while heap and heap[0][0] <= tau:
             out.append(pop(heap))
         return out
+
+    def remove_completions(self, pred: Callable[[Completion], bool]
+                           ) -> List[Completion]:
+        """Remove and return every in-flight event matching ``pred`` —
+        the fault injector's revocation primitive (core/elastic.py): work
+        dispatched onto units that are about to vanish is pulled back off
+        the heap so its requests can be requeued.  The survivors are
+        re-heapified; the removed events come back sorted by
+        (finish, seq) so callers iterate them deterministically (seq is
+        unique, so the sort never compares Request objects)."""
+        removed = [ev for ev in self.completions if pred(ev)]
+        if not removed:
+            return removed
+        self.completions = [ev for ev in self.completions if not pred(ev)]
+        heapq.heapify(self.completions)
+        removed.sort(key=lambda ev: (ev[0], ev[1]))
+        return removed
 
     # -- wake sources ----------------------------------------------------------
 
@@ -414,6 +438,16 @@ class Lane:
         self.borrowed_stage_runs: Dict[str, int] = {}
         self.base_units: int = 0
         self.track_borrowed: bool = False
+        # fault injection (core/elastic.py): set by the fleet driver when a
+        # FaultInjector is live, so completion events carry the (pipeline,
+        # unit) pairs they run on and revocation can match them.  Off (the
+        # default), record pushes () — zero overhead, bit-identical.
+        self.track_units: bool = False
+        # stage-aware drain (core/elastic.py): unit id -> land time while a
+        # preemption notice is live.  The dispatcher only hands a draining
+        # unit work that finishes before its land; empty (the default) is
+        # passed through as None and leaves dispatch byte-identical.
+        self.draining_units: Dict[int, float] = {}
 
     # -- queue ----------------------------------------------------------------
 
@@ -425,6 +459,18 @@ class Lane:
         for the adaptive heartbeat's aging-flip observation."""
         self.pending.add(req)
         self.new_arrivals.append(req)
+        if clock is not None:
+            clock.track_deadline(req.deadline, self.pipeline, req.rid)
+
+    def requeue(self, req: Request,
+                clock: Optional[EventClock] = None) -> None:
+        """Re-admit a request whose dispatched stage events were revoked
+        (fault-injection requeue, core/elastic.py): back into the pending
+        pool under its original arrival and deadline — SLO accounting
+        keeps charging the original clock — without re-recording it as an
+        arrival (``new_arrivals`` and the demand windows already counted
+        it once)."""
+        self.pending.add(req)
         if clock is not None:
             clock.track_deadline(req.deadline, self.pipeline, req.rid)
 
@@ -448,11 +494,13 @@ class Lane:
                 req.stage_done[s] = fin
             if s in skip:
                 continue
-            ptype = self.engine.plan.placements[
-                (dec.d_units if s == "D" else
-                 dec.e_units if s == "E" else dec.c_units)[0]]
+            su = (dec.d_units if s == "D" else
+                  dec.e_units if s == "E" else dec.c_units)
+            ptype = self.engine.plan.placements[su[0]]
             clock.push_completion(fin, self.pipeline, s, ptype, fin - start,
-                                  members)
+                                  members,
+                                  tuple((self.pipeline, g) for g in su)
+                                  if self.track_units else ())
         self.vr_histogram[dec.vr_type] = (self.vr_histogram.get(dec.vr_type, 0)
                                           + len(members))
         if self.track_borrowed:

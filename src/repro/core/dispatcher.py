@@ -334,13 +334,24 @@ class Dispatcher:
 
     def _aux_units(self, plan: PlacementPlan, stage: str, k: int,
                    idle_units: set, free_at: Dict[int, float], tau: float,
-                   borrowed: Optional[set] = None) -> Tuple[int, ...]:
+                   borrowed: Optional[set] = None,
+                   exclude: Optional[Dict[int, float]] = None
+                   ) -> Tuple[int, ...]:
         """Idle-or-earliest-free auxiliary units for E/C (Monitor-reported).
 
         With active loans (``borrowed``), native units win ties: a borrowed
         foreign unit is only taken when it is strictly the better host
-        (idle while every native auxiliary is busy, or earlier-free)."""
+        (idle while every native auxiliary is busy, or earlier-free).
+        ``exclude`` steers auxiliary work off draining units (doomed by a
+        preemption notice, core/elastic.py) — but only while a healthy
+        candidate exists: a lane whose sole auxiliary sits on a doomed
+        node keeps serving through it (short aux runs mostly beat the
+        land, and stragglers are requeued there anyway)."""
         cands = plan.units_of_type(stage)
+        if exclude:
+            healthy = [g for g in cands if g not in exclude]
+            if healthy:
+                cands = healthy
         if not cands:
             return ()
         # nsmallest == sorted(...)[:k] (stable, documented), at O(n) instead
@@ -361,7 +372,8 @@ class Dispatcher:
 
     def dispatch(self, pending: Sequence[Request], plan: PlacementPlan,
                  idle_units: set, free_at: Dict[int, float], tau: float,
-                 borrowed: Optional[Dict[str, Tuple[int, ...]]] = None
+                 borrowed: Optional[Dict[str, Tuple[int, ...]]] = None,
+                 draining: Optional[Dict[int, float]] = None
                  ) -> List[DispatchDecision]:
         """One dispatch round over the pending set.
 
@@ -369,6 +381,16 @@ class Dispatcher:
         (``ServingEngine.idle_units`` / ``free_at``): never mutated here —
         grants consume from a private ``avail`` copy — and only valid
         until the caller applies the returned decisions to the engine.
+
+        ``draining`` maps doomed unit ids to their loss time (a preemption
+        notice is live, core/elastic.py): a draining unit may still host a
+        primary launch that *finishes before its land time* — short work
+        keeps flowing through the doomed capacity for the rest of the
+        notice window — but never a launch that would straddle the loss
+        (that work would be requeued at the land and re-run from scratch).
+        Auxiliary stages avoid draining units entirely.  ``None`` (the
+        default, and always when elasticity is off) takes the pooled
+        fast path byte-for-byte unchanged.
         """
         # candidate set scales with idle capacity: a fixed cap would only
         # ever show the solver the oldest (often already-late) requests
@@ -379,8 +401,31 @@ class Dispatcher:
             return []
         # C-speed set intersection == counting units_of_type members in the
         # idle set (same active view); the genexpr walked every unit of
-        # every primary type per dispatch round
-        idle_by_type = {t: len(idle_units & plan.type_set(t))
+        # every primary type per dispatch round.  A draining unit counts
+        # toward its type's budget only while its remaining window can
+        # still host the *shortest* candidate launch of that type: promise
+        # more and the solver grants work that unit selection then has to
+        # refuse (burning the round's throughput — the metastable-collapse
+        # shape); promise less and doomed capacity sits idle for work that
+        # could legally land before the loss.
+        budget_idle = idle_units
+        if draining:
+            min_rt: Dict[str, float] = {}
+            seen_cls = set()
+            for req in reqs:
+                ck = (req.key(), req.cond_len)
+                if ck in seen_cls:
+                    continue
+                seen_cls.add(ck)
+                for rt, vr, _k in self._feas_configs(req):
+                    t = primary_of_vr(vr)
+                    if t not in min_rt or rt < min_rt[t]:
+                        min_rt[t] = rt
+            inf = float("inf")
+            budget_idle = idle_units - {
+                g for g, land in draining.items()
+                if land - tau < min_rt.get(plan.placements[g], inf)}
+        idle_by_type = {t: len(budget_idle & plan.type_set(t))
                         for t in PRIMARY_PLACEMENTS}
         # cross-pipeline unit lending (core/lending.py): borrowed foreign
         # units appear as E/C-only candidates.  An option whose auxiliary
@@ -502,7 +547,18 @@ class Dispatcher:
         for ri, opt in sorted(choices.items(), key=lambda kv: -kv[1].reward):  # detlint: ignore[DET004] choices is solver-walk-ordered; equal-reward order is BENCH-byte-frozen
             req = reqs[ri]
             prim = primary_of_vr(opt.dim)
-            units = _take(prim, opt.usage)
+            if draining:
+                # stage-aware drain: a doomed unit is eligible only when
+                # this launch lands before the unit does.  Slow legacy
+                # selection (no pools) — active only inside a notice
+                # window on an elastic fleet.
+                rt = self._req_runtime(req, opt.dim, opt.usage)
+                elig = {g for g in avail
+                        if g not in draining or tau + rt <= draining[g]}
+                units = self.select_units(plan, prim, opt.usage, elig,
+                                          self.prof.cross_node_sp)
+            else:
+                units = _take(prim, opt.usage)
             if units is None:
                 continue   # stay undispatched for next round (paper §6.2)
             avail -= set(units)
@@ -512,17 +568,20 @@ class Dispatcher:
             else:
                 ke = self.prof.optimal_degree(req, "E")
                 e_units = self._aux_units(plan, "E", ke, avail, free_at, tau,
-                                          borrowed_all or None)
+                                          borrowed_all or None,
+                                          exclude=draining)
             # Γ^C: subset of D's units when co-resident, else aux ⟨C⟩
             kc = self.prof.optimal_degree(req, "C")
             if "C" in prim:
                 c_units = units[: max(1, min(kc, len(units)))]
             else:
                 c_units = self._aux_units(plan, "C", kc, avail, free_at, tau,
-                                          borrowed_all or None)
+                                          borrowed_all or None,
+                                          exclude=draining)
             if not e_units or not c_units:
                 avail |= set(units)
-                _give_back(prim, units)
+                if not draining:
+                    _give_back(prim, units)
                 continue   # no auxiliary capacity -> undispatched this tick
             decisions.append(DispatchDecision(
                 request=req, vr_type=opt.dim, degree=opt.usage,
@@ -641,6 +700,15 @@ class CrossLaneBatcher:
         # warm seeding changes which of several equally-optimal member sets
         # the DFS lands on, so the off path stays bit-identical.
         self._warm_grants: Dict[tuple, Dict[tuple, list]] = {}
+        # host units of un-drained fused launches: (host pid, unit) ->
+        # latest fused finish.  The lending broker consults ``fused_busy``
+        # before force-returning a borrowed host unit (a fused launch in
+        # flight pins the loan); entries are pruned lazily.
+        self.inflight_hosts: Dict[Tuple[str, int], float] = {}
+        # set by the fleet driver when a FaultInjector is live: merged
+        # events then carry their host (pipeline, unit) pairs so fault
+        # revocation can match them (core/elastic.py)
+        self.track_units: bool = False
 
     # -- candidate assembly ---------------------------------------------------
 
@@ -814,7 +882,10 @@ class CrossLaneBatcher:
         self._charge_borrowed(host, host_units, "E")
         ptype = eng.plan.placements[host_units[0]]
         clock.push_completion(fin, MERGED_LANE, "E", ptype, T,
-                              self._members(fused))
+                              self._members(fused),
+                              tuple((host.pipeline, g) for g in host_units)
+                              if self.track_units else ())
+        self._note_inflight(host.pipeline, host_units, fin)
         for lane, dec in fused:
             dec.xl_efused = (start, fin, lane is host, host_units)
             dec.xl_skip = tuple(getattr(dec, "xl_skip", ())) + ("E",)
@@ -882,6 +953,31 @@ class CrossLaneBatcher:
             for r in members:
                 r.stage_done["C"] = fin
             ptype = eng.plan.placements[host_units[0]]
-            clock.push_completion(fin, MERGED_LANE, "C", ptype, T, members)
+            clock.push_completion(fin, MERGED_LANE, "C", ptype, T, members,
+                                  tuple((host.pipeline, g)
+                                        for g in host_units)
+                                  if self.track_units else ())
+            self._note_inflight(host.pipeline, host_units, fin)
             self.merges += 1
             self.merged_requests += n_total
+
+    # -- in-flight host tracking (lending force-return guard) ------------------
+
+    def _note_inflight(self, pid: str, host_units, fin: float) -> None:
+        for g in host_units:
+            key = (pid, g)
+            if fin > self.inflight_hosts.get(key, 0.0):
+                self.inflight_hosts[key] = fin
+
+    def fused_busy(self, pid: str, unit: int, tau: float) -> bool:
+        """Is a fused launch hosted on ``(pid, unit)`` still un-drained at
+        ``tau``?  The lending broker's force-return guard: a borrowed host
+        unit inside a live ``MERGED_LANE`` event must not change hands
+        until the merge drains (stale entries are pruned lazily)."""
+        fin = self.inflight_hosts.get((pid, unit))
+        if fin is None:
+            return False
+        if fin <= tau:
+            del self.inflight_hosts[(pid, unit)]
+            return False
+        return True

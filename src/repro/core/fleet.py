@@ -447,6 +447,25 @@ class FleetConfig:
                                       # BENCH and is ignored under lending /
                                       # cross-lane batching (both need every
                                       # lane visited every step).
+    # -- elastic, failure-prone capacity (core/elastic.py), default OFF: the
+    # FaultInjector is never constructed and every committed BENCH
+    # trajectory stays byte-identical --------------------------------------
+    elastic: bool = False             # play elastic_schedule through a
+                                      # FaultInjector wake source
+    elastic_schedule: Tuple = ()      # CapacityEvents (core/workloads.py
+                                      # builds the preemption-storm and
+                                      # region-evacuation schedules)
+    elastic_drain: bool = True        # act on preemption notices: doomed
+                                      # units drain stage-aware (only work
+                                      # landing before the loss), in-flight
+                                      # work that would outlive it requeues
+                                      # ahead of the loss (the drain-unaware
+                                      # bench arm turns this off)
+    elastic_prewarm: bool = True      # stage target weights onto announced
+                                      # join capacity during the lead window
+    degrade_detect_ratio: float = 1.6 # quarantine a unit whose per-run mean
+                                      # exceeds this x its pool mean
+    degrade_min_samples: int = 6      # per-unit samples before quarantine
 
     def lane_sim_cfg(self, num_chips: int) -> SimConfig:
         return SimConfig(num_chips=num_chips, tick=self.tick,
@@ -928,6 +947,15 @@ class FleetResult:
     # FleetConfig.cross_lane_batching)
     cross_lane_merges: int = 0         # fused multi-lane launches charged
     cross_lane_merged_requests: int = 0  # batch items across all fusions
+    # elastic capacity / fault injection (zeros unless FleetConfig.elastic)
+    capacity_events: int = 0           # join/preempt/degrade/recover landed
+    nodes_joined: int = 0
+    nodes_lost: int = 0
+    requeued_requests: int = 0         # in-flight work revoked + requeued
+    drained_units: int = 0             # units drained on preemption notice
+    quarantined_units: int = 0         # degraded units detected + removed
+    elastic_prewarm_chips: int = 0     # announced-join chips staged ahead
+    final_chips: int = 0               # surviving pool size at run end
 
     def summary(self) -> str:
         if self.oom:
@@ -998,6 +1026,15 @@ class FleetSimulator:
             self._xl = CrossLaneBatcher(
                 max_batch=self.cfg.cross_lane_max_batch,
                 incremental=self.cfg.incremental_ilp)
+        # elastic capacity / fault injection (core/elastic.py): like the
+        # broker and the batcher, the injector only exists when the knob is
+        # on — the off path never constructs it and stays byte-identical
+        self.injector = None
+        if self.cfg.elastic:
+            from repro.core.elastic import FaultInjector
+            self.injector = FaultInjector(self.cfg)
+            if self._xl is not None:
+                self._xl.track_units = True
         # O(changed-lanes) stepping (tentpole c): a wake-up visits only
         # lanes with pending work or a dirty event.  Disabled under lending
         # and cross-lane batching — the broker samples every lane's
@@ -1070,6 +1107,10 @@ class FleetSimulator:
             # predictive pre-warm events: rate-history bin boundaries (fits
             # and staging only move there) and the armed shift time
             self.clock.add_source(self.fleet_sched.forecast_wake)
+        if self.injector is not None:
+            # capacity events: join/preempt notices and landings fire at
+            # exact schedule times in both clock modes
+            self.clock.add_source(self.injector.next_wake)
         if self.cfg.scheduler_wake_hooks:
             self.clock.add_source(
                 lambda tau: self.fleet_sched.next_wake(self, tau))
@@ -1101,6 +1142,7 @@ class FleetSimulator:
                 adjust_on_dispatch=self.cfg.adjust_on_dispatch)
             lane.base_units = len(lane.engine.units)
             lane.track_borrowed = self.broker is not None
+            lane.track_units = self.injector is not None
             lane.placement_log.append(
                 (0.0, self.plan.subplans[pid].type_histogram()))
             self.lanes[pid] = lane
@@ -1176,7 +1218,12 @@ class FleetSimulator:
 
     def _drain(self, tau: float) -> None:
         dirty = self._dirty if self._lane_gating else None
-        for t, _, pid, s, ptype, dur, members in self.clock.pop_due(tau):
+        inj = self.injector
+        for t, _, pid, s, ptype, dur, members, units in self.clock.pop_due(tau):
+            if inj is not None and units:
+                # degrade detection feed (per-unit vs pool mean); fused
+                # MERGED_LANE durations are skipped inside observe
+                inj.observe(self, pid, s, ptype, dur, members, units, t)
             if dirty is not None:
                 if pid == MERGED_LANE:
                     dirty.update(r.pipeline for r in members)
@@ -1202,6 +1249,10 @@ class FleetSimulator:
 
     def _step(self, tau: float) -> None:
         self._tau_last = tau
+        if self.injector is not None:
+            # capacity events fire before any scheduling this wake-up: a
+            # landed join/loss re-partitions here, a notice drains here
+            self.injector.step(self, tau)
         self.fleet_sched.maybe_prewarm(self, tau)
         budgets = self.fleet_sched.maybe_repartition(self, tau)
         if budgets is not None:
@@ -1255,6 +1306,23 @@ class FleetSimulator:
         fresh plan must carry them before the engine sees it), then swap
         the cluster plan's sub-plan."""
         new_plan.pipeline = lane.pipeline
+        if self.prewarmed:
+            # staged pre-warm marks describe the *old* unit layout: any
+            # unit whose placement this switch changes must shed them, or
+            # a later re-partition would count a stale mark as a hit and
+            # skip a reload the chips genuinely owe
+            old = self.plan.subplans[lane.pipeline]
+            lo, hi = self.plan.chip_ranges[lane.pipeline]
+            if (new_plan.unit_size != old.unit_size
+                    or len(new_plan.placements) != len(old.placements)):
+                for c in range(lo, hi):
+                    self.prewarmed.pop(c, None)
+            else:
+                k = old.unit_size
+                for g, p in enumerate(old.placements):
+                    if new_plan.placements[g] != p:
+                        for c in range(lo + g * k, lo + (g + 1) * k):
+                            self.prewarmed.pop(c, None)
         if self.broker is not None:
             self.broker.reattach(lane, new_plan)
         lane.engine.apply_placement(new_plan, tau)
@@ -1360,14 +1428,20 @@ class FleetSimulator:
                     self.lanes[opid].engine.units[ouid].free_at > tau
                     for opid, ouid in per_owner):
                 continue       # owner mid-work: defer to a later bin
+            if self.broker is not None:
+                for opid, ouid in sorted(per_owner):
+                    if self.broker.force_return_unit(self, opid, ouid, tau):
+                        # a lent-out unit scheduled for pre-warm returns
+                        # its loan before anything is staged on its chips —
+                        # no loan may survive the coming cutover
+                        self.prewarm_loan_returns += 1
+                if any(self.broker.unit_on_loan(opid, ouid)
+                       for opid, ouid in sorted(per_owner)):
+                    # a force-return deferred past an un-drained fused
+                    # launch (core/lending.py) leaves the loan open: defer
+                    # this target unit too — the next bin's retry stages it
+                    continue
             for opid, ouid in sorted(per_owner):
-                if self.broker is not None and \
-                        self.broker.force_return_unit(self, opid, ouid,
-                                                      tau):
-                    # a lent-out unit scheduled for pre-warm returns its
-                    # loan before anything is staged on its chips — no
-                    # loan may survive the coming cutover
-                    self.prewarm_loan_returns += 1
                 # sorted: float sum + str-set iteration (see
                 # _repartition's reload note)
                 load = sum(prof.stage_load_time(s, via_host=True)
@@ -1380,18 +1454,31 @@ class FleetSimulator:
             staged += 1
         return staged
 
-    def _repartition(self, budgets: Dict[str, int], tau: float) -> None:
+    def _repartition(self, budgets: Dict[str, int], tau: float,
+                     chip_map: Optional[Dict[int, int]] = None) -> None:
         """Move chips between lanes.  Per-chip in-flight work and stage
         residency carry over; units whose pipeline or placement type changed
         hands pay the weight-reload latency before becoming dispatchable —
         unless the predictive scheduler pre-warmed their chips, in which
-        case the staged stages are already loaded and charge nothing."""
+        case the staged stages are already loaded and charge nothing.
+
+        ``chip_map`` (capacity re-partitions after a node loss,
+        core/elastic.py) translates surviving old chip indices into the
+        compacted space; state on unmapped (lost) chips drops out here."""
         if self.broker is not None:
             # loans cannot outlive the partition they were struck under:
             # force-return them first (in-flight borrowed work and the
             # lender's reload land on the lender's chips via free_at below)
             self.broker.release_all(self, tau)
         chip_free, chip_owner = self._chip_state()
+        if chip_map is not None:
+            chip_free = {chip_map[c]: v for c, v in chip_free.items()
+                         if c in chip_map}
+            chip_owner = {chip_map[c]: v for c, v in chip_owner.items()
+                          if c in chip_map}
+            self.prewarmed = {chip_map[c]: v
+                              for c, v in self.prewarmed.items()
+                              if c in chip_map}
         recent, measured = self._plan_inputs(tau)
         new_plan = self.orch.generate(recent, budgets, measured)
         if new_plan is None:   # no feasible re-partition: keep the old plan
@@ -1401,10 +1488,12 @@ class FleetSimulator:
         for pid, lane in self.lanes.items():  # detlint: ignore[DET001] lanes dict is registry-ordered; reload-sum order is BENCH-byte-frozen
             sub = new_plan.subplans[pid]
             prof = lane.prof
-            if (self._lane_gating
+            if (self._lane_gating and chip_map is None
                     and new_plan.chip_ranges[pid] == self.plan.chip_ranges[pid]
                     and sub.unit_size == self.plan.subplans[pid].unit_size
                     and sub.placements == self.plan.subplans[pid].placements):
+                # (chip_map guard: after a node loss, equal numeric ranges
+                # map to *different physical chips* — the lane must rebuild)
                 # O(changed-lanes) re-partition: this lane's chip range and
                 # sub-plan are identical — no chip changed hands, no reload
                 # is owed.  Keep the live engine (its free_at state IS the
@@ -1471,6 +1560,50 @@ class FleetSimulator:
         if self._lane_gating:
             # every lane's engine/plan may have moved: all must re-step
             self._dirty.update(self.lanes)
+        if self.injector is not None:
+            # fresh engines and sub-plans: re-derive the injector's
+            # overlays (slowdowns, quarantines, a pending drain)
+            self.injector.after_repartition(self, tau)
+
+    # -- elastic capacity (core/elastic.py) -----------------------------------
+
+    def mark_lane_dirty(self, pid: str) -> None:
+        """A capacity or lending event changed this lane's dispatchable
+        state with no lane completion to show for it: under
+        O(changed-lanes) stepping the lane must still re-step this
+        wake-up (satellite fix — ``step_changed_lanes_only`` must treat
+        borrow/return and capacity events as "changed")."""
+        if self._lane_gating:
+            self._dirty.add(pid)
+
+    def _evict_prewarm_unit(self, pid: str, g: int) -> None:
+        """Drop staged pre-warm marks on one unit's chips: the unit was
+        mutated under the marks (lent out, retyped, decommissioned), so
+        they must not count as hits and avert a reload the chips owe."""
+        if not self.prewarmed:
+            return
+        lo, hi = self.plan.unit_chips(pid, g)
+        for c in range(lo, hi):
+            self.prewarmed.pop(c, None)
+
+    def _capacity_repartition(self, tau: float,
+                              chip_map: Optional[Dict[int, int]] = None
+                              ) -> None:
+        """Re-partition to the *current* pool size — a join landed or a
+        preemption compacted the chip space (core/elastic.py).  Capacity
+        re-partitions bypass the mix-shift trigger and its cooldown (the
+        pool changed, not the mix) and size lanes by live windowed demand
+        plus queued backlog.  An infeasible one is fatal: the fleet
+        cannot keep serving a plan sized for chips that no longer exist."""
+        demand = self.fleet_monitor.demand(tau)
+        backlog = self.backlog_weights()
+        weights = {p: demand.get(p, 0.0) + backlog.get(p, 0.0)
+                   for p in self.reg.pipelines}
+        budgets = self.orch.budgets(
+            self.fleet_sched._objective_weights(self, tau, weights))
+        self._repartition(budgets, tau, chip_map=chip_map)
+        assert self.plan.total_chips == self.orch.num_chips, \
+            "no feasible partition for the surviving chip pool"
 
     # ---------------------------------------------------------------- results
 
@@ -1545,6 +1678,20 @@ class FleetSimulator:
                                self.broker.borrowed_unit_seconds, 3),
                            lend_swap_cost_s=round(self.broker.swap_cost_s, 3),
                            borrowed_stage_runs=runs)
+        # a fixed pool "survives" at its starting size, so the elastic
+        # off path reports the same field the injector would
+        elastic_kw: Dict = dict(final_chips=self.cfg.num_chips)
+        if self.injector is not None:
+            inj = self.injector
+            elastic_kw = dict(
+                capacity_events=inj.capacity_events,
+                nodes_joined=inj.nodes_joined,
+                nodes_lost=inj.nodes_lost,
+                requeued_requests=inj.requeued_requests,
+                drained_units=inj.drained_units,
+                quarantined_units=inj.quarantined_units,
+                elastic_prewarm_chips=inj.elastic_prewarm_chips,
+                final_chips=inj.live_chips)
         return FleetResult(
             scheduler=self.fleet_sched.name, num_chips=self.cfg.num_chips,
             oom=False, n_requests=len(self.trace),
@@ -1567,7 +1714,7 @@ class FleetSimulator:
             cross_lane_merges=self._xl.merges if self._xl else 0,
             cross_lane_merged_requests=(self._xl.merged_requests
                                         if self._xl else 0),
-            **lend_kw)
+            **lend_kw, **elastic_kw)
 
 
 # ---------------------------------------------------------------- convenience

@@ -71,6 +71,10 @@ class Loan:
     ptype: str                   # "E" | "C"
     start: float
     borrow_cost: float
+    # a force-return arrived while the borrowed slot hosted an un-drained
+    # cross-lane fused launch (MERGED_LANE event in flight): the close is
+    # deferred to the merge drain — ``step`` retries it on every wake-up
+    force_return_pending: bool = False
 
 
 class LendingBroker:
@@ -99,10 +103,14 @@ class LendingBroker:
 
     @staticmethod
     def _idle_active_units(lane: "Lane", tau: float) -> List[int]:
-        """Idle, still-active, non-borrowed units of one lane."""
+        """Idle, still-active, non-borrowed units of one lane.  Units
+        decommissioned by the fault injector (draining ahead of a
+        preemption, or quarantined as degraded) are never lendable stock —
+        their chips are about to vanish or are suspect."""
         plan = lane.engine.plan
         return [g for g in lane.engine.idle_units(tau)
-                if g < lane.base_units and plan.is_active(g)]
+                if g < lane.base_units and plan.is_active(g)
+                and not plan.is_decommissioned(g)]
 
     def _loans_of(self, pid: str, role: str = "borrower") -> List[Loan]:
         key = "borrower" if role == "borrower" else "lender"
@@ -175,6 +183,12 @@ class LendingBroker:
         self.swap_cost_s += cost
         self.reloads += 1
         self._sync_borrowed(fleet, borrower)
+        # the lender unit's chips now host borrower weights: any staged
+        # pre-warm marks there are physically overwritten (satellite fix —
+        # a stale mark would under-charge the next re-partition's reload)
+        fleet._evict_prewarm_unit(lu.pipeline, lu.unit)
+        fleet.mark_lane_dirty(lu.pipeline)
+        fleet.mark_lane_dirty(borrower)
 
     # ---------------------------------------------------------------- returns
 
@@ -202,6 +216,8 @@ class LendingBroker:
         self.reloads += 1
         self.active.remove(loan)
         self._sync_borrowed(fleet, loan.borrower)
+        fleet.mark_lane_dirty(loan.lender)
+        fleet.mark_lane_dirty(loan.borrower)
 
     def release_all(self, fleet: "FleetSimulator", tau: float) -> None:
         """Force-return every loan (called right before a re-partition —
@@ -211,17 +227,41 @@ class LendingBroker:
         for loan in list(self.active):
             self._close(fleet, loan, tau)
 
+    @staticmethod
+    def _fused_inflight(fleet: "FleetSimulator", loan: Loan,
+                        tau: float) -> bool:
+        """Does the borrowed slot host an un-drained cross-lane fused
+        launch?  Closing the loan mid-flight would hand the lender chips
+        that are still executing another lane's merged batch."""
+        xl = fleet._xl
+        return xl is not None and xl.fused_busy(loan.borrower, loan.slot,
+                                                tau)
+
+    def unit_on_loan(self, lender: str, uid: int) -> bool:
+        return any(ln.lender == lender and ln.lender_uid == uid
+                   for ln in self.active)
+
     def force_return_unit(self, fleet: "FleetSimulator", lender: str,
-                          uid: int, tau: float) -> bool:
+                          uid: int, tau: float, hard: bool = False) -> bool:
         """Force-close the loan (if any) riding on one lender unit.  The
         predictive pre-warm path (core/fleet.py) must reclaim a lent-out
         unit before staging the next partition's weights on its chips — a
         loan must never survive a cutover, and staging under a live loan
-        would double-book the chips.  Counted like re-partition forced
-        returns (min-hold does not apply; the usual return reload is
-        charged by ``_close``).  Returns True when a loan was closed."""
+        would double-book the chips; the fault injector reclaims doomed
+        lender units the same way when a preemption notice lands.  Counted
+        like re-partition forced returns (min-hold does not apply; the
+        usual return reload is charged by ``_close``).
+
+        Guard: when the borrowed slot hosts an un-drained ``MERGED_LANE``
+        fused launch, the close is *deferred* (``force_return_pending``) —
+        ``step`` closes it at the merge drain.  ``hard=True`` skips the
+        guard (re-partition semantics: the engines are about to be
+        rebuilt anyway).  Returns True when a loan was closed now."""
         for loan in list(self.active):
             if loan.lender == lender and loan.lender_uid == uid:
+                if not hard and self._fused_inflight(fleet, loan, tau):
+                    loan.force_return_pending = True
+                    return False
                 self.forced_returns += 1
                 self._close(fleet, loan, tau)
                 return True
@@ -314,6 +354,14 @@ class LendingBroker:
 
     def step(self, fleet: "FleetSimulator", tau: float) -> None:
         cfg = self.cfg
+        # 1. deferred force-returns: close as soon as the fused launch that
+        #    pinned the borrowed slot has drained (its completion event is
+        #    itself a wake-up, so the close is never missed)
+        for loan in list(self.active):
+            if loan.force_return_pending \
+                    and not self._fused_inflight(fleet, loan, tau):
+                self.forced_returns += 1
+                self._close(fleet, loan, tau)
         pressure = fleet.fleet_monitor.backlog_pressure(tau)
         budgets = self._lend_budgets(fleet, tau)
         lent_count: Dict[str, int] = {}

@@ -81,16 +81,18 @@ class PlacementPlan:
         idx = self.__dict__.get("_idx")
         if idx is None:
             inactive = self.__dict__.get("_inactive") or ()
+            decomm = self.__dict__.get("_decommissioned") or ()
             by_type: Dict[str, List[int]] = {}
             with_stage: Dict[str, List[int]] = {}
             for g, p in enumerate(self.placements):
-                if g in inactive:
+                if g in inactive or g in decomm:
                     continue
                 by_type.setdefault(p, []).append(g)
                 for s in p:
                     with_stage.setdefault(s, []).append(g)
             primary = frozenset(g for g, p in enumerate(self.placements)
-                                if p in PRIMARY_PLACEMENTS and g not in inactive)
+                                if p in PRIMARY_PLACEMENTS
+                                and g not in inactive and g not in decomm)
             tsets = {p: frozenset(gs) for p, gs in by_type.items()}
             idx = self.__dict__["_idx"] = (by_type, with_stage, primary,
                                            tsets)
@@ -136,6 +138,31 @@ class PlacementPlan:
     def is_extended(self, unit: int) -> bool:
         """True for loan-slot overlay units (not part of the own layout)."""
         return unit in (self.__dict__.get("_extended") or ())
+
+    # -- elastic capacity overlay (core/elastic.py) ---------------------------
+
+    def decommission(self, unit: int) -> None:
+        """Remove one unit from the dispatch indices without touching the
+        plan's own layout: a doomed unit draining ahead of a preemption
+        notice, or a quarantined slow-failing unit.  Unlike ``set_active``
+        — the lending overlay, which loan close/revive freely toggles — a
+        decommissioned unit stays out until ``commission``:
+        ``set_active(unit, True)`` cannot resurrect it.  Counted by
+        ``count_of_type``/``type_histogram`` like an inactive unit (the
+        layout still owns the chips until a re-partition reassigns them),
+        so ``maybe_replace``'s no-op comparison does not churn."""
+        self.__dict__.setdefault("_decommissioned", set()).add(unit)
+        self.__dict__.pop("_idx", None)
+
+    def commission(self, unit: int) -> None:
+        """Undo ``decommission`` (a quarantined unit recovering)."""
+        decomm = self.__dict__.get("_decommissioned")
+        if decomm is not None:
+            decomm.discard(unit)
+        self.__dict__.pop("_idx", None)
+
+    def is_decommissioned(self, unit: int) -> bool:
+        return unit in (self.__dict__.get("_decommissioned") or ())
 
     def units_with(self, stage: str) -> List[int]:
         return self._index()[1].get(stage, [])

@@ -43,6 +43,7 @@ class Unit:
     resident: Set[str]           # stages actually loaded
     free_at: float = 0.0
     hb_staged: float = 0.0       # staged handoff bytes (drained at launch)
+    slow: float = 1.0            # degraded-hardware slowdown (core/elastic.py)
 
 
 @dataclasses.dataclass
@@ -88,6 +89,10 @@ class RuntimeEngine:
         # on every dispatch round
         self._free_map: Dict[int, float] = {u.uid: u.free_at
                                             for u in self.units}
+        # degraded-hardware modelling (core/elastic.py): True only while
+        # some unit carries a slowdown factor — the default path never
+        # takes the multiply branches in ``execute``
+        self._degraded = False
 
     # ------------------------------------------------------------------ state
 
@@ -141,6 +146,24 @@ class RuntimeEngine:
         self.stats.prewarm_loads += 1
         self.stats.prewarm_load_time += load_time
         return until
+
+    # -- degraded hardware (core/elastic.py) -----------------------------------
+
+    def set_unit_slowdown(self, uid: int, factor: float) -> None:
+        """Degraded-unit modelling: stage runs touching this unit take
+        ``factor``x their profiled time until reset to 1.0.  Never called
+        on the default path — ``_degraded`` stays False and ``execute``
+        never reads the factors, keeping the off path bit-identical."""
+        self.units[uid].slow = factor
+        self._degraded = any(u.slow != 1.0 for u in self.units)
+
+    def _slow_factor(self, unit_ids: Sequence[int]) -> float:
+        f = 1.0
+        for g in unit_ids:
+            s = self.units[g].slow
+            if s > f:
+                f = s
+        return f
 
     # -- cross-pipeline unit lending (core/lending.py) -------------------------
 
@@ -315,6 +338,8 @@ class RuntimeEngine:
         xl_e = getattr(dec, "xl_efused", None)
         xl_cdefer = getattr(dec, "xl_cdefer", False)
         t_d = prof.batched_stage_time(req, "D", k_chips, bs)
+        if self._degraded:
+            t_d *= self._slow_factor(dec.d_units)
 
         out: Dict[str, Tuple[float, float]] = {}
         if xl_e is not None:
@@ -336,6 +361,8 @@ class RuntimeEngine:
         else:
             t_e = prof.batched_stage_time(
                 req, "E", max(1, len(dec.e_units)) * prof.k_min, bs)
+            if self._degraded and dec.e_units:
+                t_e *= self._slow_factor(dec.e_units)
             merged_ed = tuple(dec.e_units) == tuple(dec.d_units)
 
             # --- E -----------------------------------------------------------
@@ -388,6 +415,8 @@ class RuntimeEngine:
 
         t_c = prof.batched_stage_time(req, "C",
                                       max(1, len(dec.c_units)) * prof.k_min, bs)
+        if self._degraded and dec.c_units:
+            t_c *= self._slow_factor(dec.c_units)
         merged_dc = (dec.c_units == dec.d_units
                      or set(dec.c_units) <= set(dec.d_units))
         if merged_dc:

@@ -141,7 +141,9 @@ class TridentScheduler(Scheduler):
         reuses0 = self.disp.solve_reuses
         out = self.disp.dispatch(pending, sim.engine.plan, idle,
                                  sim.engine.free_at(), tau,
-                                 borrowed=getattr(sim, "borrowed_units", None))
+                                 borrowed=getattr(sim, "borrowed_units", None),
+                                 draining=getattr(sim, "draining_units",
+                                                  None) or None)
         if self.disp.solve_reuses != reuses0:
             # credit persisted-model solve skips to the engine serving this
             # lane (banked across fleet re-partitions like every EngineStats

@@ -266,3 +266,57 @@ def test_burst_storm_helps_the_overloaded_lane(storm_runs):
     worst_off = max(m["p95_s"] for m in off.per_pipeline.values())
     worst_on = max(m["p95_s"] for m in on.per_pipeline.values())
     assert worst_on < worst_off
+
+
+# -- force-return vs fused launch (lending interaction) ------------------------
+
+def test_force_return_deferred_past_fused_launch(monkeypatch):
+    """A force-return arriving while the borrowed slot hosts an un-drained
+    MERGED_LANE launch must defer (``force_return_pending``), not yank the
+    unit mid-merge; ``step`` closes it at the drain.  ``hard=True`` (the
+    re-partition path) skips the guard."""
+    from repro.core.lending import Loan, LendingBroker
+
+    cfg = SimpleNamespace(lend_min_hold=45.0, lend_min_pressure=0.5,
+                          lend_low_pressure=0.05)
+    broker = LendingBroker(cfg, registry=None)
+    loan = Loan(lender="sd3", lender_uid=5, borrower="flux", slot=9,
+                ptype="E", start=0.0, borrow_cost=0.4)
+    broker.active.append(loan)
+    closed = []
+    monkeypatch.setattr(
+        broker, "_close",
+        lambda fleet, ln, tau: (closed.append(ln), broker.active.remove(ln)))
+    monkeypatch.setattr(broker, "_lend_budgets", lambda fleet, tau: {})
+    busy = {"on": True}
+    fleet = SimpleNamespace(
+        _xl=SimpleNamespace(
+            fused_busy=lambda pid, unit, tau:
+                busy["on"] and (pid, unit) == ("flux", 9)),
+        fleet_monitor=SimpleNamespace(backlog_pressure=lambda tau: {}),
+        lanes={"flux": SimpleNamespace(engine=SimpleNamespace(
+            units={9: SimpleNamespace(free_at=float("inf"))}))})
+
+    # fused launch in flight: the close is deferred, nothing changes hands
+    assert broker.force_return_unit(fleet, "sd3", 5, tau=10.0) is False
+    assert loan.force_return_pending
+    assert loan in broker.active and not closed
+    assert broker.forced_returns == 0
+
+    # still busy at the next wake-up: step keeps deferring
+    broker.step(fleet, tau=20.0)
+    assert loan in broker.active and not closed
+
+    # merge drained: the very next step closes the pending loan
+    busy["on"] = False
+    broker.step(fleet, tau=30.0)
+    assert closed == [loan] and not broker.active
+    assert broker.forced_returns == 1
+
+    # hard=True (re-partition: engines are rebuilt anyway) skips the guard
+    busy["on"] = True
+    loan2 = Loan(lender="sd3", lender_uid=5, borrower="flux", slot=9,
+                 ptype="E", start=0.0, borrow_cost=0.4)
+    broker.active.append(loan2)
+    assert broker.force_return_unit(fleet, "sd3", 5, tau=40.0, hard=True)
+    assert closed == [loan, loan2] and broker.forced_returns == 2

@@ -1,0 +1,175 @@
+"""Elastic capacity + fault injection (repro.core.elastic).
+
+Covers the FaultInjector wake source end to end on small fleets: the
+off-by-default contract (elastic off is bit-identical to a plain run),
+join/preempt/degrade mechanics, the stage-aware drain's advantage over
+a drain-unaware arm, Monitor-side quarantine of a slow-failing node,
+and determinism of both the schedule generators and full trajectories.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.core import workloads
+from repro.core.elastic import CapacityEvent
+from repro.core.fleet import FleetConfig, run_fleet
+
+
+def _run(duration, rates, sched, *, drain=True, prewarm=True, seed=0,
+         num_chips=64, pipelines=("sd3",), **cfg_kw):
+    cfg = FleetConfig(num_chips=num_chips, t_win=500.0, cooldown=500.0,
+                      elastic=True, elastic_schedule=sched,
+                      elastic_drain=drain, elastic_prewarm=prewarm, **cfg_kw)
+    return run_fleet(list(pipelines), mode="adaptive", duration=duration,
+                     cfg=cfg, seed=seed, rates=dict(rates))
+
+
+# ---------------------------------------------------------------- events
+
+
+def test_capacity_event_validation():
+    with pytest.raises(AssertionError):
+        CapacityEvent(t=1.0, kind="explode")
+    with pytest.raises(AssertionError):
+        CapacityEvent(t=1.0, kind="join", n_nodes=2, lead=-1.0)
+    ev = CapacityEvent(t=5.0, kind="preempt", nodes=(3,), lead=2.0)
+    assert ev.nodes == (3,) and ev.factor == 1.0
+
+
+def _walk_live(events, live):
+    """Replay a schedule checking node ids stay valid; returns final size."""
+    last_t = -1.0
+    for ev in events:
+        assert ev.t >= last_t
+        last_t = ev.t
+        if ev.kind == "join":
+            assert ev.n_nodes > 0
+            live += ev.n_nodes
+        else:
+            assert ev.nodes, ev
+            assert all(0 <= n < live for n in ev.nodes), (ev, live)
+            if ev.kind == "preempt":
+                live -= len(ev.nodes)
+        assert live >= 1
+    return live
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_storm_schedule_deterministic_and_valid(seed):
+    mk = lambda: workloads.preemption_storm_schedule(  # noqa: E731
+        900.0, 256, seed=seed)
+    a, b = mk(), mk()
+    assert a == b                      # deterministic per seed
+    _walk_live(a, 256 // 8)
+    # the degraded node recovers before the first preemption notice so
+    # the slow node never confounds the measured recovery windows
+    first_notice = min(e.t - e.lead for e in a if e.kind == "preempt")
+    recover_t = max(e.t for e in a if e.kind == "recover")
+    assert recover_t < first_notice
+    # every storm is eventually backfilled by a join
+    assert sum(e.n_nodes for e in a if e.kind == "join") == \
+        sum(len(e.nodes) for e in a if e.kind == "preempt")
+
+
+def test_evacuation_schedule_deterministic_and_valid():
+    a = workloads.region_evacuation_schedule(600.0, 128, seed=3)
+    assert a == workloads.region_evacuation_schedule(600.0, 128, seed=3)
+    final = _walk_live(a, 128 // 8)
+    assert final == 128 // 8           # quarter in, old quarter out
+
+
+def test_storm_div_scales_storm_size():
+    big = workloads.preemption_storm_schedule(900.0, 256, seed=0,
+                                              storm_div=4)
+    small = workloads.preemption_storm_schedule(900.0, 256, seed=0)
+    k = lambda ev: len(ev.nodes)       # noqa: E731
+    assert max(map(k, (e for e in big if e.kind == "preempt"))) > \
+        max(map(k, (e for e in small if e.kind == "preempt")))
+
+
+# ------------------------------------------------------------ off path
+
+
+def test_elastic_off_is_bit_identical():
+    """elastic=False and elastic=True+empty schedule must not differ."""
+    kw = dict(duration=90.0, seed=0, rates={"sd3": 5.0})
+    plain = run_fleet(["sd3"], mode="adaptive",
+                      cfg=FleetConfig(num_chips=64), **kw)
+    armed = run_fleet(["sd3"], mode="adaptive",
+                      cfg=FleetConfig(num_chips=64, elastic=True,
+                                      elastic_schedule=()), **kw)
+    assert dataclasses.asdict(plain) == dataclasses.asdict(armed)
+    assert plain.final_chips == 64
+
+
+# ------------------------------------------------------------ mechanics
+
+
+def test_join_grows_pool_and_prewarms():
+    sched = (CapacityEvent(t=60.0, kind="join", n_nodes=2, lead=20.0),)
+    r = _run(150.0, {"sd3": 6.0}, sched)
+    assert r.nodes_joined == 2
+    assert r.final_chips == 64 + 2 * 8
+    # the announce window staged the post-join partition onto the
+    # incoming chips: every new chip pre-warmed
+    assert r.elastic_prewarm_chips == 16
+    assert len(r.repartitions) >= 1
+
+
+def test_preempt_drain_aware_requeues_nothing():
+    """lead > max stage runtime: the stage-aware drain lands everything
+    in flight before the loss, while the drain-unaware arm keeps
+    launching onto doomed units and pays revocations at the land."""
+    sched = (CapacityEvent(t=120.0, kind="preempt", nodes=(6, 7),
+                           lead=30.0),)
+    aware = _run(200.0, {"sd3": 14.0}, sched)
+    unaware = _run(200.0, {"sd3": 14.0}, sched, drain=False, prewarm=False)
+    for r in (aware, unaware):
+        assert r.nodes_lost == 2
+        assert r.final_chips == 64 - 2 * 8
+        assert r.n_finished == r.n_requests      # nothing stranded
+    assert aware.drained_units > 0
+    assert aware.requeued_requests == 0
+    assert unaware.requeued_requests > 0
+    assert unaware.drained_units == 0
+
+
+def test_degrade_detector_quarantines_slow_node():
+    """A 3x-slow node on a quiet single-lane fleet clears the evidence
+    bar and all of its units end up decommissioned."""
+    sched = (CapacityEvent(t=20.0, kind="degrade", nodes=(0,), factor=3.0),)
+    r = _run(240.0, {"sd3": 6.0}, sched)
+    assert r.quarantined_units == 3
+    assert r.slo_attainment > 0.9      # routing around it keeps SLOs
+
+
+def test_elastic_trajectory_deterministic():
+    sched = workloads.preemption_storm_schedule(300.0, 64, seed=0,
+                                                n_storms=1)
+    mk = lambda: _run(300.0, {"sd3": 8.0}, sched, seed=2)  # noqa: E731
+    a, b = mk(), mk()
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    assert a.nodes_lost > 0 and a.nodes_joined > 0
+
+
+def test_evict_prewarm_unit_drops_only_that_units_chips():
+    """Satellite fix: a unit mutated under staged pre-warm marks (lent
+    out, drained, decommissioned) must lose exactly its chips' marks —
+    a stale mark would count as a hit and avert a reload the chips owe."""
+    from types import SimpleNamespace
+
+    from repro.core.fleet import FleetSimulator
+
+    marks = {c: ("sd3", frozenset({"unet"}), 1.0) for c in range(16)}
+    stub = SimpleNamespace(
+        prewarmed=dict(marks),
+        plan=SimpleNamespace(unit_chips=lambda pid, g: (8, 12)))
+    FleetSimulator._evict_prewarm_unit(stub, "sd3", 1)
+    assert sorted(stub.prewarmed) == [c for c in range(16)
+                                      if not 8 <= c < 12]
+    # empty mark table: early-out leaves it empty (no KeyErrors)
+    stub.prewarmed = {}
+    FleetSimulator._evict_prewarm_unit(stub, "sd3", 1)
+    assert stub.prewarmed == {}

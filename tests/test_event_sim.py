@@ -77,8 +77,10 @@ def test_pending_set_is_id_indexed():
 
 def test_completion_events_use_the_unified_kernel_format():
     """Regression: every driver pushes the kernel's one completion format —
-    (finish, seq, lane, stage, ptype, duration, batch members) — and the
-    simulator's ``_events`` view is the kernel heap itself."""
+    (finish, seq, lane, stage, ptype, duration, batch members, units) —
+    and the simulator's ``_events`` view is the kernel heap itself.  The
+    trailing ``units`` field is ``()`` unless a fleet driver opted into
+    unit tracking (``Lane.track_units``, core/elastic.py)."""
     r = Request("sd3", 512)
     prof = Profiler(C.get("sd3"))
     sched = TridentScheduler(prof, SimConfig(), [r])
@@ -94,9 +96,10 @@ def test_completion_events_use_the_unified_kernel_format():
     assert len(sim._events) == 3
     assert sim._events is sim.clock.completions
     for ev in sim._events:
-        assert len(ev) == 7
-        fin, seq, lane, stage, ptype, dur, members = ev
+        assert len(ev) == 8
+        fin, seq, lane, stage, ptype, dur, members, units = ev
         assert lane == "sd3" and members == (r,) and dur >= 0.0
+        assert units == ()   # zero-overhead default: no unit tracking
 
 
 # -- Orchestrator.generate / maybe_replace infeasibility contract -------------

@@ -248,3 +248,87 @@ def test_scale_trace_is_deterministic_and_aliased():
     # arrivals are sorted — the fleet clock requires a time-ordered trace
     arr = [r.arrival for r in t1]
     assert arr == sorted(arr)
+
+
+# -- elastic capacity events under the fast paths (ISSUE 10 satellites) -------
+
+def _elastic_fleet(seed, **kw):
+    sched = workloads.preemption_storm_schedule(240.0, 64, seed=0,
+                                                n_storms=1)
+    cfg = FleetConfig(num_chips=64, t_win=80.0, cooldown=60.0, elastic=True,
+                      elastic_schedule=sched, **kw)
+    return run_fleet(["sd3", "flux"], mode="adaptive", duration=240.0,
+                     cfg=cfg, seed=seed, rates={"sd3": 5.0, "flux": 1.0})
+
+
+def test_lane_gating_sees_capacity_events():
+    """Satellite fix: capacity and lending events mutate a lane with no
+    completion to show for it — ``step_changed_lanes_only`` must treat
+    them as dirty (``mark_lane_dirty``) or the gated run diverges on
+    exactly the storm wake-ups this fleet exists to handle."""
+    a = _elastic_fleet(0)
+    d = _elastic_fleet(0, step_changed_lanes_only=True)
+    assert d.n_requests == a.n_requests
+    assert d.n_finished == a.n_finished
+    assert d.nodes_lost == a.nodes_lost > 0
+    assert d.nodes_joined == a.nodes_joined > 0
+    assert d.requeued_requests == a.requeued_requests
+    assert d.drained_units == a.drained_units
+    assert d.final_chips == a.final_chips
+    assert d.slo_attainment == pytest.approx(a.slo_attainment, abs=0.02)
+
+
+def test_array_state_elastic_bit_exact():
+    a = dataclasses.asdict(_elastic_fleet(0))
+    b = dataclasses.asdict(_elastic_fleet(0, array_state=True))
+    assert a == b
+
+
+# -- PendingSet: randomized plain-vs-array parity -----------------------------
+
+def test_pending_set_array_parity_randomized():
+    """Drive both PendingSet representations through the same random op
+    stream — adds (with deadline ties), removes, re-adds of live members
+    (must keep their slot), discards of absent requests — and demand the
+    deadline-sorted views, iteration order, and membership answers stay
+    identical.  Removal-heavy stretches force the array path's tombstone
+    compaction."""
+    from types import SimpleNamespace
+
+    from repro.core.clock import PendingSet
+
+    rng = random.Random(0xE1A5)
+    for _ in range(12):
+        plain, arr = PendingSet(), PendingSet(array_state=True)
+        live, rid = [], 0
+        for _ in range(rng.randint(40, 140)):
+            op = rng.random()
+            if op < 0.5 or not live:
+                r = SimpleNamespace(rid=rid,
+                                    deadline=float(rng.randint(0, 9)))
+                rid += 1
+                plain.add(r)
+                arr.add(r)
+                live.append(r)
+            elif op < 0.8:
+                r = live.pop(rng.randrange(len(live)))
+                plain.remove(r)
+                arr.remove(r)
+            elif op < 0.9:
+                r = rng.choice(live)     # re-add keeps the slot
+                plain.add(r)
+                arr.add(r)
+            else:
+                ghost = SimpleNamespace(rid=10 ** 6 + rid, deadline=0.0)
+                plain.discard(ghost)
+                arr.discard(ghost)
+            assert len(plain) == len(arr) == len(live)
+            assert bool(plain) == bool(arr)
+            cap = rng.choice((None, 1, 3, 8))
+            assert [r.rid for r in plain.by_deadline(cap)] \
+                == [r.rid for r in arr.by_deadline(cap)]
+            assert [r.rid for r in plain] == [r.rid for r in arr]
+            probe = rng.choice(live) if live else \
+                SimpleNamespace(rid=-1, deadline=0.0)
+            assert (probe in plain) == (probe in arr)
+            assert plain.has_rid(probe.rid) == arr.has_rid(probe.rid)
